@@ -1,0 +1,81 @@
+"""Aggregate artifacts/dryrun/*.json into the EXPERIMENTS.md roofline and
+dry-run tables (markdown on stdout)."""
+
+import glob
+import json
+import sys
+
+
+def load(out_dir="artifacts/dryrun"):
+    recs = []
+    for f in sorted(glob.glob(f"{out_dir}/*.json")):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def dryrun_table(recs):
+    print("| arch | shape | mesh | compile | peak GB/dev | coll GB/chip | "
+          "AG/AR/RS/A2A/CP |")
+    print("|---|---|---|---|---|---|---|")
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        c = r["collectives"]["op_counts"]
+        ops = "/".join(str(c.get(k, 0)) for k in
+                       ("all-gather", "all-reduce", "reduce-scatter",
+                        "all-to-all", "collective-permute"))
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+              f"{r['compile_s']:.0f}s | {r['memory']['peak_device_gb']:.2f} | "
+              f"{r['collectives']['per_chip_gb']:.2f} | {ops} |")
+
+
+def roofline_table(recs):
+    from repro.analysis import roofline as rl
+    from repro.configs import SHAPES, get_config
+    print("| arch | shape | compute | memory | collective | bound | "
+          "step ≥ | MODEL_TFLOP | useful/HLO |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        if r["mesh"] != "16x16" or "roofline" not in r:
+            continue
+        rf = r["roofline"]
+        # recompute MODEL_FLOPS from the current analytic model
+        mf = rl.model_flops(get_config(r["arch"]), SHAPES[r["shape"]])
+        hlo = r["probe"]["per_chip_flops"] * r["devices"]
+        ratio = mf / hlo if hlo else 0.0
+        r["useful_flops_ratio"] = ratio
+        print(f"| {r['arch']} | {r['shape']} | {fmt_s(rf['compute_s'])} | "
+              f"{fmt_s(rf['memory_s'])} | {fmt_s(rf['collective_s'])} | "
+              f"{rf['bound']} | {fmt_s(rf['step_s_lower_bound'])} | "
+              f"{mf / 1e12:.1f} | {ratio:.2f} |")
+
+
+def pick_hillclimb(recs):
+    """worst useful-ratio, most collective-bound, most paper-representative."""
+    single = [r for r in recs if r["mesh"] == "16x16" and "roofline" in r]
+    if not single:
+        return
+    worst = min(single, key=lambda r: r.get("useful_flops_ratio", 1))
+    coll = max(single, key=lambda r: (r["roofline"]["collective_s"]
+                                      / max(r["roofline"]["step_s_lower_bound"], 1e-12)))
+    print("\nsuggested hillclimb cells:")
+    print("  worst useful ratio :", worst["arch"], worst["shape"],
+          f"({worst['useful_flops_ratio']:.3f})")
+    print("  most coll-bound    :", coll["arch"], coll["shape"],
+          f"(coll {fmt_s(coll['roofline']['collective_s'])})")
+
+
+if __name__ == "__main__":
+    recs = load(sys.argv[1] if len(sys.argv) > 1 else "artifacts/dryrun")
+    print(f"## Dry-run ({len(recs)} cells)\n")
+    dryrun_table(recs)
+    print("\n## Roofline (single-pod 16x16)\n")
+    roofline_table(recs)
+    pick_hillclimb(recs)

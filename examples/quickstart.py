@@ -1,0 +1,42 @@
+"""Quickstart: train a tiny LM for a few steps, then generate from it.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.serve import Engine, GenConfig
+from repro.train import OptConfig, data, init_opt_state, make_train_step
+
+
+def main():
+    cfg = get_config("granite-8b").smoke()     # reduced llama-style config
+    print(f"arch={cfg.name} (smoke) params={cfg.param_count() / 1e6:.1f}M-scale rules")
+
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    opt_state = init_opt_state(params)
+    step = jax.jit(make_train_step(cfg, OptConfig(lr=3e-3, warmup_steps=5,
+                                                  total_steps=100),
+                                   num_microbatches=2, loss_chunk=16))
+
+    pipe = data.make_pipeline(cfg, type("S", (), {"seq_len": 64,
+                                                  "global_batch": 8})())
+    for i in range(20):
+        batch = {k: jnp.asarray(v) for k, v in next(pipe).items()}
+        params, opt_state, m = step(params, opt_state, batch)
+        if (i + 1) % 5 == 0:
+            print(f"step {i + 1:3d}  loss {float(m['loss']):.4f}  "
+                  f"lr {float(m['lr']):.2e}  gnorm {float(m['grad_norm']):.2f}")
+
+    engine = Engine(cfg, params, max_len=96)
+    prompt = jnp.asarray(next(pipe)["tokens"][:1, :32])
+    out, _ = engine.generate({"tokens": prompt}, GenConfig(max_new_tokens=16))
+    print("prompt :", prompt[0, -8:].tolist())
+    print("genned :", out[0, 32:].tolist())
+
+
+if __name__ == "__main__":
+    main()

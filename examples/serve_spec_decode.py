@@ -1,0 +1,51 @@
+"""Serving demo: batched generation + prompt-lookup speculative decoding
+(the paper's content-searchable memory providing the draft) + CPM sampling.
+
+    PYTHONPATH=src python examples/serve_spec_decode.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.serve import Engine, GenConfig
+
+
+def main():
+    cfg = get_config("recurrentgemma-9b").smoke()    # hybrid: RG-LRU + local attn
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    engine = Engine(cfg, params, max_len=256)
+
+    # a repetitive prompt so n-gram lookup has something to find
+    base = jnp.asarray([[11, 12, 13, 14, 15, 16, 11, 12, 13, 14, 15, 16,
+                         11, 12, 13, 14, 15, 16, 11, 12, 13, 14, 15, 16]],
+                       jnp.int32)
+
+    t0 = time.time()
+    plain, _ = engine.generate({"tokens": base}, GenConfig(max_new_tokens=24))
+    t_plain = time.time() - t0
+
+    t0 = time.time()
+    spec, stats = engine.generate({"tokens": base},
+                                  GenConfig(max_new_tokens=24, ngram_spec=4))
+    t_spec = time.time() - t0
+
+    assert np.array_equal(np.asarray(plain), np.asarray(spec)), \
+        "speculation must not change greedy output"
+    print("greedy == speculative:", True)
+    print(f"plain  : {t_plain:.2f}s")
+    print(f"spec   : {t_spec:.2f}s  accepted {stats['accepted']}/{stats['proposed']}"
+          f" draft tokens")
+    print("sampled continuation (top-p):")
+    out, _ = engine.generate({"tokens": base},
+                             GenConfig(max_new_tokens=12, temperature=0.8,
+                                       top_p=0.9))
+    print(" ", np.asarray(out)[0, -12:].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Fault-tolerance demo: train, simulate a crash, resume from the latest
+atomic checkpoint, verify the stream is bit-identical.
+
+    PYTHONPATH=src python examples/train_resume.py
+"""
+
+import shutil
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.train import (OptConfig, data, fault_tolerance as ft,
+                         init_opt_state, make_train_step)
+
+
+def main():
+    cfg = get_config("granite-moe-1b-a400m").smoke()     # MoE smoke
+    opt_cfg = OptConfig(lr=1e-3, warmup_steps=2, total_steps=20)
+    step = jax.jit(make_train_step(cfg, opt_cfg, loss_chunk=16))
+
+    def init_fn():
+        p = lm.init_params(cfg, jax.random.PRNGKey(0))
+        return {"params": p, "opt": init_opt_state(p)}
+
+    def step_fn(state, batch):
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        p, o, m = step(state["params"], state["opt"], batch)
+        return {"params": p, "opt": o}, m
+
+    shape = type("S", (), {"seq_len": 32, "global_batch": 4})()
+    ckpt = tempfile.mkdtemp(prefix="repro_ckpt_")
+    fcfg = ft.FaultConfig(ckpt_dir=ckpt, ckpt_every=4)
+
+    print("reference: 8 uninterrupted steps ...")
+    pipe = data.make_pipeline(cfg, shape)
+    ref_state = init_fn()
+    for s in range(8):
+        ref_state, _ = step_fn(ref_state, next(pipe))
+    ref = ref_state["params"]
+
+    print("phase 1: train 6 steps (checkpoint every 4), then crash ...")
+    pipe = data.make_pipeline(cfg, shape)
+    state, _ = ft.run_loop(fcfg, init_fn(), step_fn, pipe, 0, 6,
+                           on_metrics=lambda s, m: print(
+                               f"  step {s} loss {float(m['loss']):.4f}"))
+
+    print("phase 2: CRASH (state dropped). resuming from checkpoint ...")
+    state2, extra, start = ft.resume_or_init(fcfg, init_fn)
+    print(f"  resumed at step {start}")
+    pipe2 = data.make_pipeline(cfg, shape)
+    pipe2.restore(extra["data"])
+    state2, _ = ft.run_loop(fcfg, state2, step_fn, pipe2, start, 8,
+                            on_metrics=lambda s, m: print(
+                                f"  step {s} loss {float(m['loss']):.4f}"))
+
+    same = all(np.array_equal(np.asarray(a), np.asarray(b)) for a, b in zip(
+        jax.tree.leaves(ref), jax.tree.leaves(state2["params"])))
+    print("resumed run identical to uninterrupted run:", same)
+    shutil.rmtree(ckpt, ignore_errors=True)
+    assert same
+
+
+if __name__ == "__main__":
+    main()

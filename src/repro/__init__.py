@@ -1,0 +1,4 @@
+"""repro — Concurrent Processing Memory (Wang, 2006) as a production
+TPU-native JAX training/serving framework.  See README.md / DESIGN.md."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,36 @@
+"""repro.core — the paper's contribution: CPM as a JAX operator library.
+
+Four memory types (movable / searchable / comparable / computable) plus the
+Rule-4 activation decoder, Rule-6 match reductions, and the pod-scale
+collective embodiment.
+"""
+
+from . import collectives, comparable, computable, movable, pe_array, searchable
+from .pe_array import (activation_mask, any_match, count_matches,
+                       enumerate_matches, first_match, general_decoder)
+from .movable import compact, delete, insert, move_object, shift_range
+from .searchable import find_all, ngram_lookup, substring_match, verify_draft
+from .comparable import compare, histogram, lex_compare_lt, quantile_threshold, topk_mask
+from .computable import (count_disorder, detect_defects, hybrid_sort,
+                         odd_even_sort, odd_even_step, optimal_section,
+                         section_limit, section_sum, section_sum_2d,
+                         stencil_1d, stencil_2d, template_match_1d,
+                         template_match_2d)
+from .collectives import (distributed_section_sum, grad_sync,
+                          hierarchical_psum, ring_allreduce, ring_shift,
+                          tree_allreduce)
+
+__all__ = [
+    "activation_mask", "general_decoder", "count_matches", "any_match",
+    "first_match", "enumerate_matches",
+    "shift_range", "insert", "delete", "compact", "move_object",
+    "substring_match", "find_all", "verify_draft", "ngram_lookup",
+    "compare", "lex_compare_lt", "histogram", "quantile_threshold", "topk_mask",
+    "section_sum", "section_sum_2d", "section_limit", "optimal_section",
+    "stencil_1d", "stencil_2d", "odd_even_step", "odd_even_sort",
+    "hybrid_sort", "count_disorder", "detect_defects",
+    "template_match_1d", "template_match_2d",
+    "ring_shift", "ring_allreduce", "tree_allreduce", "hierarchical_psum",
+    "grad_sync", "distributed_section_sum",
+    "collectives", "comparable", "computable", "movable", "pe_array", "searchable",
+]

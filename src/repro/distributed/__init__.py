@@ -1,0 +1,5 @@
+from .sharding import (ShardingCtx, act_spec, current_ctx, param_specs,
+                       set_sharding_ctx, shard, use_sharding)
+
+__all__ = ["ShardingCtx", "set_sharding_ctx", "use_sharding", "current_ctx",
+           "shard", "act_spec", "param_specs"]

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+flash_attention.py — blocked online-softmax attention (BlockSpec VMEM
+tiling, GQA via kv index maps); cpm_kernels.py — the paper's in-memory
+algorithms at chip scale (odd-even sort, two-phase section sum, template
+match, substring match, stencil).  ops.py dispatches between the TPU
+lowering, interpret-mode validation, and the pure-jnp oracles in ref.py.
+"""
+
+from . import cpm_kernels, flash_attention, ops, ref
+
+__all__ = ["cpm_kernels", "flash_attention", "ops", "ref"]

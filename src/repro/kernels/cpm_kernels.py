@@ -1,0 +1,201 @@
+"""Pallas TPU kernels for the paper's in-memory algorithms.
+
+Chip-scale CPM: the VMEM block is the PE array (VREG lanes = PEs), the
+kernel body is the broadcast instruction stream (Rule 5), intra-block shifts
+are neighbor reads (Rule 7).
+
+Kernels:
+  * ``oddeven_sort``    — §7.7 local-exchange sort, N compare-exchange cycles
+                          entirely in VMEM (used by MoE routing).
+  * ``section_sum``     — §7.4 two-phase reduction: concurrent per-section
+                          sums (phase 1, one grid step per section batch)
+                          accumulated across the grid (phase 2).
+  * ``template_match``  — §7.6 sliding SAD, ~M shift-accumulate cycles.
+  * ``substring_match`` — §5 streaming needle match with neighbor carry.
+  * ``stencil``         — §7.3 tap algebra, ~M shift-multiply-accumulate.
+
+All take ``interpret=`` so the CPU container executes the kernel bodies for
+validation; on TPU pass interpret=False.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+# ---------------------------------------------------------------------------
+# §7.7 odd-even transposition sort (row-wise)
+# ---------------------------------------------------------------------------
+
+def _oddeven_kernel(x_ref, o_ref, *, n: int, steps: int):
+    idx = jax.lax.broadcasted_iota(jnp.int32, (1, n), 1)
+
+    def body(i, x):
+        is_left = (idx % 2) == (i % 2)
+        partner = jnp.clip(jnp.where(is_left, idx + 1, idx - 1), 0, n - 1)
+        px = jnp.take_along_axis(x, partner, axis=1)
+        out = jnp.where(is_left, jnp.minimum(x, px), jnp.maximum(x, px))
+        solo = (partner == idx) | (is_left & (idx == n - 1))
+        return jnp.where(solo, x, out)
+
+    o_ref[...] = jax.lax.fori_loop(0, steps, body, x_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("steps", "interpret"))
+def oddeven_sort(x: jax.Array, steps: int | None = None, *,
+                 interpret: bool = True) -> jax.Array:
+    """Row-wise ascending sort of (R, N): N odd-even cycles in VMEM."""
+    r, n = x.shape
+    steps = n if steps is None else steps
+    return pl.pallas_call(
+        functools.partial(_oddeven_kernel, n=n, steps=steps),
+        grid=(r,),
+        in_specs=[pl.BlockSpec((1, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, n), x.dtype),
+        interpret=interpret,
+    )(x)
+
+
+# ---------------------------------------------------------------------------
+# §7.4 two-phase sectioned sum
+# ---------------------------------------------------------------------------
+
+def _section_sum_kernel(x_ref, o_ref, acc_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # phase 1: concurrent in-section reduction of this VMEM block
+    acc_ref[...] += jnp.sum(x_ref[...].astype(jnp.float32), axis=-1,
+                            keepdims=True)
+
+    # phase 2: the running accumulator marches across sections (grid order)
+    @pl.when(i == pl.num_programs(0) - 1)
+    def _():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("section", "interpret"))
+def section_sum(x: jax.Array, section: int = 1024, *,
+                interpret: bool = True) -> jax.Array:
+    """Two-phase global sum of a 1-D array; section = VMEM block size."""
+    n = x.shape[-1]
+    pad = (-n) % section
+    if pad:
+        x = jnp.pad(x, (0, pad))
+    xs = x.reshape(1, -1)
+    nsec = xs.shape[-1] // section
+    out = pl.pallas_call(
+        _section_sum_kernel,
+        grid=(nsec,),
+        in_specs=[pl.BlockSpec((1, section), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, 1), jnp.float32)],
+        interpret=interpret,
+    )(xs)
+    return out[0, 0].astype(jnp.promote_types(x.dtype, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# §7.6 template match (row-wise sliding SAD)
+# ---------------------------------------------------------------------------
+
+def _template_kernel(x_ref, t_ref, o_ref, *, m: int):
+    x = x_ref[...].astype(jnp.float32)
+
+    def body(j, acc):
+        shifted = jnp.roll(x, -j, axis=-1)
+        return acc + jnp.abs(shifted - t_ref[0, j].astype(jnp.float32))
+
+    o_ref[...] = jax.lax.fori_loop(0, m, body, jnp.zeros_like(x))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def template_match(data: jax.Array, template: jax.Array, *,
+                   interpret: bool = True) -> jax.Array:
+    """(R, N) x (M,) -> (R, N) SAD at every start position (wrapping tail)."""
+    r, n = data.shape
+    m = template.shape[-1]
+    return pl.pallas_call(
+        functools.partial(_template_kernel, m=m),
+        grid=(r,),
+        in_specs=[pl.BlockSpec((1, n), lambda i: (i, 0)),
+                  pl.BlockSpec((1, m), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((1, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, n), jnp.float32),
+        interpret=interpret,
+    )(data, template.reshape(1, -1))
+
+
+# ---------------------------------------------------------------------------
+# §5 substring match (row-wise, match-end semantics)
+# ---------------------------------------------------------------------------
+
+def _substring_kernel(x_ref, nee_ref, o_ref, *, m: int, n: int):
+    x = x_ref[...]
+    first = jax.lax.broadcasted_iota(jnp.int32, (1, n), 1) == 0
+
+    def body(i, state):
+        hit = (x == nee_ref[0, i]).astype(jnp.int32)
+        shifted = jnp.where(first, 0, jnp.roll(state, 1, axis=-1))
+        return jnp.where(i == 0, hit, hit * shifted)
+
+    init = jnp.zeros((1, n), jnp.int32)
+    o_ref[...] = jax.lax.fori_loop(0, m, body, init).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def substring_match(hay: jax.Array, needle: jax.Array, *,
+                    interpret: bool = True) -> jax.Array:
+    """(R, N) int rows x (M,) needle -> (R, N) int8 match-end flags."""
+    r, n = hay.shape
+    m = needle.shape[-1]
+    return pl.pallas_call(
+        functools.partial(_substring_kernel, m=m, n=n),
+        grid=(r,),
+        in_specs=[pl.BlockSpec((1, n), lambda i: (i, 0)),
+                  pl.BlockSpec((1, m), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((1, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, n), jnp.int8),
+        interpret=interpret,
+    )(hay, needle.reshape(1, -1))
+
+
+# ---------------------------------------------------------------------------
+# §7.3 stencil (row-wise tap accumulation)
+# ---------------------------------------------------------------------------
+
+def _stencil_kernel(x_ref, o_ref, *, taps: tuple[float, ...]):
+    x = x_ref[...].astype(jnp.float32)
+    c = len(taps) // 2
+    acc = jnp.zeros_like(x)
+    for k, w in enumerate(taps):        # unrolled ~M shift-mul-add cycles
+        if w == 0:
+            continue
+        acc = acc + w * jnp.roll(x, k - c, axis=-1)
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("taps", "interpret"))
+def stencil(x: jax.Array, taps: tuple[float, ...], *,
+            interpret: bool = True) -> jax.Array:
+    """(R, N) rows filtered by an odd-length tap vector (wrapping ends)."""
+    r, n = x.shape
+    return pl.pallas_call(
+        functools.partial(_stencil_kernel, taps=taps),
+        grid=(r,),
+        in_specs=[pl.BlockSpec((1, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, n), jnp.float32),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,173 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are also the implementations the models use on CPU (and in the
+dry-run): ``flash_attention_ref`` is the memory-efficient chunked
+online-softmax attention (lax.scan over kv chunks — same dataflow the TPU
+kernel tiles into VMEM), so compiled FLOP/byte counts in the roofline match
+the kernel schedule rather than a naive O(S²)-materialized softmax.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def attention_naive(q, k, v, *, causal=True, window=None):
+    """O(S²)-materialized softmax attention — oracle for small shapes.
+
+    q: (B, H, Sq, D); k, v: (B, KVH, Skv, D).
+    """
+    b, h, sq, d = q.shape
+    kvh, skv = k.shape[1], k.shape[2]
+    group = h // kvh
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * (d ** -0.5)
+    rows = jnp.arange(sq)[:, None] + (skv - sq)   # align ends (decode-style)
+    cols = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        mask &= cols <= rows
+    if window is not None:
+        mask &= cols > rows - window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32)).astype(q.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, block_k=512):
+    """Chunked online-softmax attention (the kernel's dataflow in pure jnp).
+
+    Memory: O(Sq · block_k) scores instead of O(Sq · Skv).  Differentiable;
+    used for 32k prefill in the dry-run.
+
+    GQA is handled by broadcasting kv up to the full head count *before* the
+    einsums: the head axis then shards cleanly over the "model" mesh axis
+    under GSPMD (kv heads rarely divide the TP degree).  The broadcast is a
+    zero-copy view until the einsum consumes it.
+    """
+    b, h, sq, d = q.shape
+    kvh, skv = k.shape[1], k.shape[2]
+    group = h // kvh
+    block_k = min(block_k, skv)
+    assert skv % block_k == 0
+    nk = skv // block_k
+    scale = d ** -0.5
+    # streams stay in the input dtype (bf16 in production): every tensor
+    # that crosses a sharding boundary is narrow; f32 appears only in the
+    # block-local softmax statistics and the output accumulator — the same
+    # precision contract as the Pallas kernel's VMEM accumulation.
+    ct = q.dtype
+    qf = q * jnp.asarray(scale, ct)
+    kf = _repeat_kv(k, group).reshape(b, h, nk, block_k, d)
+    vf = _repeat_kv(v, group).reshape(b, h, nk, block_k, d)
+    rows = jnp.arange(sq)[:, None] + (skv - sq)
+
+    def step(carry, ik):
+        m, l, acc = carry
+        kb = jax.lax.dynamic_index_in_dim(kf, ik, axis=2, keepdims=False)
+        vb = jax.lax.dynamic_index_in_dim(vf, ik, axis=2, keepdims=False)
+        s = jnp.einsum("bhqd,bhcd->bhqc", qf, kb,
+                       preferred_element_type=jnp.float32)
+        cols = ik * block_k + jnp.arange(block_k)[None, :]
+        mask = jnp.ones((sq, block_k), dtype=bool)
+        if causal:
+            mask &= cols <= rows
+        if window is not None:
+            mask &= cols > rows - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * alpha + jnp.einsum("bhqc,bhcd->bhqd", p.astype(ct), vb,
+                                       preferred_element_type=jnp.float32)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, h, sq, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, sq, 1), jnp.float32)
+    a0 = jnp.zeros((b, h, sq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), jnp.arange(nk))
+    out = acc / jnp.maximum(l, 1e-30)
+    return out.astype(q.dtype)
+
+
+def _repeat_kv(x, group: int):
+    if group == 1:
+        return x
+    b, kvh, s, d = x.shape
+    return jnp.broadcast_to(x[:, :, None], (b, kvh, group, s, d)
+                            ).reshape(b, kvh * group, s, d)
+
+
+def decode_attention_ref(q, k, v, cache_len=None, *, window=None):
+    """Single-step decode attention: q (B, H, 1, D) against a (B, KVH, S, D)
+    cache; positions >= cache_len are masked.  Linear in cache size.
+
+    Grouped (no kv repeat — the cache is the dominant HBM tenant at decode;
+    the slot axis shards over "model" instead of heads).  Cache may be
+    stored quantized (e.g. float8_e4m3fn): it is widened to the compute
+    dtype blockwise by the einsum, accumulating in f32.
+    """
+    b, h, _, d = q.shape
+    kvh, skv = k.shape[1], k.shape[2]
+    group = h // kvh
+    ct = jnp.float32 if q.dtype == jnp.float32 else jnp.bfloat16
+    qf = (q[:, :, 0].reshape(b, kvh, group, d) * (d ** -0.5)).astype(ct)
+    kk = k.astype(ct)
+    vv = v.astype(ct)
+    s = jnp.einsum("bkgd,bksd->bkgs", qf, kk,
+                   preferred_element_type=jnp.float32)
+    if cache_len is not None:
+        pos = jnp.arange(skv)[None, None, None, :]
+        live = pos < cache_len if jnp.ndim(cache_len) == 0 else \
+            pos < cache_len[:, None, None, None]
+        if window is not None:
+            lo = (cache_len if jnp.ndim(cache_len) == 0
+                  else cache_len[:, None, None, None])
+            live &= pos >= lo - window
+        s = jnp.where(live, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bksd->bkgd", p.astype(ct), vv,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, h, 1, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# CPM kernels
+# ---------------------------------------------------------------------------
+
+def oddeven_sort_ref(x):
+    """Row-wise ascending sort (oracle = jnp.sort)."""
+    return jnp.sort(x, axis=-1)
+
+
+def section_sum_ref(x, section=None):
+    from repro.core.computable import section_sum
+    return section_sum(x, section)
+
+
+def template_match_ref(data, template):
+    from repro.core.computable import template_match_1d
+    return template_match_1d(data, template)
+
+
+def substring_match_ref(hay, needle):
+    from repro.core.searchable import substring_match
+    return substring_match(hay, needle)
+
+
+def stencil_ref(x, taps):
+    from repro.core.computable import stencil_1d
+    return stencil_1d(x, taps)

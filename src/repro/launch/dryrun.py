@@ -1,0 +1,291 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch × shape) cell on the
+production meshes and extract roofline inputs.
+
+The two lines above MUST precede any jax import: jax locks the device count
+at first init, and only this entry point should see 512 host devices.
+
+Per cell:
+  1. full compile on the requested mesh -> proof of shardability +
+     memory_analysis + optimized HLO collective schedule;
+  2. (single-pod, --probe) 1-unit and 2-unit unrolled compiles ->
+     per-chip FLOPs/bytes by linear extrapolation (cost_analysis visits
+     while bodies once, so the full program can't be costed directly);
+  3. roofline terms + MODEL_FLOPS ratio -> JSON record.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out-dir artifacts/dryrun
+"""
+
+import argparse
+import dataclasses
+import functools
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.analysis import roofline
+from repro.configs import SHAPES, all_configs, get_config, runnable_cells
+from repro.distributed import sharding as shlib
+from repro.launch import specs as speclib
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+from repro.train import OptConfig, train_step as ts
+
+TRAIN_MICROBATCHES = int(os.environ.get("REPRO_MICROBATCHES", "8"))
+GRAD_SYNC = os.environ.get("REPRO_GRAD_SYNC", "per_mb")
+LOSS_CHUNK = 1024
+
+
+# ---------------------------------------------------------------------------
+# shardings
+# ---------------------------------------------------------------------------
+
+def _batch_spec(name: str, shape: tuple, ctx) -> P:
+    dp = ctx.dp
+    if name == "pos_ids":                       # (3, B, S)
+        spec = (None, dp, None)
+    else:                                       # (B, ...) batch-major
+        spec = (dp,) + (None,) * (len(shape) - 1)
+    fixed = [a if a is None or shape[i] % ctx.axis_size(a) == 0 else None
+             for i, a in enumerate(spec)]
+    return P(*fixed)
+
+
+_CACHE_RULES = {
+    "k": ("b", "heads", None, None), "v": ("b", "heads", None, None),
+    "C": ("b", "heads", None, None), "n": ("b", "heads", None),
+    "h": ("b", "width"), "conv_buf": ("b", None, "width"),
+    "c": ("b", "heads", None), "m": ("b", "heads", None),
+    "len": (),
+}
+
+
+def _cache_spec(name: str, shape: tuple, ctx) -> P:
+    """Cache leaves may carry a leading stacked-layer dim — rules are
+    right-aligned.  kv heads shard over "model" when they divide it;
+    otherwise the sequence (slot) axis does (flash-decoding style split-KV,
+    XLA handles the sharded softmax reduction)."""
+    rule = _CACHE_RULES.get(name)
+    if rule is None:
+        rule = ("b",) + (None,) * (len(shape) - 1)
+    rule = (None,) * (len(shape) - len(rule)) + tuple(rule)
+
+    def ax(r, dim):
+        cands = {"b": [ctx.dp], "heads": [ctx.model_axis],
+                 "seq": [ctx.model_axis], "width": [ctx.model_axis]}.get(r, [r])
+        for a in cands:
+            if a is None or dim % ctx.axis_size(a) == 0:
+                return a
+        return None
+
+    fixed = [ax(r, shape[i]) for i, r in enumerate(rule)]
+    # kv cache: if the head axis could not shard, shard the slot axis instead
+    if name in ("k", "v") and len(shape) >= 4:
+        hpos, spos = len(shape) - 3, len(shape) - 2
+        if fixed[hpos] is None and shape[spos] % ctx.axis_size(ctx.model_axis) == 0:
+            fixed[spos] = ctx.model_axis
+    return P(*fixed)
+
+
+def _tree_shardings(tree, spec_fn, ctx, mesh):
+    def walk(node, name=""):
+        if isinstance(node, dict):
+            return {k: walk(v, k) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            t = [walk(x, name) for x in node]
+            return type(node)(t)
+        return NamedSharding(mesh, spec_fn(name, tuple(node.shape), ctx))
+    return walk(tree)
+
+
+def build_cell(arch: str, shape_name: str, mesh, probe_units: int = 0):
+    """Returns (jitted_fn, example_args, cfg_used).
+
+    Probe builds (1- and 2-unit configs) unroll every loop whose body
+    cost_analysis would otherwise count once: layers (model unroll path),
+    microbatches (forced to 1).  The loss-chunk scan remains (<=3% of
+    step FLOPs, noted in EXPERIMENTS.md)."""
+    cfg = get_config(arch)
+    microbatches = TRAIN_MICROBATCHES
+    if probe_units:
+        unit = tuple(cfg.pattern)
+        cfg = dataclasses.replace(
+            cfg, n_layers=len(unit) * probe_units,
+            n_enc_layers=min(cfg.n_enc_layers, probe_units))
+        microbatches = 1
+    shape = SHAPES[shape_name]
+    # inference: weights replicated over dp (each DP replica serves whole
+    # model, TP over "model" only) — no per-step FSDP gathers
+    ctx = shlib.make_ctx(mesh, fsdp=(shape.kind == "train"),
+                         pure_dp=bool(int(os.environ.get("REPRO_PURE_DP", "0")))
+                         and shape.kind == "train")
+    shlib.set_sharding_ctx(ctx)
+    specs = speclib.input_specs(cfg, shape_name)
+
+    params_sh = shlib.named_shardings(shlib.param_specs(specs["params"], ctx), mesh)
+    repl = NamedSharding(mesh, P())
+
+    if shape.kind == "train":
+        opt_sh = {"mu": params_sh, "nu": params_sh, "step": repl}
+        batch_sh = _tree_shardings(specs["batch"], _batch_spec, ctx, mesh)
+        step = ts.make_train_step(cfg, OptConfig(), microbatches,
+                                  remat=True, loss_chunk=LOSS_CHUNK)
+        jitted = jax.jit(step, in_shardings=(params_sh, opt_sh, batch_sh),
+                         donate_argnums=(0, 1))
+        args = (specs["params"], specs["opt_state"], specs["batch"])
+    elif shape.kind == "prefill":
+        batch_sh = _tree_shardings(specs["batch"], _batch_spec, ctx, mesh)
+        fn = functools.partial(lm.prefill, cfg=cfg, max_len=shape.seq_len)
+        step = lambda params, batch: fn(params, batch=batch)
+        out_shape = jax.eval_shape(step, specs["params"], specs["batch"])
+        logits_sh = NamedSharding(mesh, _cache_spec("logits", out_shape[0].shape, ctx))
+        caches_out_sh = _tree_shardings(out_shape[1], _cache_spec, ctx, mesh)
+        jitted = jax.jit(step, in_shardings=(params_sh, batch_sh),
+                         out_shardings=(logits_sh, caches_out_sh))
+        args = (specs["params"], specs["batch"])
+    else:                                       # decode
+        cache_sh = _tree_shardings(specs["caches"], _cache_spec, ctx, mesh)
+        tok_sh = NamedSharding(mesh, _batch_spec("tokens", specs["tokens_t"].shape, ctx))
+        fn = functools.partial(lm.decode_step, cfg=cfg)
+        step = lambda params, tokens_t, caches, pos: fn(
+            params, tokens_t=tokens_t, caches=caches, pos=pos)
+        out_shape = jax.eval_shape(step, specs["params"], specs["tokens_t"],
+                                   specs["caches"], specs["pos"])
+        logits_sh = NamedSharding(mesh, _cache_spec("logits", out_shape[0].shape, ctx))
+        jitted = jax.jit(step, in_shardings=(params_sh, tok_sh, cache_sh, repl),
+                         out_shardings=(logits_sh, cache_sh),
+                         donate_argnums=(2,))
+        args = (specs["params"], specs["tokens_t"], specs["caches"], specs["pos"])
+    return jitted, args, cfg
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, probe: bool = True,
+             save_hlo: str | None = None) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16", "devices": n_dev}
+
+    t0 = time.time()
+    jitted, args, cfg = build_cell(arch, shape_name, mesh)
+    lowered = jitted.lower(*args)
+    rec["lower_s"] = round(time.time() - t0, 1)
+    t0 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t0, 1)
+
+    mem = compiled.memory_analysis()
+    rec["memory"] = {
+        "argument_gb": mem.argument_size_in_bytes / 2**30,
+        "output_gb": mem.output_size_in_bytes / 2**30,
+        "temp_gb": mem.temp_size_in_bytes / 2**30,
+        "alias_gb": mem.alias_size_in_bytes / 2**30,
+        "peak_device_gb": (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                           + mem.output_size_in_bytes - mem.alias_size_in_bytes)
+        / 2**30,
+    }
+    hlo = compiled.as_text()
+    coll = roofline.parse_hlo(hlo, n_dev)
+    rec["collectives"] = {"per_chip_gb": coll.per_chip_bytes / 2**30,
+                          "by_kind_gb": {k: v / 2**30 for k, v in coll.by_kind.items()},
+                          "op_counts": dict(coll.op_counts)}
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(hlo)
+    del compiled, lowered, hlo
+
+    if probe and not multi_pod:
+        costs = {}
+        for n in (1, 2):
+            j, a, pcfg = build_cell(arch, shape_name, mesh, probe_units=n)
+            c = j.lower(*a).compile()
+            ca = c.cost_analysis()
+            costs[n] = {"flops": float(ca.get("flops", 0.0)),
+                        "bytes": float(ca.get("bytes accessed", 0.0))}
+            del c
+        unit_len = len(tuple(get_config(arch).pattern))
+        n_units = get_config(arch).n_layers / unit_len
+        unit = {k: costs[2][k] - costs[1][k] for k in ("flops", "bytes")}
+        head = {k: costs[1][k] - unit[k] for k in ("flops", "bytes")}
+        total = {k: head[k] + n_units * unit[k] for k in ("flops", "bytes")}
+        # encoder layers scale with the same probe (enc probe had 1/2 layers)
+        if get_config(arch).enc_dec:
+            enc_units = get_config(arch).n_enc_layers
+            # unit above includes one decoder unit + one encoder layer
+            rec["note"] = ("enc-dec probe: unit includes 1 enc + 1 dec layer; "
+                           f"extrapolated at {n_units} units (enc {enc_units})")
+        rec["probe"] = {"cost_1unit": costs[1], "cost_2unit": costs[2],
+                        "per_chip_flops": total["flops"],
+                        "per_chip_bytes": total["bytes"]}
+        shape = SHAPES[shape_name]
+        mf = roofline.model_flops(get_config(arch), shape)
+        hlo_flops_total = total["flops"] * n_dev
+        rec["roofline"] = roofline.roofline_terms(
+            total["flops"], total["bytes"], coll.per_chip_bytes)
+        rec["model_flops"] = mf
+        rec["hlo_flops_total"] = hlo_flops_total
+        rec["useful_flops_ratio"] = mf / hlo_flops_total if hlo_flops_total else 0.0
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-probe", action="store_true")
+    ap.add_argument("--out")
+    ap.add_argument("--out-dir", default="artifacts/dryrun")
+    ap.add_argument("--save-hlo")
+    args = ap.parse_args()
+
+    if args.all:
+        import os as _os
+        _os.makedirs(args.out_dir, exist_ok=True)
+        fails = []
+        for arch, shape in runnable_cells():
+            for mesh_kind in (["single", "multi"] if args.mesh == "both"
+                              else [args.mesh]):
+                tag = f"{arch}__{shape}__{mesh_kind}"
+                out = _os.path.join(args.out_dir, tag + ".json")
+                if _os.path.exists(out):
+                    print(f"skip {tag} (exists)")
+                    continue
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", shape, "--mesh", mesh_kind,
+                       "--out", out]
+                if args.no_probe:
+                    cmd.append("--no-probe")
+                print(f"=== {tag}", flush=True)
+                r = subprocess.run(cmd)
+                if r.returncode != 0:
+                    fails.append(tag)
+        print("FAILED CELLS:", fails if fails else "none")
+        sys.exit(1 if fails else 0)
+
+    multi = args.mesh == "multi"
+    try:
+        rec = run_cell(args.arch, args.shape, multi, probe=not args.no_probe,
+                       save_hlo=args.save_hlo)
+    except Exception:
+        traceback.print_exc()
+        sys.exit(1)
+    js = json.dumps(rec, indent=2, default=float)
+    print(js)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(js)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""ShapeDtypeStruct input specs for every (arch x shape) dry-run cell —
+weak-type-correct, shardable, zero allocation."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig
+from repro.models import layers as L
+from repro.models import lm
+from repro.train import optimizer as opt
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Training/prefill batch input specs."""
+    b, s = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    batch = {"tokens": sds((b, s), jnp.int32)}
+    if cfg.enc_dec:
+        # stub audio frontend: precomputed frame embeddings, ~s/8 frames
+        batch["src_embeds"] = sds((b, max(s // 8, 16), cfg.d_model), jnp.float32)
+    if cfg.mrope_sections is not None:
+        n_patch = min(256, s // 4)
+        batch["patch_embeds"] = sds((b, n_patch, cfg.d_model), jnp.float32)
+        batch["patch_pos"] = sds((b, n_patch), jnp.int32)
+        batch["pos_ids"] = sds((3, b, s), jnp.int32)
+    return batch
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig,
+                 kv_dtype=jnp.bfloat16) -> dict:
+    """Decode-step input specs: one new token + a seq_len KV/state cache.
+
+    ``kv_dtype=float8_e4m3fn`` models a quantized KV cache (KVQuant-style)
+    for cells whose bf16 cache exceeds per-chip HBM."""
+    b, s = shape.global_batch, shape.seq_len
+    cross = max(s // 8, 16) if cfg.enc_dec else 0
+    caches = jax.eval_shape(
+        functools.partial(lm.init_caches, cfg, b, max_len=s, cross_len=cross,
+                          dtype=kv_dtype))
+    return {
+        "tokens_t": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        "caches": caches,
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def params_specs(cfg: ModelConfig, dtype=None):
+    """Abstract params.  ``dtype=bf16`` models serving weights (no fp32
+    master copies at inference)."""
+    tree = jax.eval_shape(functools.partial(lm.init_params, cfg),
+                          jax.random.PRNGKey(0))
+    if dtype is None:
+        return tree
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype)
+        if s.dtype == jnp.float32 and len(s.shape) >= 2 else s, tree)
+
+
+def opt_specs(params_shape):
+    return jax.eval_shape(opt.init_opt_state, params_shape)
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    """All abstract inputs for the step function of this cell."""
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        params = params_specs(cfg)
+        return {"params": params, "opt_state": opt_specs(params),
+                "batch": batch_specs(cfg, shape)}
+    if shape.kind == "prefill":
+        return {"params": params_specs(cfg, jnp.bfloat16),
+                "batch": batch_specs(cfg, shape)}
+    return {"params": params_specs(cfg, jnp.bfloat16),
+            **decode_specs(cfg, SHAPES[shape_name],
+                           kv_dtype=kv_dtype_for(cfg, shape_name))}
+
+
+def kv_dtype_for(cfg: ModelConfig, shape_name: str):
+    """bf16 cache when it fits 256 chips; fp8 when it doesn't (big dense
+    decode cells — see EXPERIMENTS.md capacity notes)."""
+    shape = SHAPES[shape_name]
+    kinds = cfg.layer_kinds()
+    attn_layers = sum(k in ("attn", "attn_local") for k in kinds)
+    slots = min(cfg.window, shape.seq_len) if cfg.window else shape.seq_len
+    bytes_bf16 = (2 * attn_layers * shape.global_batch * cfg.n_kv_heads
+                  * slots * cfg.dh * 2)
+    if cfg.enc_dec:
+        bytes_bf16 *= 2
+    per_chip = bytes_bf16 / 256
+    return jnp.bfloat16 if per_chip < 8e9 else jnp.float8_e4m3fn

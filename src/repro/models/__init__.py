@@ -1,0 +1,6 @@
+from . import layers, lm
+from .lm import (decode_step, forward, init_caches, init_params, loss_fn,
+                 prefill)
+
+__all__ = ["layers", "lm", "init_params", "forward", "loss_fn", "prefill",
+           "decode_step", "init_caches"]

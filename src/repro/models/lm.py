@@ -1,0 +1,498 @@
+"""Model assembly: pattern-scan decoder LMs, the enc-dec (audio) variant and
+the VLM patch-merge variant, with train / prefill / decode entry points.
+
+Layer stacking: the repeating pattern unit (e.g. (rglru, rglru, attn_local))
+is scanned over its repeats with stacked params — one traced unit regardless
+of depth, which keeps HLO size O(unit) for the 512-device dry-run compiles.
+Remainder layers (38 = 12x3 + 2) are applied unstacked.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import compute_view, shard
+from . import layers as L
+
+Params = dict
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def init_block(cfg: ModelConfig, kind: str, key, cross: bool = False) -> Params:
+    ks = jax.random.split(key, 4)
+    p: Params = {"norm1": L.init_norm(cfg, cfg.d_model)}
+    if kind in ("attn", "attn_local"):
+        p["attn"] = L.init_attention(cfg, ks[0])
+    elif kind == "rglru":
+        p["rglru"] = L.init_rglru(cfg, ks[0])
+    elif kind == "mlstm":
+        p["mlstm"] = L.init_mlstm(cfg, ks[0])
+    elif kind == "slstm":
+        p["slstm"] = L.init_slstm(cfg, ks[0])
+    else:
+        raise ValueError(kind)
+    if cross:
+        p["norm_cross"] = L.init_norm(cfg, cfg.d_model)
+        p["cross"] = L.init_attention(cfg, ks[2], cross=True)
+    if cfg.ffn != "none" and kind not in ("mlstm", "slstm"):
+        p["norm2"] = L.init_norm(cfg, cfg.d_model)
+        p["ffn"] = L.init_moe(cfg, ks[1]) if cfg.ffn == "moe" else L.init_ffn(cfg, ks[1])
+    return p
+
+
+def block_fwd(p: Params, x, kind: str, cfg: ModelConfig, positions, *,
+              causal=True, enc_out=None, enc_positions=None, with_cache=False):
+    """Full-sequence block.  Returns (x, aux, cache)."""
+    p = compute_view(p, L.COMPUTE_DTYPE)      # FSDP: gather bf16 weights here
+    aux = jnp.zeros((), jnp.float32)
+    cache = {}
+    h = L.apply_norm(p["norm1"], x, cfg.norm_eps)
+    if kind in ("attn", "attn_local"):
+        win = cfg.window if kind == "attn_local" else None
+        out = L.attention_fwd(p["attn"], h, cfg, positions, causal=causal,
+                              window=win, with_cache=with_cache)
+        if with_cache:
+            out, cache = out
+            cache = {"attn": cache}
+    elif kind == "rglru":
+        out = L.rglru_fwd(p["rglru"], h, cfg, with_cache=with_cache)
+        if with_cache:
+            out, c = out
+            cache = {"rglru": c}
+    elif kind == "mlstm":
+        out = L.mlstm_fwd(p["mlstm"], h, cfg, with_cache=with_cache)
+        if with_cache:
+            out, c = out
+            cache = {"mlstm": c}
+    elif kind == "slstm":
+        out = L.slstm_fwd(p["slstm"], h, cfg, with_cache=with_cache)
+        if with_cache:
+            out, c = out
+            cache = {"slstm": c}
+    x = x + out
+    if "cross" in p:
+        h = L.apply_norm(p["norm_cross"], x, cfg.norm_eps)
+        ck, cv = _cross_kv(p["cross"], enc_out, cfg)
+        out = L.attention_fwd(p["cross"], h, cfg, positions, causal=False,
+                              kv_input=enc_out, kv_positions=enc_positions,
+                              rope=False)
+        if with_cache:
+            cache["cross_kv"] = {"k": ck, "v": cv,
+                                 "len": jnp.asarray(enc_out.shape[1], jnp.int32)}
+        x = x + out
+    if "ffn" in p:
+        h = L.apply_norm(p["norm2"], x, cfg.norm_eps)
+        if cfg.ffn == "moe":
+            out, aux = L.apply_moe(p["ffn"], h, cfg)
+        else:
+            out = L.apply_ffn(p["ffn"], h, cfg)
+        x = x + out
+    return shard(x, "btd"), aux, cache
+
+
+def _cross_kv(p: Params, enc_out, cfg: ModelConfig):
+    b, ts, _ = enc_out.shape
+    kvh, dh = cfg.n_kv_heads, cfg.dh
+    dt = enc_out.dtype
+    k = (enc_out @ p["wk"].astype(dt)).reshape(b, ts, kvh, dh).transpose(0, 2, 1, 3)
+    v = (enc_out @ p["wv"].astype(dt)).reshape(b, ts, kvh, dh).transpose(0, 2, 1, 3)
+    return k, v
+
+
+def block_step(p: Params, x_t, cache: Params, kind: str, cfg: ModelConfig, pos):
+    """One-token decode.  Returns (x_t, cache)."""
+    p = compute_view(p, L.COMPUTE_DTYPE)
+    h = L.apply_norm(p["norm1"], x_t, cfg.norm_eps)
+    if kind in ("attn", "attn_local"):
+        win = cfg.window if kind == "attn_local" else None
+        out, c = L.attention_step(p["attn"], h, cache["attn"], cfg, pos, window=win)
+        cache = dict(cache, attn=c)
+    elif kind == "rglru":
+        out, c = L.rglru_step(p["rglru"], h, cache["rglru"], cfg)
+        cache = dict(cache, rglru=c)
+    elif kind == "mlstm":
+        out, c = L.mlstm_step(p["mlstm"], h, cache["mlstm"], cfg)
+        cache = dict(cache, mlstm=c)
+    elif kind == "slstm":
+        out, c = L.slstm_step(p["slstm"], h, cache["slstm"], cfg)
+        cache = dict(cache, slstm=c)
+    x_t = x_t + out
+    if "cross" in p:
+        h = L.apply_norm(p["norm_cross"], x_t, cfg.norm_eps)
+        out, _ = L.attention_step(p["cross"], h, {}, cfg, pos,
+                                  cross_kv=cache["cross_kv"])
+        x_t = x_t + out
+    if "ffn" in p:
+        h = L.apply_norm(p["norm2"], x_t, cfg.norm_eps)
+        if cfg.ffn == "moe":
+            out, _ = L.apply_moe(p["ffn"], h, cfg)
+        else:
+            out = L.apply_ffn(p["ffn"], h, cfg)
+        x_t = x_t + out
+    return x_t, cache
+
+
+def init_block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                     cross_len: int = 0, dtype=L.COMPUTE_DTYPE) -> Params:
+    c: Params = {}
+    if kind in ("attn", "attn_local"):
+        win = cfg.window if kind == "attn_local" else None
+        c["attn"] = L.init_attn_cache(cfg, batch, max_len, dtype, window=win)
+    elif kind == "rglru":
+        c["rglru"] = L.init_rglru_cache(cfg, batch)
+    elif kind == "mlstm":
+        c["mlstm"] = L.init_mlstm_cache(cfg, batch)
+    elif kind == "slstm":
+        c["slstm"] = L.init_slstm_cache(cfg, batch)
+    if cross_len:
+        c["cross_kv"] = {"k": jnp.zeros((batch, cfg.n_kv_heads, cross_len, cfg.dh), dtype),
+                         "v": jnp.zeros((batch, cfg.n_kv_heads, cross_len, cfg.dh), dtype),
+                         "len": jnp.asarray(cross_len, jnp.int32)}
+    return c
+
+
+# ---------------------------------------------------------------------------
+# pattern stacking helpers
+# ---------------------------------------------------------------------------
+
+def _layout(cfg: ModelConfig) -> tuple[tuple[str, ...], int, tuple[str, ...]]:
+    """(unit, n_repeats, tail_kinds)."""
+    kinds = cfg.layer_kinds()
+    unit = tuple(cfg.pattern)
+    n_rep = len(kinds) // len(unit)
+    if n_rep == 0:                     # fewer layers than one unit (smoke)
+        return tuple(kinds), 1, ()
+    tail = kinds[n_rep * len(unit):]
+    return unit, n_rep, tail
+
+
+# scan bodies with <= this many repeats unroll into straight-line HLO so the
+# dry-run cost probes (1-unit vs 2-unit extrapolation) see per-layer cost
+_UNROLL = 2
+
+
+def _stack(trees: list):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees) if len(trees) > 1 else \
+        jax.tree.map(lambda x: x[None], trees[0])
+
+
+def _unstack_slice(tree, i):
+    return jax.tree.map(lambda x: x[i], tree)
+
+
+# ---------------------------------------------------------------------------
+# top-level model
+# ---------------------------------------------------------------------------
+
+def padded_vocab(cfg: ModelConfig) -> int:
+    """Embedding rows padded to 512 so the vocab axis always divides the TP
+    degree (MaxText-style); padded logits are masked to -inf."""
+    return -(-cfg.vocab_size // 512) * 512
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    unit, n_rep, tail = _layout(cfg)
+    keys = jax.random.split(key, cfg.n_layers + cfg.n_enc_layers + 3)
+    ki = iter(range(len(keys)))
+    cross = cfg.enc_dec
+    vp = padded_vocab(cfg)
+    p: Params = {}
+    p["emb"] = jax.random.normal(keys[next(ki)], (vp, cfg.d_model),
+                                 jnp.float32) * 0.02
+    if not cfg.tie_embeddings:
+        p["unemb"] = jax.random.normal(keys[next(ki)], (vp, cfg.d_model),
+                                       jnp.float32) * 0.02
+    p["final_norm"] = L.init_norm(cfg, cfg.d_model)
+
+    # decoder (or the only) stack
+    stacked = []
+    for u, kind in enumerate(unit):
+        base = keys[next(ki)]
+        per_rep = [init_block(cfg, kind, jax.random.fold_in(base, r), cross=cross)
+                   for r in range(n_rep)]
+        stacked.append(_stack(per_rep))
+    p["blocks"] = stacked
+    p["tail"] = [init_block(cfg, kind, keys[next(ki)], cross=cross) for kind in tail]
+
+    if cfg.enc_dec:
+        enc_blocks = [init_block(cfg, "attn", jax.random.fold_in(keys[-1], r))
+                      for r in range(cfg.n_enc_layers)]
+        p["encoder"] = {"blocks": _stack(enc_blocks),
+                        "norm": L.init_norm(cfg, cfg.d_model)}
+    return p
+
+
+def _embed(params: Params, cfg: ModelConfig, tokens, batch: dict):
+    emb = compute_view({"emb": params["emb"]}, L.COMPUTE_DTYPE)["emb"]
+    x = emb[tokens] * math.sqrt(cfg.d_model)
+    if cfg.mrope_sections is not None and "patch_embeds" in batch:
+        pe = batch["patch_embeds"].astype(x.dtype)
+        bsz = x.shape[0]
+        x = x.at[jnp.arange(bsz)[:, None], batch["patch_pos"]].set(pe)
+    return shard(x, "btd")
+
+
+def _mask_pad(logits, cfg: ModelConfig):
+    vp = logits.shape[-1]
+    if vp == cfg.vocab_size:
+        return logits
+    return jnp.where(jnp.arange(vp) < cfg.vocab_size, logits,
+                     jnp.asarray(-1e30, logits.dtype))
+
+
+def _logits(params: Params, cfg: ModelConfig, x):
+    name = "emb" if cfg.tie_embeddings else "unemb"
+    w = compute_view({name: params[name]}, L.COMPUTE_DTYPE)[name]
+    return _mask_pad(shard(x @ w.astype(x.dtype).T, "btv"), cfg)
+
+
+def _positions(cfg: ModelConfig, batch: dict, s: int, b: int):
+    if cfg.mrope_sections is not None:
+        if "pos_ids" in batch:
+            return batch["pos_ids"]
+        return jnp.broadcast_to(jnp.arange(s)[None, None], (3, b, s))
+    return jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+
+def _run_encoder(params: Params, cfg: ModelConfig, src_embeds):
+    b, ts, _ = src_embeds.shape
+    x = shard(src_embeds.astype(L.COMPUTE_DTYPE), "btd")
+    pos = jnp.broadcast_to(jnp.arange(ts)[None], (b, ts))
+
+    def body(x, blk):
+        x, _, _ = block_fwd(blk, x, "attn", cfg, pos, causal=False)
+        return x, None
+
+    if cfg.n_enc_layers <= _UNROLL:
+        for r in range(cfg.n_enc_layers):
+            x, _ = body(x, _unstack_slice(params["encoder"]["blocks"], r))
+    else:
+        x, _ = jax.lax.scan(body, x, params["encoder"]["blocks"])
+    return L.apply_norm(params["encoder"]["norm"], x, cfg.norm_eps)
+
+
+def forward(params: Params, cfg: ModelConfig, batch: dict, *,
+            remat: bool = True):
+    """Full-sequence forward.  Returns (x_final, aux_loss)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = _embed(params, cfg, tokens, batch)
+    positions = _positions(cfg, batch, s, b)
+    enc_out = None
+    if cfg.enc_dec:
+        enc_out = _run_encoder(params, cfg, batch["src_embeds"])
+    enc_pos = None
+
+    unit, n_rep, tail = _layout(cfg)
+
+    def unit_body(carry, blks):
+        x, aux = carry
+        for u, kind in enumerate(unit):
+            x, a, _ = block_fwd(blks[u], x, kind, cfg, positions,
+                                enc_out=enc_out, enc_positions=enc_pos)
+            aux = aux + a
+        return (x, aux), None
+
+    if remat:
+        import os
+        pol = os.environ.get("REPRO_REMAT_POLICY", "")
+        policy = getattr(jax.checkpoint_policies, pol) if pol else None
+        body = jax.checkpoint(unit_body, policy=policy)
+    else:
+        body = unit_body
+    carry = (x, jnp.zeros((), jnp.float32))
+    if n_rep <= _UNROLL:                 # cost-probe path: no while loop
+        for r in range(n_rep):
+            carry, _ = body(carry, _unstack_slice(params["blocks"], r))
+    else:
+        carry, _ = jax.lax.scan(body, carry, params["blocks"])
+    x, aux = carry
+    for blk, kind in zip(params["tail"], tail):
+        x, a, _ = block_fwd(blk, x, kind, cfg, positions,
+                            enc_out=enc_out, enc_positions=enc_pos)
+        aux = aux + a
+    x = L.apply_norm(params["final_norm"], x, cfg.norm_eps)
+    return x, aux
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch: dict, *,
+            remat: bool = True, loss_chunk: int = 1024):
+    """Next-token CE with sequence-chunked logits (never materializes
+    (B, S, V) — the logit chunk is (B, C, V_shard))."""
+    x, aux = forward(params, cfg, batch, remat=remat)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    # predict token t+1 from position t
+    xs = x[:, :-1]
+    labels = tokens[:, 1:]
+    n = s - 1
+    chunk = min(loss_chunk, n)
+    while n % chunk:
+        chunk -= 1
+    name = "emb" if cfg.tie_embeddings else "unemb"
+    w = compute_view({name: params[name]}, L.COMPUTE_DTYPE)[name]
+
+    def ce_chunk(carry, idx):
+        tot, cnt = carry
+        xi = jax.lax.dynamic_slice_in_dim(xs, idx * chunk, chunk, axis=1)
+        yi = jax.lax.dynamic_slice_in_dim(labels, idx * chunk, chunk, axis=1)
+        logits = shard(xi @ w.astype(xi.dtype).T, "btv").astype(jnp.float32)
+        logits = _mask_pad(logits, cfg)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yi[..., None], axis=-1)[..., 0]
+        tot = tot + jnp.sum(lse - gold)
+        return (tot, cnt + gold.size), None
+
+    (tot, cnt), _ = jax.lax.scan(ce_chunk, (jnp.zeros((), jnp.float32), 0),
+                                 jnp.arange(n // chunk))
+    loss = tot / cnt + aux
+    return loss, {"ce": tot / cnt, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def prefill(params: Params, cfg: ModelConfig, batch: dict, max_len: int = 0):
+    """Full-sequence forward that also returns per-layer caches and the
+    logits of the last position.  ``max_len`` reserves decode headroom:
+    global-attn caches are padded to it, local-window caches become rings."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = _embed(params, cfg, tokens, batch)
+    positions = _positions(cfg, batch, s, b)
+    enc_out = _run_encoder(params, cfg, batch["src_embeds"]) if cfg.enc_dec else None
+
+    unit, n_rep, tail = _layout(cfg)
+
+    def unit_body(x, blks):
+        caches = []
+        for u, kind in enumerate(unit):
+            x, _, c = block_fwd(blks[u], x, kind, cfg, positions,
+                                enc_out=enc_out, with_cache=True)
+            caches.append(c)
+        return x, tuple(caches)
+
+    if n_rep <= _UNROLL:
+        outs = []
+        for r in range(n_rep):
+            x, cs = unit_body(x, _unstack_slice(params["blocks"], r))
+            outs.append(cs)
+        stacked_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *outs) \
+            if len(outs) > 1 else jax.tree.map(lambda y: y[None], outs[0])
+    else:
+        x, stacked_caches = jax.lax.scan(unit_body, x, params["blocks"])
+    tail_caches = []
+    for blk, kind in zip(params["tail"], tail):
+        x, _, c = block_fwd(blk, x, kind, cfg, positions,
+                            enc_out=enc_out, with_cache=True)
+        tail_caches.append(c)
+    x = L.apply_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = _logits(params, cfg, x[:, -1:])
+    caches = {"blocks": list(stacked_caches), "tail": tail_caches}
+    caches = _finalize_caches(cfg, caches, s, max(max_len, s))
+    return logits, caches
+
+
+def _finalize_caches(cfg: ModelConfig, caches, s: int, max_len: int):
+    """Prefill attn caches come back prompt-length; re-lay them out for
+    decode: global-attn caches padded to ``max_len`` slots, local-window
+    caches to W-slot rings at slot = pos % W (CPM content-movable layout —
+    eviction overwrites in place where the cache lives)."""
+    unit, n_rep, tail = _layout(cfg)
+
+    def conv(cache, kind):
+        if kind not in ("attn", "attn_local") or "attn" not in cache:
+            return cache
+        k, v = cache["attn"]["k"], cache["attn"]["v"]
+        if kind == "attn_local":
+            w = min(cfg.window, max_len)
+            if k.shape[2] > w:
+                last = jnp.arange(s - w, s)
+                ring = jnp.zeros((k.shape[0], k.shape[1], w, k.shape[3]), k.dtype)
+                k = ring.at[:, :, last % w].set(k[:, :, last])
+                v = ring.at[:, :, last % w].set(v[:, :, last])
+            elif k.shape[2] < w:
+                pad = [(0, 0), (0, 0), (0, w - k.shape[2]), (0, 0)]
+                k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+        else:
+            if k.shape[2] < max_len:
+                pad = [(0, 0), (0, 0), (0, max_len - k.shape[2]), (0, 0)]
+                k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+        return dict(cache, attn={"k": k, "v": v, "len": cache["attn"]["len"]})
+
+    out_blocks = []
+    for u, kind in enumerate(unit):
+        cu = caches["blocks"][u]
+        if kind in ("attn", "attn_local"):
+            cu = jax.vmap(lambda c: conv(c, kind))(cu)
+        out_blocks.append(cu)
+    out_tail = [conv(c, kind) for c, kind in zip(caches["tail"], tail)]
+    return {"blocks": out_blocks, "tail": out_tail}
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int, cross_len: int = 0,
+                dtype=L.COMPUTE_DTYPE) -> dict:
+    """Zero caches shaped for decode (the dry-run decode input)."""
+    unit, n_rep, tail = _layout(cfg)
+    blocks = []
+    for kind in unit:
+        one = init_block_cache(cfg, kind, batch, max_len, cross_len, dtype)
+        blocks.append(jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (n_rep,) + x.shape), one))
+    tails = [init_block_cache(cfg, kind, batch, max_len, cross_len, dtype)
+             for kind in tail]
+    return {"blocks": blocks, "tail": tails}
+
+
+def decode_step(params: Params, cfg: ModelConfig, tokens_t, caches: dict, pos):
+    """One decode step.  tokens_t: (B, 1); pos: scalar int32.
+    Returns (logits (B,1,V), new caches)."""
+    b = tokens_t.shape[0]
+    x = _embed(params, cfg, tokens_t, {"tokens": tokens_t})
+    unit, n_rep, tail = _layout(cfg)
+
+    # caches are updated IN PLACE through a fori_loop carry (dynamic-update-
+    # slice on a loop-carried buffer lowers to an in-place write) — the
+    # content-movable discipline: the KV cache never leaves its storage.
+    stacked = tuple(caches["blocks"])
+
+    def layer_iter(r, carry):
+        x, cs = carry
+        for u, kind in enumerate(unit):
+            blk = jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, r, 0, keepdims=False),
+                params["blocks"][u])
+            cu = jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, r, 0, keepdims=False),
+                cs[u])
+            x, new_cu = block_step(blk, x, cu, kind, cfg, pos)
+            cs = (cs[:u]
+                  + (jax.tree.map(lambda buf, n: jax.lax.dynamic_update_index_in_dim(
+                      buf, n.astype(buf.dtype), r, 0), cs[u], new_cu),)
+                  + cs[u + 1:])
+        return x, cs
+
+    if n_rep <= _UNROLL:
+        carry = (x, stacked)
+        for r in range(n_rep):
+            carry = layer_iter(r, carry)
+        x, new_stacked = carry
+    else:
+        x, new_stacked = jax.lax.fori_loop(0, n_rep, layer_iter, (x, stacked))
+    new_tail = []
+    for blk, c, kind in zip(params["tail"], caches["tail"], tail):
+        x, c = block_step(blk, x, c, kind, cfg, pos)
+        new_tail.append(c)
+    x = L.apply_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = _logits(params, cfg, x)
+    return logits, {"blocks": list(new_stacked), "tail": new_tail}

@@ -1,0 +1,4 @@
+from . import engine, kv_cache, sampling
+from .engine import Engine, GenConfig
+
+__all__ = ["engine", "kv_cache", "sampling", "Engine", "GenConfig"]

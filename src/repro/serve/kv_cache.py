@@ -1,0 +1,95 @@
+"""KV-cache management as content-movable memory (paper §4).
+
+The cache lives on-device; every management op is a constant number of
+concurrent vector ops executed where the data is stored — never a host
+round-trip over the bus.  This is the paper's thesis applied to serving:
+
+  * sliding-window eviction  = ring overwrite (O(1), `attention_step`)
+  * speculative rollback     = range delete (`truncate`)
+  * hole compaction          = stable compaction (`compact_slots`)
+  * prefix-cache splice      = range insert (`splice_prefix`)
+
+All ops treat the slot axis (-2 of (B, KVH, S, dh)) as the PE address axis.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import movable
+
+
+def _map_kv(cache_tree, fn):
+    """Apply fn(k_or_v, leaf_len_ctx) to every attn k/v leaf in a cache tree."""
+    def walk(node):
+        if isinstance(node, dict):
+            if "k" in node and "v" in node and "len" in node:
+                return dict(node, k=fn(node["k"]), v=fn(node["v"]))
+            return {kk: walk(vv) for kk, vv in node.items()}
+        if isinstance(node, (list, tuple)):
+            t = [walk(x) for x in node]
+            return type(node)(t)
+        return node
+    return walk(cache_tree)
+
+
+def truncate(caches, new_len):
+    """Speculative-decode rollback: drop cache entries at slots >= new_len.
+
+    A range delete in content-movable terms; entries need not be zeroed
+    (the `len` mask excludes them) — we update lengths only, O(1).
+    """
+    def walk(node):
+        if isinstance(node, dict):
+            if "len" in node and "k" in node:
+                return dict(node, len=jnp.minimum(node["len"], new_len))
+            return {kk: walk(vv) for kk, vv in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)([walk(x) for x in node])
+        return node
+    return walk(caches)
+
+
+def compact_slots(k: jax.Array, v: jax.Array, keep: jax.Array):
+    """Remove evicted slots (keep=False) and pack survivors to the front —
+    stable compaction (paper §4.2) along the slot axis.
+
+    k, v: (B, KVH, S, dh); keep: (B, S) bool.  Returns (k, v, new_len (B,)).
+    Used by H2O-style importance eviction: slots below the attention-mass
+    threshold (content-comparable compare) are dropped in place.
+    """
+    b, kvh, s, dh = k.shape
+
+    def one(kb, vb, keepb):                       # (KVH,S,dh),(KVH,S,dh),(S,)
+        order = jnp.argsort(~keepb, stable=True)  # kept slots first
+        return kb[:, order], vb[:, order]
+
+    ks, vs = jax.vmap(one)(k, v, keep)
+    new_len = jnp.sum(keep.astype(jnp.int32), axis=-1)
+    return ks, vs, new_len
+
+
+def splice_prefix(k: jax.Array, v: jax.Array, pk: jax.Array, pv: jax.Array,
+                  used_len):
+    """Prefix-cache splice: insert a cached prefix (pk, pv) before the
+    current content — a content-movable range insert on the slot axis."""
+    plen = pk.shape[2]
+    s = k.shape[2]
+
+    def ins(x, px):
+        def per_row(row, prow):                   # row (S, dh)
+            return jax.vmap(lambda col, pcol: movable.insert(
+                col, 0, pcol, used_len), in_axes=(-1, -1), out_axes=-1)(row, prow)
+        return jax.vmap(jax.vmap(per_row))(x, px)
+
+    return ins(k, pk), ins(v, pv), used_len + plen
+
+
+def evict_by_score(k, v, scores, keep_count: int):
+    """Importance-based eviction (H2O-style): keep the ``keep_count`` slots
+    with highest attention mass.  Threshold from the content-comparable
+    bisection; compaction via content-movable packing."""
+    from repro.core import comparable
+    keep = comparable.topk_mask(scores, keep_count)   # (B, S)
+    return compact_slots(k, v, keep)

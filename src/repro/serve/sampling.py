@@ -1,0 +1,54 @@
+"""Sampling via content-comparable memory primitives.
+
+top-k / top-p cutoffs are threshold problems: every logit PE compares itself
+against a broadcast threshold concurrently (~1 cycle) instead of a full
+sort.  The threshold itself comes from the §6.3 histogram / bisection
+(``quantile_threshold``) — O(iters) compare+count steps, independent of
+vocab size.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import comparable
+
+
+def greedy(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def top_k_mask(logits: jax.Array, k: int) -> jax.Array:
+    return comparable.topk_mask(logits, k)
+
+
+def top_p_mask(probs: jax.Array, p: float, iters: int = 20) -> jax.Array:
+    """Smallest prob threshold t with sum(probs[probs >= t]) >= p, by
+    bisection on t — each iteration one concurrent compare + masked sum."""
+    def body(_, carry):
+        lo, hi = carry
+        mid = (lo + hi) / 2
+        mass = jnp.sum(jnp.where(probs >= mid[..., None], probs, 0.0), -1)
+        ok = mass >= p                       # threshold can rise
+        return jnp.where(ok, mid, lo), jnp.where(ok, hi, mid)
+
+    b = probs.shape[:-1]
+    lo, hi = jnp.zeros(b), jnp.ones(b)
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    return probs >= lo[..., None]
+
+
+def sample(logits: jax.Array, rng, temperature: float = 1.0,
+           top_k: int = 0, top_p: float = 0.0) -> jax.Array:
+    """Batched token sampling with CPM-style truncation masks."""
+    logits = logits.astype(jnp.float32)
+    if temperature <= 0:
+        return greedy(logits)
+    logits = logits / temperature
+    if top_k:
+        logits = jnp.where(top_k_mask(logits, top_k), logits, -jnp.inf)
+    if top_p:
+        probs = jax.nn.softmax(logits, -1)
+        logits = jnp.where(top_p_mask(probs, top_p), logits, -jnp.inf)
+    return jax.random.categorical(rng, logits, axis=-1).astype(jnp.int32)

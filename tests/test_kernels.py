@@ -1,0 +1,148 @@
+"""Per-kernel interpret-mode validation against the pure-jnp oracles,
+swept over shapes and dtypes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import cpm_kernels, flash_attention as fa, ops, ref
+
+
+def rand(key, shape, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+    return x.astype(dtype)
+
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("b,h,kvh,s,d", [
+        (1, 4, 4, 128, 64),    # MHA
+        (2, 8, 2, 256, 64),    # GQA 4:1
+        (1, 4, 1, 128, 128),   # MQA
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_causal_matches_naive(self, b, h, kvh, s, d, dtype):
+        q = rand(0, (b, h, s, d), dtype)
+        k = rand(1, (b, kvh, s, d), dtype)
+        v = rand(2, (b, kvh, s, d), dtype)
+        got = fa.flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+        want = ref.attention_naive(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   atol=TOL[dtype], rtol=TOL[dtype])
+
+    def test_non_causal(self):
+        q = rand(0, (1, 2, 128, 64), jnp.float32)
+        k = rand(1, (1, 2, 128, 64), jnp.float32)
+        v = rand(2, (1, 2, 128, 64), jnp.float32)
+        got = fa.flash_attention(q, k, v, causal=False, block_q=64, block_k=64)
+        want = ref.attention_naive(q, k, v, causal=False)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+    @pytest.mark.parametrize("window", [32, 128])
+    def test_local_window(self, window):
+        q = rand(0, (1, 2, 256, 64), jnp.float32)
+        k = rand(1, (1, 2, 256, 64), jnp.float32)
+        v = rand(2, (1, 2, 256, 64), jnp.float32)
+        got = fa.flash_attention(q, k, v, causal=True, window=window,
+                                 block_q=64, block_k=64)
+        want = ref.attention_naive(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+    @pytest.mark.parametrize("block_k", [64, 128, 512])
+    def test_chunked_ref_matches_naive(self, block_k):
+        q = rand(3, (2, 4, 512, 64), jnp.float32)
+        k = rand(4, (2, 2, 512, 64), jnp.float32)
+        v = rand(5, (2, 2, 512, 64), jnp.float32)
+        got = ref.flash_attention_ref(q, k, v, causal=True, block_k=block_k)
+        want = ref.attention_naive(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+    def test_chunked_ref_grad_finite(self):
+        q = rand(6, (1, 2, 128, 32), jnp.float32)
+        k = rand(7, (1, 2, 128, 32), jnp.float32)
+        v = rand(8, (1, 2, 128, 32), jnp.float32)
+        g = jax.grad(lambda q: ref.flash_attention_ref(q, k, v).sum())(q)
+        assert np.isfinite(np.asarray(g)).all()
+
+    def test_decode_matches_last_row(self):
+        s = 128
+        q = rand(9, (2, 4, 1, 64), jnp.float32)
+        k = rand(10, (2, 2, s, 64), jnp.float32)
+        v = rand(11, (2, 2, s, 64), jnp.float32)
+        got = ref.decode_attention_ref(q, k, v, cache_len=s)
+        want = ref.attention_naive(q, k, v, causal=True)  # sq=1 aligned at end
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+    def test_decode_cache_mask(self):
+        q = rand(9, (1, 2, 1, 32), jnp.float32)
+        k = rand(10, (1, 2, 64, 32), jnp.float32)
+        v = rand(11, (1, 2, 64, 32), jnp.float32)
+        short = ref.decode_attention_ref(q, k[:, :, :40], v[:, :, :40], cache_len=40)
+        padded = ref.decode_attention_ref(q, k, v, cache_len=40)
+        np.testing.assert_allclose(np.asarray(short), np.asarray(padded), atol=2e-5)
+
+
+class TestCPMKernels:
+    @pytest.mark.parametrize("r,n", [(1, 8), (4, 64), (2, 130)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.int32])
+    def test_oddeven_sort(self, r, n, dtype):
+        x = (jax.random.normal(jax.random.PRNGKey(r * n), (r, n)) * 100).astype(dtype)
+        got = cpm_kernels.oddeven_sort(x)
+        np.testing.assert_array_equal(np.asarray(got), np.sort(np.asarray(x), -1))
+
+    @pytest.mark.parametrize("n,section", [(64, 16), (1000, 32), (4096, 64)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_section_sum(self, n, section, dtype):
+        x = rand(n, (n,), dtype)
+        got = float(cpm_kernels.section_sum(x, section))
+        want = float(np.asarray(x, np.float32).sum())
+        np.testing.assert_allclose(got, want, rtol=3e-2 if dtype == jnp.bfloat16 else 1e-5,
+                                   atol=1e-2)
+
+    @pytest.mark.parametrize("n,m", [(64, 4), (256, 16)])
+    def test_template_match(self, n, m):
+        data = jax.random.normal(jax.random.PRNGKey(0), (3, n))
+        t = jax.random.normal(jax.random.PRNGKey(1), (m,))
+        got = cpm_kernels.template_match(data, t)
+        want = jax.vmap(lambda d: ref.template_match_ref(d, t))(data)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+    def test_template_match_finds_plant(self):
+        data = jnp.full((1, 128), 9.0).at[0, 40:44].set(jnp.array([1.0, 2, 3, 4]))
+        t = jnp.array([1.0, 2, 3, 4])
+        sad = np.asarray(cpm_kernels.template_match(data, t))[0]
+        assert sad.argmin() == 40 and sad[40] == 0
+
+    @pytest.mark.parametrize("n,m", [(32, 2), (128, 5)])
+    def test_substring_match(self, n, m):
+        hay = jax.random.randint(jax.random.PRNGKey(2), (2, n), 0, 4)
+        nee = jax.random.randint(jax.random.PRNGKey(3), (m,), 0, 4)
+        got = np.asarray(cpm_kernels.substring_match(hay, nee)).astype(bool)
+        want = np.asarray(jax.vmap(lambda h: ref.substring_match_ref(h, nee))(hay))
+        np.testing.assert_array_equal(got, want)
+
+    @pytest.mark.parametrize("taps", [(1.0, 2.0, 1.0), (1.0, 1.0, 1.0, 1.0, 1.0)])
+    def test_stencil(self, taps):
+        x = jax.random.normal(jax.random.PRNGKey(4), (2, 64))
+        got = cpm_kernels.stencil(x, taps)
+        want = jax.vmap(lambda r: ref.stencil_ref(r, list(taps)))(x)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+class TestOpsDispatch:
+    def test_ops_sort_modes_agree(self):
+        x = jax.random.normal(jax.random.PRNGKey(5), (2, 32))
+        np.testing.assert_allclose(np.asarray(ops.sort(x, impl="ref")),
+                                   np.asarray(ops.sort(x, impl="interpret")))
+
+    def test_ops_attention_modes_agree(self):
+        q = rand(0, (1, 2, 128, 32), jnp.float32)
+        k = rand(1, (1, 1, 128, 32), jnp.float32)
+        v = rand(2, (1, 1, 128, 32), jnp.float32)
+        a = ops.attention(q, k, v, impl="ref")
+        b = ops.attention(q, k, v, impl="interpret", block_q=64, block_k=64)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)

@@ -1,0 +1,130 @@
+"""Hypothesis property tests on system invariants (routing, sampling,
+cache management, collectives algebra)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import comparable, computable, movable, searchable
+from repro.serve import sampling
+
+
+class TestRoutingInvariants:
+    @given(st.integers(0, 10), st.integers(1, 4))
+    @settings(max_examples=25, deadline=None)
+    def test_moe_routing_exact_k_and_gates(self, seed, k):
+        """Every token routes to exactly k distinct experts; kept gates are
+        a normalized sub-distribution."""
+        from repro.configs import MoEConfig, get_config
+        import dataclasses
+        from repro.models import layers as L
+
+        cfg = dataclasses.replace(
+            get_config("granite-moe-1b-a400m").smoke(),
+            moe=MoEConfig(n_experts=8, top_k=k, capacity_factor=4.0))
+        key = jax.random.PRNGKey(seed)
+        p = L.init_moe(cfg, key)
+        x = jax.random.normal(key, (2, 8, cfg.d_model), jnp.bfloat16) * 0.1
+        y, aux = L.apply_moe(p, x, cfg)
+        assert y.shape == x.shape
+        assert np.isfinite(np.asarray(y, np.float32)).all()
+        assert float(aux) >= 0
+        # routing mask invariant
+        probs = jax.nn.softmax(
+            x.reshape(-1, cfg.d_model).astype(jnp.float32) @ p["router"])
+        mask = comparable.topk_mask(probs, k)
+        assert np.all(np.asarray(mask.sum(-1)) == k)
+
+    @given(st.integers(0, 20), st.integers(1, 6))
+    @settings(max_examples=40, deadline=None)
+    def test_topk_mask_threshold_semantics(self, seed, k):
+        x = jax.random.normal(jax.random.PRNGKey(seed), (5, 12))
+        m = np.asarray(comparable.topk_mask(x, k))
+        xv = np.asarray(x)
+        for row in range(5):
+            kept = np.sort(xv[row][m[row]])
+            dropped = xv[row][~m[row]]
+            assert len(kept) == k
+            if len(dropped):
+                assert kept[0] >= dropped.max() - 1e-6
+
+
+class TestSamplingInvariants:
+    @given(st.integers(0, 10), st.floats(0.1, 0.99))
+    @settings(max_examples=30, deadline=None)
+    def test_top_p_mass_at_least_p(self, seed, p):
+        probs = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(seed), (3, 32)))
+        m = sampling.top_p_mask(probs, p)
+        mass = np.asarray(jnp.where(m, probs, 0).sum(-1))
+        assert np.all(mass >= p - 0.02)
+        # masks are downward-closed in probability
+        pv = np.asarray(probs)
+        mv = np.asarray(m)
+        for r in range(3):
+            thr = pv[r][mv[r]].min()
+            assert not np.any(pv[r][~mv[r]] > thr + 1e-7)
+
+
+class TestCacheInvariants:
+    @given(st.lists(st.booleans(), min_size=4, max_size=16))
+    @settings(max_examples=30, deadline=None)
+    def test_compact_preserves_kept_order(self, keep):
+        from repro.serve import kv_cache
+        s = len(keep)
+        k = jnp.arange(1 * 1 * s * 2, dtype=jnp.float32).reshape(1, 1, s, 2)
+        keep_arr = jnp.asarray(keep)[None]
+        ks, vs, ln = kv_cache.compact_slots(k, k, keep_arr)
+        n = int(ln[0])
+        assert n == sum(keep)
+        want = np.asarray(k)[0, 0][np.asarray(keep)]
+        np.testing.assert_array_equal(np.asarray(ks)[0, 0, :n], want)
+
+
+class TestAlgebraInvariants:
+    @given(st.lists(st.integers(-3, 3), min_size=1, max_size=5),
+           st.lists(st.integers(-3, 3), min_size=1, max_size=5))
+    @settings(max_examples=30, deadline=None)
+    def test_stencil_compose_commutes(self, a, b):
+        """Eq. 7-7: A # B == B # A."""
+        np.testing.assert_array_equal(computable.compose_taps(a, b),
+                                      computable.compose_taps(b, a))
+
+    @given(st.lists(st.integers(-3, 3), min_size=1, max_size=4),
+           st.lists(st.integers(-3, 3), min_size=1, max_size=4),
+           st.lists(st.integers(-3, 3), min_size=1, max_size=4))
+    @settings(max_examples=25, deadline=None)
+    def test_stencil_compose_associates(self, a, b, c):
+        """Eq. 7-8: (A # B) # C == A # (B # C)."""
+        np.testing.assert_array_equal(
+            computable.compose_taps(computable.compose_taps(a, b), c),
+            computable.compose_taps(a, computable.compose_taps(b, c)))
+
+    @given(st.lists(st.floats(-10, 10, allow_nan=False, width=32),
+                    min_size=2, max_size=40),
+           st.integers(1, 39))
+    @settings(max_examples=30, deadline=None)
+    def test_shift_then_unshift_identity(self, vals, start):
+        x = jnp.asarray(vals, jnp.float32)
+        n = x.shape[0]
+        start = min(start, n - 1)
+        end = n - 2
+        if start > end:
+            return
+        y = movable.shift_range(x, start, end, 1)
+        z = movable.shift_range(y, start + 1, end + 1, -1)
+        np.testing.assert_allclose(np.asarray(z)[start + 1: end + 1],
+                                   np.asarray(x)[start + 1: end + 1])
+
+    @given(st.lists(st.integers(0, 3), min_size=2, max_size=30))
+    @settings(max_examples=30, deadline=None)
+    def test_spec_verify_prefix_property(self, toks):
+        """verify_draft returns the exact longest common prefix length."""
+        draft = jnp.asarray(toks, jnp.int32)
+        target = jnp.asarray(toks, jnp.int32)
+        assert int(searchable.verify_draft(draft, target)) == len(toks)
+        if len(toks) > 1:
+            t2 = np.array(toks)
+            t2[len(toks) // 2] = (t2[len(toks) // 2] + 1) % 4
+            got = int(searchable.verify_draft(draft, jnp.asarray(t2)))
+            assert got == len(toks) // 2

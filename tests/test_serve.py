@@ -1,0 +1,109 @@
+"""Serving: engine generation, CPM KV-cache management, sampling masks,
+prompt-lookup speculative decoding."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import all_configs
+from repro.models import lm
+from repro.serve import Engine, GenConfig, kv_cache, sampling
+
+CFG = all_configs()["granite-8b"].smoke()
+
+
+@pytest.fixture(scope="module")
+def engine():
+    params = lm.init_params(CFG, jax.random.PRNGKey(0))
+    return Engine(CFG, params, max_len=128)
+
+
+def test_greedy_generation_matches_manual_decode(engine):
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, CFG.vocab_size)
+    out, _ = engine.generate({"tokens": tokens}, GenConfig(max_new_tokens=8))
+    assert out.shape == (2, 24)
+    # manual: prefill + greedy loop
+    logits, caches = lm.prefill(engine.params, CFG, {"tokens": tokens}, max_len=128)
+    cur = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    manual = [cur]
+    pos = 16
+    for _ in range(7):
+        logits, caches = lm.decode_step(engine.params, CFG, cur, caches,
+                                        jnp.asarray(pos, jnp.int32))
+        cur = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        manual.append(cur)
+        pos += 1
+    np.testing.assert_array_equal(np.asarray(out[:, 16:]),
+                                  np.concatenate(manual, 1))
+
+
+def test_spec_decode_matches_greedy(engine):
+    """Prompt-lookup speculation must not change greedy output."""
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (1, 24), 0, CFG.vocab_size)
+    base, _ = engine.generate({"tokens": tokens}, GenConfig(max_new_tokens=10))
+    spec, stats = engine.generate({"tokens": tokens},
+                                  GenConfig(max_new_tokens=10, ngram_spec=4))
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(spec))
+    assert stats["proposed"] >= 0
+
+
+def test_sampling_top_k_mask():
+    logits = jnp.array([[1.0, 5.0, 3.0, 2.0, 4.0]])
+    m = np.asarray(sampling.top_k_mask(logits, 2))
+    np.testing.assert_array_equal(m[0], [False, True, False, False, True])
+
+
+def test_sampling_top_p_mask():
+    probs = jnp.array([[0.5, 0.3, 0.1, 0.06, 0.04]])
+    m = np.asarray(sampling.top_p_mask(probs, 0.75))
+    assert m[0, 0] and m[0, 1]            # 0.8 mass needed to reach 0.75
+    assert not m[0, 3] and not m[0, 4]
+
+
+def test_sampling_respects_masks():
+    logits = jnp.tile(jnp.array([0.0, 10.0, 9.0, -5.0]), (64, 1))
+    toks = sampling.sample(logits, jax.random.PRNGKey(0), temperature=1.0, top_k=2)
+    assert set(np.asarray(toks)) <= {1, 2}
+
+
+class TestKVCacheOps:
+    def test_truncate_sets_len(self):
+        tree = {"attn": {"k": jnp.zeros((1, 2, 8, 4)), "v": jnp.zeros((1, 2, 8, 4)),
+                         "len": jnp.asarray(8)}}
+        out = kv_cache.truncate(tree, jnp.asarray(5))
+        assert int(out["attn"]["len"]) == 5
+
+    def test_compact_slots(self):
+        k = jnp.arange(2 * 1 * 6 * 2, dtype=jnp.float32).reshape(2, 1, 6, 2)
+        v = k + 100
+        keep = jnp.array([[True, False, True, True, False, True],
+                          [True, True, True, False, False, False]])
+        ks, vs, ln = kv_cache.compact_slots(k, v, keep)
+        np.testing.assert_array_equal(np.asarray(ln), [4, 3])
+        np.testing.assert_array_equal(np.asarray(ks)[0, 0, :4, 0],
+                                      np.asarray(k)[0, 0, [0, 2, 3, 5], 0])
+
+    def test_evict_by_score_keeps_topk(self):
+        k = jnp.arange(1 * 1 * 8 * 2, dtype=jnp.float32).reshape(1, 1, 8, 2)
+        v = k
+        scores = jnp.array([[0.9, 0.1, 0.8, 0.2, 0.7, 0.3, 0.6, 0.4]])
+        ks, vs, ln = kv_cache.evict_by_score(k, v, scores, 4)
+        assert int(ln[0]) == 4
+        np.testing.assert_array_equal(np.asarray(ks)[0, 0, :4, 0],
+                                      np.asarray(k)[0, 0, [0, 2, 4, 6], 0])
+
+    def test_ring_buffer_eviction_is_o1(self):
+        """Local-window decode overwrites the oldest slot in place (content-
+        movable eviction) — verified via recurrentgemma smoke decode."""
+        cfg = all_configs()["recurrentgemma-9b"].smoke()
+        params = lm.init_params(cfg, jax.random.PRNGKey(0))
+        caches = lm.init_caches(cfg, 1, max_len=64)
+        tok = jnp.zeros((1, 1), jnp.int32)
+        # window is cfg.window=16; decode past it and ensure ring reuse
+        for t in range(20):
+            logits, caches = lm.decode_step(params, cfg, tok, caches,
+                                            jnp.asarray(t, jnp.int32))
+        ring = caches["blocks"][2]["attn"]["k"]       # attn_local unit slot
+        assert ring.shape[-2] == cfg.window           # never grows
+        assert np.isfinite(np.asarray(logits, np.float32)).all()

@@ -1,0 +1,79 @@
+"""Partition-rule unit tests (no multi-device needed: specs are pure)."""
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import sharding as sh
+
+
+class FakeMesh:
+    """Just enough of a Mesh for spec building."""
+    axis_names = ("pod", "data", "model")
+    shape = {"pod": 2, "data": 16, "model": 16}
+    size = 512
+
+
+CTX = sh.ShardingCtx(mesh=FakeMesh(), data_axes=("pod", "data"),
+                     model_axis="model", fsdp=True)
+CTX1 = sh.ShardingCtx(mesh=FakeMesh(), data_axes=("pod", "data"),
+                      model_axis="model", fsdp=False)
+
+
+def test_attention_weights():
+    assert sh.param_spec("/blocks/attn/wq", (8192, 8192), CTX) == \
+        P(("pod", "data"), "model")
+    assert sh.param_spec("/blocks/attn/wo", (8192, 8192), CTX) == \
+        P("model", ("pod", "data"))
+
+
+def test_stacked_leading_axis_never_sharded():
+    s = sh.param_spec("/blocks/attn/wq", (80, 8192, 8192), CTX)
+    assert s == P(None, ("pod", "data"), "model")
+
+
+def test_divisibility_fallback():
+    # 49155 vocab does not divide 16 -> falls off the vocab-sharded spec
+    s = sh.param_spec("/emb", (49155, 1024), CTX)
+    assert s[0] is None
+    # padded vocab shards cleanly
+    s = sh.param_spec("/emb", (49664, 1024), CTX)
+    assert s == P("model", ("pod", "data"))
+
+
+def test_experts_sharded_over_model():
+    s = sh.param_spec("/blocks/ffn/expert_in", (32, 1024, 512), CTX)
+    assert s[0] == "model"
+
+
+def test_small_dims_replicate():
+    # sLSTM recurrent weights: 4 heads can't shard over 16
+    s = sh.param_spec("/blocks/slstm/rec_w", (4, 512, 2048), CTX)
+    assert s == P(None, None, None)
+
+
+def test_fsdp_off_drops_dp():
+    s = sh.param_spec("/blocks/attn/wq", (8192, 8192), CTX1)
+    assert s == P(None, "model")
+
+
+def test_compute_spec_strips_dp_axes():
+    s = sh.compute_spec("/blocks/attn/wq", (8192, 8192), CTX)
+    assert s == P(None, "model")
+    s = sh.compute_spec("/blocks/attn/wo", (8192, 8192), CTX)
+    assert s == P("model", None)
+
+
+def test_act_spec_divisibility():
+    # 40 heads don't divide 16 -> head axis replicates
+    s = sh.act_spec("bhsd", (32, 40, 4096, 128), CTX)
+    assert s[1] is None
+    s = sh.act_spec("bhsd", (32, 64, 4096, 128), CTX)
+    assert s[1] == "model"
+
+
+def test_norm_scale_replicated_when_indivisible():
+    s = sh.param_spec("/blocks/norm1/scale", (5120,), CTX)
+    assert s == P("model")          # 5120 % 16 == 0
+    s = sh.param_spec("/blocks/norm1/scale", (1023,), CTX)
+    assert s == P(None)
