@@ -139,6 +139,7 @@ def bench_collectives():
     script = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ.setdefault("JAX_PLATFORMS", "cpu")   # never probe TPU backends
 import jax, jax.numpy as jnp, time
 from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
@@ -159,8 +160,12 @@ for name, fn in [
     steps = {"ring": 7, "tree": 3, "psum": 3}[name]
     print(f"T8_allreduce_{name}_8dev,{us:.1f},steps={steps}")
 """
+    import os
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     r = subprocess.run([sys.executable, "-c", script], capture_output=True,
-                       text=True, cwd="/root/repo", env={"PYTHONPATH": "src"})
+                       text=True, cwd=root,
+                       env=dict(os.environ, PYTHONPATH="src",
+                                JAX_PLATFORMS="cpu"))
     for line in r.stdout.strip().splitlines():
         if line.startswith("T8"):
             print(line, flush=True)
@@ -204,6 +209,49 @@ def bench_lm_smoke():
     row("LM_decode_step_smoke_b8", us, f"tok_per_s={8 / (us / 1e6):.0f}")
 
 
+def bench_engine_decode():
+    """Serving-engine scenarios: scan-decode throughput and batched
+    speculative decoding (tokens/sec + draft acceptance rate)."""
+    from repro.configs import all_configs
+    from repro.models import lm
+    from repro.serve import Engine, GenConfig
+
+    cfg = all_configs()["granite-8b"].smoke()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+
+    b, s, new = 8, 32, 32
+    engine = Engine(cfg, params, max_len=s + new + 8)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (b, s), 0,
+                                          cfg.vocab_size)}
+    gen = GenConfig(max_new_tokens=new)
+
+    def run_scan():
+        out, _ = engine.generate(batch, gen)
+        return out
+
+    us = timeit(run_scan, reps=5)
+    row(f"Engine_scan_decode_b{b}_new{new}", us,
+        f"tok_per_s={b * new / (us / 1e6):.0f}")
+
+    # speculative: periodic prompts so the n-gram draft hits often
+    bs, ss, draft = 4, 24, 4
+    period = jnp.arange(6, dtype=jnp.int32) + 7
+    spec_batch = {"tokens": jnp.tile(period[None], (bs, ss // 6))}
+    spec_engine = Engine(cfg, params, max_len=ss + new + 4 * draft)
+    spec_gen = GenConfig(max_new_tokens=new, ngram_spec=draft)
+
+    def run_spec():
+        out, stats = spec_engine.generate(spec_batch, spec_gen)
+        return out, stats
+
+    _, stats = run_spec()                                # compile + stats
+    us = timeit(lambda: run_spec()[0], reps=5)
+    row(f"Engine_spec_decode_b{bs}_draft{draft}", us,
+        f"tok_per_s={bs * new / (us / 1e6):.0f};"
+        f"accept_rate={stats['acceptance_rate']:.2f};"
+        f"rounds={stats['rounds']}")
+
+
 def main() -> None:
     print("name,us_per_call,derived")
     bench_universal_ops()
@@ -216,6 +264,7 @@ def main() -> None:
     bench_collectives()
     bench_moe_routing()
     bench_lm_smoke()
+    bench_engine_decode()
 
 
 if __name__ == "__main__":

@@ -39,7 +39,8 @@ def main():
     print("greedy == speculative:", True)
     print(f"plain  : {t_plain:.2f}s")
     print(f"spec   : {t_spec:.2f}s  accepted {stats['accepted']}/{stats['proposed']}"
-          f" draft tokens")
+          f" draft tokens (rate {stats['acceptance_rate']:.2f},"
+          f" {stats['rounds']} rounds)")
     print("sampled continuation (top-p):")
     out, _ = engine.generate({"tokens": base},
                              GenConfig(max_new_tokens=12, temperature=0.8,

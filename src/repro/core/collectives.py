@@ -26,9 +26,18 @@ import jax.numpy as jnp
 from jax import lax
 
 
+def _axis_size(axis_name: str) -> int:
+    """Static mesh-axis size.  ``lax.axis_size`` only exists in newer JAX;
+    ``psum`` of a Python constant constant-folds to the axis size on every
+    version this repo supports."""
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(axis_name)
+    return lax.psum(1, axis_name)
+
+
 def ring_shift(x: jax.Array, axis_name: str, shift: int = 1) -> jax.Array:
     """Rule 7: read a register of the neighbor ``shift`` hops away (ring)."""
-    n = lax.axis_size(axis_name)
+    n = _axis_size(axis_name)
     perm = [(i, (i + shift) % n) for i in range(n)]
     return lax.ppermute(x, axis_name, perm)
 
@@ -39,7 +48,7 @@ def ring_allreduce(x: jax.Array, axis_name: str) -> jax.Array:
     Bandwidth-inefficient vs reduce-scatter+all-gather but structurally the
     paper's phase-1 section reduction (a carry marching around the ring).
     """
-    n = lax.axis_size(axis_name)
+    n = _axis_size(axis_name)
     acc = x
 
     def body(i, carry):
@@ -94,7 +103,7 @@ def tree_allreduce(x: jax.Array, axis_name: str) -> jax.Array:
     Level j exchanges with the PE 2**j away — exactly Fig. 16's skip links.
     Requires a power-of-two axis size.
     """
-    n = lax.axis_size(axis_name)
+    n = _axis_size(axis_name)
     assert n & (n - 1) == 0, "tree_allreduce needs power-of-two axis"
     acc = x
     j = 1

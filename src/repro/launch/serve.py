@@ -31,18 +31,23 @@ def main():
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=0.0)
     ap.add_argument("--spec", type=int, default=0,
-                    help="prompt-lookup draft length (batch=1 only)")
+                    help="prompt-lookup draft length (batched; greedy only)")
     args = ap.parse_args()
     logging.basicConfig(level=logging.INFO)
 
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = cfg.smoke()
+    if args.spec and args.temperature > 0:
+        log.warning("--spec is greedy-only; temperature>0 disables "
+                    "speculation and falls back to the scan decode path")
     mesh = make_host_mesh()
     shlib.set_sharding_ctx(shlib.make_ctx(mesh))
 
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
-    engine = Engine(cfg, params, max_len=args.prompt_len + args.max_new + 8)
+    # speculative rounds may overshoot into cache slack; reserve draft room
+    slack = 8 + 4 * args.spec
+    engine = Engine(cfg, params, max_len=args.prompt_len + args.max_new + slack)
     tokens = jax.random.randint(jax.random.PRNGKey(1),
                                 (args.batch, args.prompt_len), 0, cfg.vocab_size)
     gen = GenConfig(max_new_tokens=args.max_new, temperature=args.temperature,
@@ -50,13 +55,14 @@ def main():
 
     t0 = time.time()
     out, stats = engine.generate({"tokens": tokens}, gen)
+    jax.block_until_ready(out)
     dt = time.time() - t0
     new = args.batch * args.max_new
     log.info("generated %d tokens in %.2fs (%.1f tok/s)", new, dt, new / dt)
     if stats["proposed"]:
-        log.info("spec decode: %d/%d drafts accepted (%.0f%%)",
-                 stats["accepted"], stats["proposed"],
-                 100 * stats["accepted"] / stats["proposed"])
+        log.info("spec decode: %d rounds, %d/%d draft tokens accepted "
+                 "(rate %.2f)", stats["rounds"], stats["accepted"],
+                 stats["proposed"], stats["acceptance_rate"])
     print(jnp.asarray(out)[:, -args.max_new:])
 
 

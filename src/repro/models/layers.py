@@ -174,7 +174,9 @@ def init_attn_cache(cfg: ModelConfig, batch: int, max_len: int,
 
 def attention_step(p: Params, x_t: jax.Array, cache: Params, cfg: ModelConfig,
                    pos, *, window=None, cross_kv=None):
-    """One-token decode.  x_t: (B, 1, d); pos: scalar int32 current position."""
+    """One-token decode.  x_t: (B, 1, d); pos: scalar int32 current position,
+    or (B,) int32 per-row positions (rows diverge after partial draft
+    acceptance in batched speculative decoding)."""
     b = x_t.shape[0]
     dh, h, kvh = cfg.dh, cfg.n_heads, cfg.n_kv_heads
     if cross_kv is not None:
@@ -187,10 +189,12 @@ def attention_step(p: Params, x_t: jax.Array, cache: Params, cfg: ModelConfig,
         o = o.transpose(0, 2, 1, 3).reshape(b, 1, h * dh)
         return shard(o @ p["wo"].astype(x_t.dtype), "btd"), cache
 
-    posb = jnp.broadcast_to(pos, (b, 1))
+    pos = jnp.asarray(pos, jnp.int32)
+    per_row = pos.ndim == 1                              # (B,) positions
+    posb = pos[:, None] if per_row else jnp.broadcast_to(pos, (b, 1))
     q, k, v = _project_qkv(p, x_t, cfg)
     if cfg.mrope_sections is not None:
-        posb = jnp.broadcast_to(pos, (3, b, 1))
+        posb = jnp.broadcast_to(posb, (3, b, 1))
     q = apply_rope(q, posb, cfg.rope_theta, cfg.mrope_sections)
     k = apply_rope(k, posb, cfg.rope_theta, cfg.mrope_sections)
     q = q.transpose(0, 2, 1, 3)                          # (B, H, 1, dh)
@@ -198,10 +202,15 @@ def attention_step(p: Params, x_t: jax.Array, cache: Params, cfg: ModelConfig,
     v = v.transpose(0, 2, 1, 3)
     slots = cache["k"].shape[2]
     slot = pos % slots                                   # ring-buffer write
-    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype),
-                                             slot, axis=2)
-    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype),
-                                             slot, axis=2)
+    if per_row:
+        rows = jnp.arange(b)
+        ck = cache["k"].at[rows, :, slot].set(k[:, :, 0].astype(cache["k"].dtype))
+        cv = cache["v"].at[rows, :, slot].set(v[:, :, 0].astype(cache["v"].dtype))
+    else:
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), slot, axis=2)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), slot, axis=2)
     live = jnp.minimum(pos + 1, slots)
     if window is None:
         o = ops.decode_attention(q, ck, cv, cache_len=pos + 1)

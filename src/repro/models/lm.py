@@ -455,8 +455,8 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int, cross_len: int = 0,
 
 
 def decode_step(params: Params, cfg: ModelConfig, tokens_t, caches: dict, pos):
-    """One decode step.  tokens_t: (B, 1); pos: scalar int32.
-    Returns (logits (B,1,V), new caches)."""
+    """One decode step.  tokens_t: (B, 1); pos: scalar int32 or (B,) int32
+    per-row positions.  Returns (logits (B,1,V), new caches)."""
     b = tokens_t.shape[0]
     x = _embed(params, cfg, tokens_t, {"tokens": tokens_t})
     unit, n_rep, tail = _layout(cfg)
@@ -496,3 +496,92 @@ def decode_step(params: Params, cfg: ModelConfig, tokens_t, caches: dict, pos):
     x = L.apply_norm(params["final_norm"], x, cfg.norm_eps)
     logits = _logits(params, cfg, x)
     return logits, {"blocks": list(new_stacked), "tail": new_tail}
+
+
+# ---------------------------------------------------------------------------
+# serving: teacher-forced multi-token decode (draft verification)
+# ---------------------------------------------------------------------------
+
+def _snapshot_caches(cfg: ModelConfig, caches: dict) -> dict:
+    """The per-step rollback snapshot of a cache tree: everything except
+    global-attention K/V buffers (those are append-only at slot == pos and
+    masked by ``len``, so they roll back with an O(1) per-row length
+    truncation — ``kv_cache.truncate``) and cross-attention K/V (static
+    during decode).  What remains — recurrent states (rglru/mlstm/slstm),
+    local-window rings (O(window) slots by construction) and their lengths —
+    must be snapshotted because in-place updates destroy history."""
+    unit, n_rep, tail = _layout(cfg)
+
+    def strip(c, kind):
+        out = {kk: vv for kk, vv in c.items() if kk != "cross_kv"}
+        if kind == "attn":
+            out.pop("attn", None)
+        return out
+
+    return {"blocks": [strip(c, k) for c, k in zip(caches["blocks"], unit)],
+            "tail": [strip(c, k) for c, k in zip(caches["tail"], tail)]}
+
+
+def decode_multi(params: Params, cfg: ModelConfig, tokens, caches: dict, pos):
+    """Teacher-forced decode over ``T`` tokens in ONE compiled forward.
+
+    tokens: (B, T) int32 — token t is fed at position ``pos + t`` (per row).
+    pos: (B,) int32 start positions.  Caches must have per-row ``len``
+    leaves (see ``kv_cache.broadcast_lens``).
+
+    Returns ``(logits (B, T, V), caches, snaps)``: the logits of every
+    position, the caches after all T writes, and per-step rollback
+    snapshots (leading axis T; see ``_snapshot_caches``) for
+    ``rollback_caches`` after partial draft acceptance.
+
+    The loop over T is a ``jax.lax.scan`` — a single XLA program with zero
+    host syncs, the CPM carry-chain verification schedule: every layer's
+    state advances in place where it is stored while the host never sees an
+    intermediate token.
+    """
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        pos = jnp.broadcast_to(pos, (tokens.shape[0],))
+
+    def body(carry, tok_t):
+        caches, p = carry
+        logits, caches = decode_step(params, cfg, tok_t[:, None], caches, p)
+        return (caches, p + 1), (logits[:, 0], _snapshot_caches(cfg, caches))
+
+    (caches, _), (lg, snaps) = jax.lax.scan(
+        body, (caches, pos), jnp.transpose(tokens).astype(jnp.int32))
+    return jnp.moveaxis(lg, 0, 1), caches, snaps
+
+
+def rollback_caches(cfg: ModelConfig, caches: dict, snaps: dict, idx) -> dict:
+    """Roll a ``decode_multi`` result back to ``idx[b] + 1`` committed steps
+    per row (idx = n_emit - 1; every row commits at least one step).
+
+    Snapshotted leaves are gathered at the per-row step index.  Global-attn
+    K/V keep their final buffers: rejected entries sit at slots past the
+    accepted prefix, excluded by the subsequent per-row
+    ``kv_cache.truncate`` and deterministically overwritten by later writes
+    at the same positions.  Cross-attn K/V never changed.
+    """
+    unit, n_rep, tail = _layout(cfg)
+    idx = jnp.asarray(idx, jnp.int32)
+
+    def sel(leaf, baxis):
+        # leaf: (T, ..., B, ...) with the batch axis at `baxis`
+        moved = jnp.moveaxis(leaf, baxis, 0)              # (B, T, ...)
+        out = jax.vmap(lambda yb, i: yb[i])(moved, idx)   # (B, ...)
+        return jnp.moveaxis(out, 0, baxis - 1)
+
+    def merge(final_c, snap_c, kind, baxis):
+        out = {}
+        for kk, vv in final_c.items():
+            if kk == "cross_kv" or (kind == "attn" and kk == "attn"):
+                out[kk] = vv
+            else:
+                out[kk] = jax.tree.map(lambda s: sel(s, baxis), snap_c[kk])
+        return out
+
+    return {"blocks": [merge(c, sc, k, 2) for c, sc, k in
+                       zip(caches["blocks"], snaps["blocks"], unit)],
+            "tail": [merge(c, sc, k, 1) for c, sc, k in
+                     zip(caches["tail"], snaps["tail"], tail)]}

@@ -1,4 +1,6 @@
-from . import engine, kv_cache, sampling
+from . import engine, kv_cache, reference, sampling
 from .engine import Engine, GenConfig
+from .reference import ReferenceEngine
 
-__all__ = ["engine", "kv_cache", "sampling", "Engine", "GenConfig"]
+__all__ = ["engine", "kv_cache", "reference", "sampling",
+           "Engine", "GenConfig", "ReferenceEngine"]

@@ -1,12 +1,38 @@
-"""Serving engine: batched prefill + decode with CPM-powered extras.
+"""Scan-based batched serving engine with CPM-powered extras.
 
-* KV management: content-movable ops (see kv_cache.py).
-* Prompt-lookup speculative decoding: the draft comes from the paper's
-  content-searchable memory — the trailing n-gram is matched against the
-  already-generated context (~n concurrent steps), the continuation after
-  the latest match becomes the draft, and acceptance is the searchable
-  carry-chain (`verify_draft`).
-* Sampling truncation via content-comparable thresholds (sampling.py).
+Decode is a single compiled ``jax.lax.scan`` over fixed-shape state
+(current token, KV/recurrent caches, per-row positions, rng): the host
+launches ONE XLA program per generate call and syncs once at the end —
+zero per-token host round-trips, the serving analogue of the paper's
+"compute where the data lives" discipline.
+
+Speculative decoding (prompt-lookup drafts from the paper's
+content-searchable memory, §5) works at any batch size:
+
+  * the trailing n-gram of every row is matched against that row's
+    generated context concurrently (``searchable.ngram_lookup`` under
+    ``vmap`` — ~n concurrent compare steps per the paper);
+  * the whole ``draft_len``-token draft is verified in ONE teacher-forced
+    forward (``lm.decode_multi``, a scan inside one compiled program);
+  * acceptance per row is the searchable carry chain
+    (``searchable.verify_draft``);
+  * KV rollback after partial acceptance is a vectorized per-row
+    ``kv_cache.truncate`` (global attention: O(1) length clamp) plus
+    per-row snapshot selection for recurrent states and local-window
+    rings (``lm.rollback_caches``).
+
+Rows accept different draft prefixes, so positions and cache lengths are
+per-row vectors throughout (``kv_cache.broadcast_lens``).  Rows that
+reach their token budget early keep decoding into cache slack until the
+slowest row finishes; their extra tokens never reach the output buffer
+and never contaminate other rows (all cross-row state is batched
+element-wise).  Stats clip the final overshooting round, so
+``accepted``/``emitted`` count only tokens actually returned.
+
+Sampling truncation via content-comparable thresholds (sampling.py);
+KV management via content-movable ops (kv_cache.py).  The old
+step-by-step path lives on as the differential-test oracle in
+``reference.py``.
 """
 
 from __future__ import annotations
@@ -16,12 +42,11 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import searchable
 from repro.models import lm
-from . import sampling
+from . import kv_cache, sampling
 
 
 @dataclasses.dataclass
@@ -31,90 +56,204 @@ class GenConfig:
     top_k: int = 0
     top_p: float = 0.0
     ngram_spec: int = 0                # >0: prompt-lookup draft length
+    ngram_len: int = 3                 # trailing n-gram matched for drafts
+
+    def _key(self):
+        return (self.max_new_tokens, self.temperature, self.top_k,
+                self.top_p, self.ngram_spec, self.ngram_len)
 
 
 class Engine:
-    """Single-program batched engine (static batch, step-synchronous)."""
+    """Batched scan engine (static batch, fixed shapes, one program/call)."""
 
     def __init__(self, cfg: ModelConfig, params, max_len: int = 512,
                  jit: bool = True):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
-        self._prefill = jax.jit(functools.partial(lm.prefill, cfg=cfg),
-                                static_argnames=("max_len",)) if jit else \
-            functools.partial(lm.prefill, cfg=cfg)
-        self._decode = jax.jit(functools.partial(lm.decode_step, cfg=cfg)) if jit \
-            else functools.partial(lm.decode_step, cfg=cfg)
+        self._jit = jit
+
+        def maybe_jit(fn, **kw):
+            return jax.jit(fn, **kw) if jit else fn
+
+        self._prefill = maybe_jit(functools.partial(lm.prefill, cfg=cfg),
+                                  static_argnames=("max_len",))
+        # draft verification: ONE forward over all draft tokens per round
+        self._decode_multi = maybe_jit(functools.partial(lm.decode_multi,
+                                                         cfg=cfg))
+        self._programs: dict = {}
+
+    # -- public API --------------------------------------------------------
 
     def generate(self, batch: dict, gen: GenConfig, rng=None):
-        """Returns (tokens (B, prompt+new), per-step acceptance stats)."""
+        """Returns (tokens (B, prompt+new), stats).
+
+        stats: ``accepted`` / ``proposed`` draft-token counts (clipped to
+        the token budget), ``emitted`` total new tokens, ``rounds``
+        speculative rounds, ``acceptance_rate`` = accepted/proposed.
+        """
         rng = rng if rng is not None else jax.random.PRNGKey(0)
         tokens = jnp.asarray(batch["tokens"], jnp.int32)
         b, s = tokens.shape
+        if gen.max_new_tokens <= 0:
+            return tokens, {"accepted": 0, "proposed": 0, "rounds": 0,
+                            "emitted": 0, "acceptance_rate": 0.0}
         logits, caches = self._prefill(self.params, batch=batch,
                                        max_len=self.max_len)
-        out = tokens
-        pos = s
-        stats = {"accepted": 0, "proposed": 0}
-        nxt = self._sample(logits[:, -1], gen, rng)
-        out = jnp.concatenate([out, nxt[:, None]], axis=1)
-
-        while out.shape[1] - s < gen.max_new_tokens:
-            rng, sub = jax.random.split(rng)
-            if gen.ngram_spec and out.shape[1] > gen.ngram_spec + 2 and b == 1:
-                out, caches, pos, acc, prop = self._spec_round(
-                    out, caches, pos, gen, sub)
-                stats["accepted"] += acc
-                stats["proposed"] += prop
-            else:
-                logits, caches = self._decode(self.params, tokens_t=out[:, -1:],
-                                              caches=caches,
-                                              pos=jnp.asarray(pos, jnp.int32))
-                pos += 1
-                nxt = self._sample(logits[:, -1], gen, sub)
-                out = jnp.concatenate([out, nxt[:, None]], axis=1)
+        caches = kv_cache.broadcast_lens(caches, b)
+        pos = jnp.full((b,), s, jnp.int32)
+        spec = (gen.ngram_spec > 0 and gen.temperature <= 0
+                and s >= min(gen.ngram_len, s - 1) + 2)
+        if spec:
+            out, stats = self._generate_spec(tokens, logits, caches, pos, gen)
+        else:
+            out, stats = self._generate_scan(tokens, logits, caches, pos,
+                                             gen, rng)
+        prop = stats["proposed"]
+        stats["acceptance_rate"] = stats["accepted"] / prop if prop else 0.0
         return out[:, : s + gen.max_new_tokens], stats
 
     def _sample(self, logits, gen: GenConfig, rng):
-        return sampling.sample(logits, rng, gen.temperature, gen.top_k, gen.top_p)
+        return sampling.sample(logits, rng, gen.temperature, gen.top_k,
+                               gen.top_p)
 
-    # -- prompt-lookup speculative decoding (content-searchable memory) ----
+    # -- non-speculative: one scan program, zero per-token syncs -----------
 
-    def _spec_round(self, out, caches, pos, gen: GenConfig, rng):
-        n = min(3, out.shape[1] - 1)
-        ctx = out[0]
-        ngram = ctx[-n:]
-        starts, valid = searchable.ngram_lookup(ctx[:-1], ngram,
-                                                max_out=1)
+    def _generate_scan(self, tokens, logits, caches, pos, gen: GenConfig,
+                       rng):
+        b, s = tokens.shape
+        run = self._program("scan", gen, self._build_scan, gen)
+        seq, _, _ = run(self.params, logits, caches, pos, rng)
+        out = jnp.concatenate([tokens, seq], axis=1)
+        return out, {"accepted": 0, "proposed": 0, "rounds": 0,
+                     "emitted": b * gen.max_new_tokens}
+
+    def _build_scan(self, gen: GenConfig):
+        steps = gen.max_new_tokens
+        cfg = self.cfg
+
+        def run(params, logits0, caches, pos, rng):
+            first = self._sample(logits0[:, -1], gen, rng)
+
+            def body(carry, _):
+                tok, caches, pos, rng = carry
+                rng, sub = jax.random.split(rng)
+                logits, caches = lm.decode_step(params, cfg, tok[:, None],
+                                                caches, pos)
+                nxt = self._sample(logits[:, -1], gen, sub)
+                return (nxt, caches, pos + 1, rng), nxt
+
+            (_, caches, pos, _), toks = jax.lax.scan(
+                body, (first, caches, pos, rng), None, length=steps - 1)
+            seq = jnp.concatenate([first[:, None], jnp.moveaxis(toks, 0, 1)],
+                                  axis=1)
+            return seq, caches, pos
+
+        return jax.jit(run) if self._jit else run
+
+    # -- batched prompt-lookup speculative decoding ------------------------
+
+    def _generate_spec(self, tokens, logits, caches, pos, gen: GenConfig):
+        b, s = tokens.shape
+        max_new = gen.max_new_tokens
+        # an active row's last verify round can write up to draft_len - 1
+        # KV slots past its budget; without this slack the global-attn
+        # slot write (pos % slots) would wrap onto live prompt KV
+        need = s + max_new + gen.ngram_spec - 1
+        if self.max_len < need:
+            raise ValueError(
+                f"speculative decoding needs max_len >= prompt + "
+                f"max_new_tokens + ngram_spec - 1 = {need}, got "
+                f"{self.max_len}")
+        buf = jnp.zeros((b, s + max_new), jnp.int32).at[:, :s].set(tokens)
+        buf = buf.at[:, s].set(sampling.greedy(logits[:, -1]))
+        n_new = jnp.ones((b,), jnp.int32)
+        stats = {"accepted": 0, "proposed": 0, "rounds": 0, "emitted": b}
+
+        draft_prog = self._program(("draft", s), gen, self._build_draft,
+                                   s, gen)
+        commit_prog = self._program(("commit", s), gen, self._build_commit,
+                                    s, gen)
+        while int(jnp.min(n_new)) < max_new:             # one sync per round
+            seq, draft = draft_prog(buf, n_new)
+            logits, caches, snaps = self._decode_multi(
+                self.params, tokens=seq, caches=caches, pos=pos)
+            buf, n_new, caches, pos, acc, prop, emit = commit_prog(
+                buf, n_new, caches, snaps, draft, logits, pos)
+            stats["accepted"] += int(acc)
+            stats["proposed"] += int(prop)
+            stats["emitted"] += int(emit)
+            stats["rounds"] += 1
+        return buf, stats
+
+    def _build_draft(self, s: int, gen: GenConfig):
+        """(buf, n_new) -> (seq (B,T) verification input, draft (B,T))."""
         draft_len = gen.ngram_spec
-        if bool(valid[0]):
-            st = int(starts[0])
-            draft = np.asarray(ctx[st: st + draft_len])
-            draft = np.pad(draft, (0, draft_len - draft.shape[0]),
-                           constant_values=0)
-        else:
-            draft = np.zeros((draft_len,), np.int32)     # degenerate draft
-        draft = jnp.asarray(draft, jnp.int32)
+        n = min(gen.ngram_len, s - 1)
 
-        # verify: run the model over [last_token, draft[:-1]] step by step,
-        # sampling greedily; acceptance = searchable carry chain.
-        seq = jnp.concatenate([out[0, -1:], draft[:-1]])
-        preds = []
-        c = caches
-        p = pos
-        for t in range(draft_len):
-            logits, c = self._decode(self.params, tokens_t=seq[t][None, None],
-                                     caches=c, pos=jnp.asarray(p, jnp.int32))
-            preds.append(sampling.greedy(logits[:, -1])[0])
-            p += 1
-        preds = jnp.stack(preds)                          # model's tokens
-        n_acc = int(searchable.verify_draft(draft, preds))
-        n_emit = min(n_acc + 1, draft_len)                # +1 model token
-        emitted = jnp.where(jnp.arange(draft_len) < n_acc, draft, preds)[:n_emit]
-        out = jnp.concatenate([out, emitted[None]], axis=1)
-        # rollback cache entries past the accepted prefix (movable delete)
-        from . import kv_cache
-        new_pos = pos + n_emit
-        c = kv_cache.truncate(c, jnp.asarray(new_pos, jnp.int32))
-        return out, c, new_pos, n_acc, draft_len
+        def run(buf, n_new):
+            b, cap = buf.shape
+            rows = jnp.arange(b)
+            total = s + n_new                            # (B,) live lengths
+            # trailing n-gram per row
+            gidx = total[:, None] - n + jnp.arange(n)[None]
+            ngram = buf[rows[:, None], gidx]
+            # search context = live tokens minus the final one (the trailing
+            # self-match must not count); dead slots get -1, matching nothing
+            live = jnp.arange(cap)[None] < (total - 1)[:, None]
+            ctx = jnp.where(live, buf, -1)
+            starts, valid = jax.vmap(
+                functools.partial(searchable.ngram_lookup, max_out=1))(
+                    ctx, ngram)
+            start, ok = starts[:, 0], valid[:, 0]
+            # draft = continuation after the earliest historical occurrence,
+            # zero-padded past the live region (degenerate rows draft zeros)
+            didx = start[:, None] + jnp.arange(draft_len)[None]
+            vals = buf[rows[:, None], jnp.minimum(didx, cap - 1)]
+            draft = jnp.where(ok[:, None] & (didx < total[:, None]), vals, 0)
+            last = buf[rows, total - 1]
+            seq = jnp.concatenate([last[:, None], draft[:, :-1]], axis=1)
+            return seq, draft
+
+        return jax.jit(run) if self._jit else run
+
+    def _build_commit(self, s: int, gen: GenConfig):
+        """Acceptance, rollback, and output-buffer commit for one round."""
+        draft_len, max_new = gen.ngram_spec, gen.max_new_tokens
+        cfg = self.cfg
+
+        def run(buf, n_new, caches, snaps, draft, logits, pos):
+            b, cap = buf.shape
+            rows = jnp.arange(b)
+            preds = sampling.greedy(logits)              # (B, T) greedy
+            n_acc = searchable.verify_draft(draft, preds)         # (B,)
+            n_emit = jnp.minimum(n_acc + 1, draft_len)   # always >= 1
+            # rollback: snapshots for recurrent/ring state, then the
+            # vectorized per-row length truncation for global-attn KV
+            caches = lm.rollback_caches(cfg, caches, snaps, n_emit - 1)
+            new_pos = pos + n_emit
+            caches = kv_cache.truncate(caches, new_pos)
+            # commit emitted tokens (= preds over the kept prefix) at
+            # per-row offsets; rows past their budget write nothing
+            remaining = jnp.maximum(max_new - n_new, 0)
+            emit_n = jnp.minimum(n_emit, remaining)
+            tidx = jnp.arange(draft_len)[None]
+            widx = s + n_new[:, None] + tidx
+            widx = jnp.where(tidx < emit_n[:, None], widx, cap)
+            buf = buf.at[rows[:, None], widx].set(preds, mode="drop")
+            n_new = n_new + emit_n
+            acc = jnp.sum(jnp.minimum(n_acc, emit_n))
+            # proposed, like accepted, counts only draft tokens within the
+            # budget, so acceptance_rate reflects returned tokens
+            prop = jnp.sum(jnp.minimum(draft_len, remaining))
+            return buf, n_new, caches, new_pos, acc, prop, jnp.sum(emit_n)
+
+        return jax.jit(run) if self._jit else run
+
+    # -- compiled-program cache -------------------------------------------
+
+    def _program(self, name, gen: GenConfig, builder, *args):
+        key = (name, gen._key())
+        if key not in self._programs:
+            self._programs[key] = builder(*args)
+        return self._programs[key]

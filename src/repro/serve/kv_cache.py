@@ -39,12 +39,51 @@ def truncate(caches, new_len):
 
     A range delete in content-movable terms; entries need not be zeroed
     (the `len` mask excludes them) — we update lengths only, O(1).
+
+    ``new_len`` may be a scalar or a per-row ``(B,)`` vector: after batched
+    speculative decoding each row accepts a different draft prefix, so each
+    row rolls back to its own length.  ``len`` leaves broadcast against it
+    (scalar, ``(B,)``, or rep-stacked ``(R, B)`` all work).
+
+    Cross-attention caches (``cross_kv``) hold *encoder* content — their
+    length is the encoder sequence, not a decoder position — so they are
+    never truncated.
     """
+    new_len = jnp.asarray(new_len, jnp.int32)
+
     def walk(node):
         if isinstance(node, dict):
             if "len" in node and "k" in node:
                 return dict(node, len=jnp.minimum(node["len"], new_len))
-            return {kk: walk(vv) for kk, vv in node.items()}
+            return {kk: vv if kk == "cross_kv" else walk(vv)
+                    for kk, vv in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)([walk(x) for x in node])
+        return node
+    return walk(caches)
+
+
+def broadcast_lens(caches, batch: int):
+    """Give every ``len`` leaf a trailing per-row ``(batch,)`` axis.
+
+    Prefill produces scalar lengths (all rows equal).  The batched engine
+    needs per-row lengths — rows diverge after partial draft acceptance —
+    and shape-stable scan carries (``attention_step`` returns ``pos + 1``
+    which is ``(B,)`` under per-row decode).  Call once, on fresh prefill
+    caches: a scalar leaf becomes ``(B,)``, a rep-stacked ``(R,)`` leaf
+    becomes ``(R, B)``.
+    """
+    def walk(node):
+        if isinstance(node, dict):
+            out = {}
+            for kk, vv in node.items():
+                if kk == "len":
+                    lv = jnp.asarray(vv, jnp.int32)
+                    out[kk] = jnp.broadcast_to(lv[..., None],
+                                               lv.shape + (batch,))
+                else:
+                    out[kk] = walk(vv)
+            return out
         if isinstance(node, (list, tuple)):
             return type(node)([walk(x) for x in node])
         return node

@@ -1,0 +1,118 @@
+"""Step-by-step reference engine — the differential-test oracle.
+
+This is the original (pre-scan) serving path, kept verbatim in spirit: a
+Python ``while`` loop with one ``lm.decode_step`` call — and one host
+sync — per token, and a batch-size-1 prompt-lookup speculative round that
+re-invokes ``decode_step`` once per draft token.  It is slow on purpose:
+its value is that every intermediate is observable and the control flow is
+trivially auditable, so ``tests/test_engine_equiv.py`` can assert the
+scan-based production engine (``engine.Engine``) is token-identical to it.
+
+Scope notes (inherited limitations, acceptable in an oracle):
+  * speculative rounds support batch == 1 only and global-attention KV
+    rollback only (``kv_cache.truncate``); the production engine handles
+    batch > 1, recurrent-state rollback and local-window rings.
+  * ``stats["accepted"]`` counts tokens of the final round even when they
+    overshoot ``max_new_tokens`` and are sliced off; the production engine
+    reports clipped counts.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import searchable
+from repro.models import lm
+from . import kv_cache, sampling
+from .engine import GenConfig
+
+
+class ReferenceEngine:
+    """Single-program batched engine (static batch, step-synchronous)."""
+
+    def __init__(self, cfg: ModelConfig, params, max_len: int = 512,
+                 jit: bool = True):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self._prefill = jax.jit(functools.partial(lm.prefill, cfg=cfg),
+                                static_argnames=("max_len",)) if jit else \
+            functools.partial(lm.prefill, cfg=cfg)
+        self._decode = jax.jit(functools.partial(lm.decode_step, cfg=cfg)) if jit \
+            else functools.partial(lm.decode_step, cfg=cfg)
+
+    def generate(self, batch: dict, gen: GenConfig, rng=None):
+        """Returns (tokens (B, prompt+new), per-step acceptance stats)."""
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        tokens = jnp.asarray(batch["tokens"], jnp.int32)
+        b, s = tokens.shape
+        logits, caches = self._prefill(self.params, batch=batch,
+                                       max_len=self.max_len)
+        out = tokens
+        pos = s
+        stats = {"accepted": 0, "proposed": 0}
+        nxt = self._sample(logits[:, -1], gen, rng)
+        out = jnp.concatenate([out, nxt[:, None]], axis=1)
+
+        while out.shape[1] - s < gen.max_new_tokens:
+            rng, sub = jax.random.split(rng)
+            if gen.ngram_spec and out.shape[1] > gen.ngram_spec + 2 and b == 1:
+                out, caches, pos, acc, prop = self._spec_round(
+                    out, caches, pos, gen, sub)
+                stats["accepted"] += acc
+                stats["proposed"] += prop
+            else:
+                logits, caches = self._decode(self.params, tokens_t=out[:, -1:],
+                                              caches=caches,
+                                              pos=jnp.asarray(pos, jnp.int32))
+                pos += 1
+                nxt = self._sample(logits[:, -1], gen, sub)
+                out = jnp.concatenate([out, nxt[:, None]], axis=1)
+        return out[:, : s + gen.max_new_tokens], stats
+
+    def _sample(self, logits, gen: GenConfig, rng):
+        return sampling.sample(logits, rng, gen.temperature, gen.top_k, gen.top_p)
+
+    # -- prompt-lookup speculative decoding (content-searchable memory) ----
+
+    def _spec_round(self, out, caches, pos, gen: GenConfig, rng):
+        n = min(gen.ngram_len, out.shape[1] - 1)
+        ctx = out[0]
+        ngram = ctx[-n:]
+        starts, valid = searchable.ngram_lookup(ctx[:-1], ngram,
+                                                max_out=1)
+        draft_len = gen.ngram_spec
+        if bool(valid[0]):
+            st = int(starts[0])
+            draft = np.asarray(ctx[st: st + draft_len])
+            draft = np.pad(draft, (0, draft_len - draft.shape[0]),
+                           constant_values=0)
+        else:
+            draft = np.zeros((draft_len,), np.int32)     # degenerate draft
+        draft = jnp.asarray(draft, jnp.int32)
+
+        # verify: run the model over [last_token, draft[:-1]] step by step,
+        # sampling greedily; acceptance = searchable carry chain.
+        seq = jnp.concatenate([out[0, -1:], draft[:-1]])
+        preds = []
+        c = caches
+        p = pos
+        for t in range(draft_len):
+            logits, c = self._decode(self.params, tokens_t=seq[t][None, None],
+                                     caches=c, pos=jnp.asarray(p, jnp.int32))
+            preds.append(sampling.greedy(logits[:, -1])[0])
+            p += 1
+        preds = jnp.stack(preds)                          # model's tokens
+        n_acc = int(searchable.verify_draft(draft, preds))
+        n_emit = min(n_acc + 1, draft_len)                # +1 model token
+        emitted = jnp.where(jnp.arange(draft_len) < n_acc, draft, preds)[:n_emit]
+        out = jnp.concatenate([out, emitted[None]], axis=1)
+        # rollback cache entries past the accepted prefix (movable delete)
+        new_pos = pos + n_emit
+        c = kv_cache.truncate(c, jnp.asarray(new_pos, jnp.int32))
+        return out, c, new_pos, n_acc, draft_len

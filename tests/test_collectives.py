@@ -1,14 +1,18 @@
 """Distributed CPM collectives — run in a subprocess with 8 host devices so
 the main test process keeps the default single-device view."""
 
+import os
 import subprocess
 import sys
 
 import pytest
 
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
 SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ.setdefault("JAX_PLATFORMS", "cpu")   # never probe TPU backends
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -89,6 +93,7 @@ print("ALL_OK")
 def test_collectives_8dev():
     r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
                        text=True, timeout=600,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
-                       cwd="/root/repo")
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "JAX_PLATFORMS": "cpu"},
+                       cwd=REPO_ROOT)
     assert "ALL_OK" in r.stdout, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"

@@ -1,0 +1,149 @@
+"""Property tests for speculative-rollback KV-cache semantics.
+
+The contract behind `kv_cache.truncate`: after writing a draft into the
+cache and truncating back to the accepted length, the cache must be
+*observationally* identical to one where the rejected tokens were never
+written — including per-row accepted lengths at batch > 1.  Observable
+means: every masked-visible slot matches, and decode attention over the
+cache produces the same output.  (Rejected slots are not zeroed — the
+`len` mask excludes them and later writes overwrite them in place; that
+is the paper's O(1) content-movable range delete.)
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.serve import kv_cache
+
+KVH, DH, SLOTS = 2, 4, 16
+
+
+def _cache(b, rng):
+    k = jnp.asarray(rng.normal(size=(b, KVH, SLOTS, DH)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, KVH, SLOTS, DH)), jnp.float32)
+    return k, v
+
+
+class TestTruncateRollback:
+    @given(st.integers(0, 100), st.integers(2, 4), st.integers(1, 5))
+    @settings(max_examples=20, deadline=None)
+    def test_truncate_equals_never_written(self, seed, b, draft_len):
+        """Write a draft at slots len0..len0+T-1 per row, accept a random
+        per-row prefix, truncate — attention output must equal a cache that
+        only ever saw the accepted tokens."""
+        rng = np.random.default_rng(seed)
+        len0 = jnp.asarray(rng.integers(1, SLOTS - draft_len, size=b),
+                           jnp.int32)
+        acc = jnp.asarray(rng.integers(0, draft_len + 1, size=b), jnp.int32)
+        k, v = _cache(b, rng)
+        draft_k = jnp.asarray(rng.normal(size=(b, KVH, draft_len, DH)),
+                              jnp.float32)
+        draft_v = jnp.asarray(rng.normal(size=(b, KVH, draft_len, DH)),
+                              jnp.float32)
+
+        def write(k, v, count):
+            """Write `count[b]` draft entries at per-row slots."""
+            rows = jnp.arange(b)[:, None]
+            t = jnp.arange(draft_len)[None]
+            idx = jnp.where(t < count[:, None], len0[:, None] + t, SLOTS)
+            kk = k.at[rows, :, idx].set(
+                jnp.moveaxis(draft_k, 2, 1), mode="drop")
+            vv = v.at[rows, :, idx].set(
+                jnp.moveaxis(draft_v, 2, 1), mode="drop")
+            return kk, vv
+
+        # full draft written, then rolled back to len0 + acc
+        full_k, full_v = write(k, v, jnp.full((b,), draft_len, jnp.int32))
+        tree = {"attn": {"k": full_k, "v": full_v, "len": len0 + draft_len}}
+        tree = kv_cache.truncate(tree, len0 + acc)
+        new_len = tree["attn"]["len"]
+        np.testing.assert_array_equal(np.asarray(new_len),
+                                      np.asarray(len0 + acc))
+        # oracle: only the accepted tokens were ever written
+        okk, okv = write(k, v, acc)
+
+        # 1) every visible slot identical
+        vis = jnp.arange(SLOTS)[None] < new_len[:, None]        # (B, S)
+        m = vis[:, None, :, None]
+        np.testing.assert_array_equal(
+            np.where(np.asarray(m), np.asarray(tree["attn"]["k"]), 0.0),
+            np.where(np.asarray(m), np.asarray(okk), 0.0))
+        # 2) decode attention over the cache identical
+        q = jnp.asarray(rng.normal(size=(b, KVH * 2, 1, DH)), jnp.float32)
+        out_t = ref.decode_attention_ref(q, tree["attn"]["k"],
+                                         tree["attn"]["v"], new_len)
+        out_o = ref.decode_attention_ref(q, okk, okv, new_len)
+        np.testing.assert_allclose(np.asarray(out_t), np.asarray(out_o),
+                                   rtol=0, atol=0)
+
+    @given(st.integers(0, 50), st.integers(2, 4))
+    @settings(max_examples=15, deadline=None)
+    def test_rejected_slots_overwritten_by_later_writes(self, seed, b):
+        """After truncation, the next decode writes land exactly on the
+        stale slots, so the rejected draft can never be observed later."""
+        rng = np.random.default_rng(seed)
+        len0 = jnp.asarray(rng.integers(1, SLOTS - 3, size=b), jnp.int32)
+        k, v = _cache(b, rng)
+        stale = jnp.asarray(rng.normal(size=(b, KVH, DH)), jnp.float32)
+        fresh = jnp.asarray(rng.normal(size=(b, KVH, DH)), jnp.float32)
+        rows = jnp.arange(b)
+        # stale write at per-row slot len0 (a rejected draft token), then a
+        # committed write at the same per-row position
+        k1 = k.at[rows, :, len0].set(stale)
+        k2 = k1.at[rows, :, len0].set(fresh)
+        np.testing.assert_array_equal(
+            np.asarray(k2[rows, :, len0]), np.asarray(fresh))
+
+    def test_truncate_scalar_and_vector_agree(self):
+        tree = {"attn": {"k": jnp.zeros((3, KVH, SLOTS, DH)),
+                         "v": jnp.zeros((3, KVH, SLOTS, DH)),
+                         "len": jnp.full((3,), 9, jnp.int32)}}
+        a = kv_cache.truncate(tree, 5)
+        bb = kv_cache.truncate(tree, jnp.full((3,), 5, jnp.int32))
+        np.testing.assert_array_equal(np.asarray(a["attn"]["len"]),
+                                      np.asarray(bb["attn"]["len"]))
+
+    def test_truncate_preserves_cross_kv(self):
+        """Cross-attention caches hold encoder content: their length is the
+        encoder sequence, never a decoder position — rollback must not
+        clamp them."""
+        tree = {"attn": {"k": jnp.zeros((2, KVH, SLOTS, DH)),
+                         "v": jnp.zeros((2, KVH, SLOTS, DH)),
+                         "len": jnp.full((2,), 10, jnp.int32)},
+                "cross_kv": {"k": jnp.zeros((2, KVH, 50, DH)),
+                             "v": jnp.zeros((2, KVH, 50, DH)),
+                             "len": jnp.full((2,), 50, jnp.int32)}}
+        out = kv_cache.truncate(tree, jnp.asarray([5, 7], jnp.int32))
+        np.testing.assert_array_equal(np.asarray(out["attn"]["len"]), [5, 7])
+        np.testing.assert_array_equal(np.asarray(out["cross_kv"]["len"]),
+                                      [50, 50])
+
+    def test_truncate_rep_stacked_lens(self):
+        """Block caches stack a rep axis in front: (R, B) lens must clamp
+        against (B,) per-row targets by broadcast."""
+        tree = {"attn": {"k": jnp.zeros((2, 3, KVH, SLOTS, DH)),
+                         "v": jnp.zeros((2, 3, KVH, SLOTS, DH)),
+                         "len": jnp.full((2, 3), 10, jnp.int32)}}
+        out = kv_cache.truncate(tree, jnp.asarray([4, 10, 7], jnp.int32))
+        np.testing.assert_array_equal(np.asarray(out["attn"]["len"]),
+                                      [[4, 10, 7], [4, 10, 7]])
+
+
+class TestBroadcastLens:
+    def test_scalar_and_stacked(self):
+        tree = {"blocks": [{"attn": {"k": jnp.zeros((2, 3, KVH, SLOTS, DH)),
+                                     "v": jnp.zeros((2, 3, KVH, SLOTS, DH)),
+                                     "len": jnp.full((2,), 6, jnp.int32)}}],
+                "tail": [{"attn": {"k": jnp.zeros((3, KVH, SLOTS, DH)),
+                                   "v": jnp.zeros((3, KVH, SLOTS, DH)),
+                                   "len": jnp.asarray(6, jnp.int32)}}]}
+        out = kv_cache.broadcast_lens(tree, 3)
+        assert out["blocks"][0]["attn"]["len"].shape == (2, 3)
+        assert out["tail"][0]["attn"]["len"].shape == (3,)
+        np.testing.assert_array_equal(
+            np.asarray(out["tail"][0]["attn"]["len"]), [6, 6, 6])
+        # K/V untouched
+        assert out["tail"][0]["attn"]["k"].shape == (3, KVH, SLOTS, DH)
