@@ -14,17 +14,24 @@ instruction-cycle *complexity* claims rather than wall-clock tables:
 
 Each bench validates the claim in the *concurrent-step* currency (derived
 column) and reports wall-clock us_per_call of the TPU-adapted JAX lowering.
-Output: ``name,us_per_call,derived`` CSV.
+Step counts come from the op table (``repro.cpm.optable``) — the single
+source of truth the `CPMArray` surface registers each op in — and the
+``cpm_ops`` scenario cross-checks them against trip counts *measured* from
+the lowered jaxprs.  Output: ``name,us_per_call,derived`` CSV.
+
+Usage: ``python benchmarks/run.py [scenario ...]`` (default: all).
 """
 
+import sys
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import core
-from repro.core import comparable, computable, movable, searchable
+from repro.cpm import OP_TABLE, cpm_array, op_steps
+from repro.cpm.reference import (comparable, computable, movable, pe_array,
+                                 searchable)
 
 ROWS = []
 
@@ -43,6 +50,28 @@ def row(name, us, derived):
     print(f"{name},{us:.1f},{derived}", flush=True)
 
 
+def run_subbench(script: str, prefix: str):
+    """Run a bench script in a fresh 8-host-device subprocess (multi-device
+    setups need XLA flags set before jax imports) and collect its CSV rows."""
+    import os
+    import subprocess
+    preamble = (
+        'import os\n'
+        'os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"\n'
+        'os.environ.setdefault("JAX_PLATFORMS", "cpu")\n')
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    r = subprocess.run([sys.executable, "-c", preamble + script],
+                       capture_output=True, text=True, cwd=root,
+                       env=dict(os.environ, PYTHONPATH="src",
+                                JAX_PLATFORMS="cpu"))
+    assert r.returncode == 0, f"{prefix} subbench failed:\n{r.stderr}"
+    for line in r.stdout.strip().splitlines():
+        if line.startswith(prefix):
+            print(line, flush=True)
+            parts = line.split(",")
+            ROWS.append((parts[0], float(parts[1]), parts[2]))
+
+
 # -- T1: universal ops ------------------------------------------------------
 
 def bench_universal_ops():
@@ -53,7 +82,7 @@ def bench_universal_ops():
         vals = jnp.array([7, 8])
         g = jax.jit(lambda x: movable.insert(x, n // 4, vals, n - 4))
         row(f"T1_insert_N{n}", timeit(g, x), "steps=2")
-        h = jax.jit(lambda x: core.count_matches(comparable.compare(x, n // 2, "lt")))
+        h = jax.jit(lambda x: pe_array.count_matches(comparable.compare(x, n // 2, "lt")))
         row(f"T1_compare_count_N{n}", timeit(h, x), "steps=1")
 
 
@@ -106,7 +135,7 @@ def bench_sort():
         row(f"T5_local_phase_N{n}", timeit(g, x, reps=5), f"steps={m}=sqrtN")
         # disorder left after sqrt(N) local steps (paper: defects spread out)
         after = computable.odd_even_sort(x, m)
-        d = int(core.count_disorder(after))
+        d = int(computable.count_disorder(after))
         row(f"T5_defects_after_sqrtN_N{n}", 0.0, f"defects={d}~N/M={n // m}")
 
 
@@ -134,16 +163,11 @@ def bench_line_detect():
 # -- T8: collective schedules (R7 ring vs super-connectivity tree) -----------
 
 def bench_collectives():
-    import subprocess
-    import sys
     script = r"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-os.environ.setdefault("JAX_PLATFORMS", "cpu")   # never probe TPU backends
 import jax, jax.numpy as jnp, time
 from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
-from repro.core import collectives
+from repro.cpm import collectives
 mesh = jax.make_mesh((8,), ("data",))
 x = jnp.ones((8, 4096))
 for name, fn in [
@@ -160,17 +184,110 @@ for name, fn in [
     steps = {"ring": 7, "tree": 3, "psum": 3}[name]
     print(f"T8_allreduce_{name}_8dev,{us:.1f},steps={steps}")
 """
-    import os
-    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
-                       text=True, cwd=root,
-                       env=dict(os.environ, PYTHONPATH="src",
-                                JAX_PLATFORMS="cpu"))
-    for line in r.stdout.strip().splitlines():
-        if line.startswith("T8"):
-            print(line, flush=True)
-            parts = line.split(",")
-            ROWS.append((parts[0], float(parts[1]), parts[2]))
+    run_subbench(script, "T8")
+
+
+# -- cpm_ops: the CPMArray surface, per backend, against the op table --------
+
+def measured_steps(fn, *args):
+    """Concurrent-step count *measured* from the lowered jaxpr.
+
+    Scan trip counts are the sequential concurrent-step structure (each scan
+    iteration is one broadcast instruction cycle); everything else in the
+    lowering is a constant number of full-array vector ops.  Returns
+    ``(scan_steps, loop_free)``.
+    """
+    closed = jax.make_jaxpr(fn)(*args)
+    total, loops = 0, 0
+
+    def walk(jaxpr):
+        nonlocal total, loops
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "scan":
+                total += int(eqn.params["length"])
+                loops += 1
+            elif eqn.primitive.name == "while":
+                loops += 1
+            for v in eqn.params.values():
+                if hasattr(v, "jaxpr"):
+                    walk(v.jaxpr)
+
+    walk(closed.jaxpr)
+    return total, loops == 0
+
+
+def bench_cpm_ops():
+    """Time every registered op per backend; assert the measured concurrent
+    step structure against the formula the op table registers (PR-2)."""
+    n, m = 4096, 8
+    data = jax.random.randint(jax.random.PRNGKey(0), (n,), 0, 16)
+    fdata = data.astype(jnp.float32)
+    needle = data[100:100 + m]
+    edges = jnp.linspace(0, 16, m + 1).astype(jnp.int32)
+    template = fdata[7:7 + m]
+    taps = (1.0, 2.0, 1.0)
+
+    calls = {
+        "activate": lambda a: a.activate(n // 4, n // 2, 4),
+        "shift": lambda a: a.shift(n // 4, n // 2, 1).data,
+        "insert": lambda a: a.insert(n // 4, jnp.array([7, 8])).data,
+        "delete": lambda a: a.delete(n // 4, 2).data,
+        "substring_match": lambda a: a.substring_match(needle),
+        "compare": lambda a: a.compare(8, "lt"),
+        "histogram": lambda a: a.histogram(edges),
+        "section_sum": lambda a: a.section_sum(),
+        "global_limit": lambda a: a.global_limit("max"),
+        "sort": lambda a: a.sort().data,
+        "template_match": lambda a: a.template_match(template),
+        "stencil": lambda a: a.stencil(taps),
+    }
+    # reference lowerings whose step structure is a literal scan: the jaxpr
+    # trip count must equal the registered formula
+    scan_structured = {"substring_match", "template_match"}
+    # ops lowering to a constant number of vector ops: the jaxpr must be
+    # loop-free (O(1) concurrent steps regardless of N)
+    loop_free = {"activate", "shift", "insert", "delete", "compare",
+                 "histogram", "section_sum", "global_limit", "stencil"}
+
+    for op, call in calls.items():
+        spec = OP_TABLE[op]
+        m_op = len(taps) if op == "stencil" else m
+        formula = op_steps(op, n=n, m=m_op)    # bound-checked at evaluation
+        for backend in ("reference", "pallas"):
+            if backend not in spec.backends:
+                continue
+            arr = cpm_array((fdata if op in ("template_match", "stencil")
+                             else data), n - 7, backend=backend,
+                            interpret=(True if backend == "pallas" else None))
+            f = jax.jit(lambda a, call=call: call(a))
+            us = timeit(f, arr, reps=3 if backend == "pallas" else 20)
+            if backend == "reference":
+                steps, no_loops = measured_steps(f, arr)
+                if op in scan_structured:
+                    assert steps == formula, (op, steps, formula)
+                elif op in loop_free:
+                    assert no_loops, f"{op}: unexpected loop in lowering"
+            row(f"CPM_{op}_{backend}_N{n}", us,
+                f"steps={formula};family={spec.family};paper={spec.paper}")
+
+    # mesh backend (chips as PEs) for its table entries, on 8 host devices
+    script = r"""
+import jax, jax.numpy as jnp, time
+from repro.cpm import cpm_array
+data = jax.random.randint(jax.random.PRNGKey(0), (4096,), 0, 16)
+for op, call in [("section_sum", lambda a: a.section_sum()),
+                 ("global_limit", lambda a: a.global_limit("max")),
+                 ("compare", lambda a: a.compare(8, "lt"))]:
+    arr = cpm_array(data, 4089, backend="mesh")
+    f = jax.jit(lambda a, call=call: call(a))
+    jax.block_until_ready(f(arr))
+    t0 = time.perf_counter()
+    for _ in range(20):
+        out = f(arr)
+    jax.block_until_ready(out)
+    print(f"CPM_{op}_mesh_N4096,{(time.perf_counter()-t0)/20*1e6:.1f},devices=8")
+"""
+    run_subbench(script, "CPM_")
 
 
 # -- LM system benches -------------------------------------------------------
@@ -252,19 +369,30 @@ def bench_engine_decode():
         f"rounds={stats['rounds']}")
 
 
-def main() -> None:
+SCENARIOS = {
+    "universal_ops": bench_universal_ops,
+    "substring": bench_substring,
+    "histogram": bench_histogram,
+    "section_sum": bench_section_sum,
+    "sort": bench_sort,
+    "template": bench_template,
+    "line_detect": bench_line_detect,
+    "collectives": bench_collectives,
+    "cpm_ops": bench_cpm_ops,
+    "moe_routing": bench_moe_routing,
+    "lm_smoke": bench_lm_smoke,
+    "engine_decode": bench_engine_decode,
+}
+
+
+def main(argv=None) -> None:
+    names = (argv if argv is not None else sys.argv[1:]) or list(SCENARIOS)
+    unknown = [s for s in names if s not in SCENARIOS]
+    if unknown:
+        raise SystemExit(f"unknown scenario(s) {unknown}; have {list(SCENARIOS)}")
     print("name,us_per_call,derived")
-    bench_universal_ops()
-    bench_substring()
-    bench_histogram()
-    bench_section_sum()
-    bench_sort()
-    bench_template()
-    bench_line_detect()
-    bench_collectives()
-    bench_moe_routing()
-    bench_lm_smoke()
-    bench_engine_decode()
+    for s in names:
+        SCENARIOS[s]()
 
 
 if __name__ == "__main__":

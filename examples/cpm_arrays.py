@@ -1,4 +1,7 @@
-"""The paper's array algorithms end-to-end (core CPM operator library).
+"""The paper's memory device through the unified `repro.cpm` surface.
+
+One `CPMArray`, three physical realizations (reference jnp, Pallas VMEM,
+shard_map mesh) — you issue broadcast instructions and never care which.
 
     PYTHONPATH=src python examples/cpm_arrays.py
 """
@@ -7,52 +10,69 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import core
-from repro.core import comparable, computable, movable, pe_array, searchable
+import repro.cpm as cpm
+from repro.cpm import cpm_array
 
 
 def main():
+    print("== One device, any backend (the paper's pin-compatibility)")
+    data = jnp.array(list(b"hello____world____"), dtype=jnp.int32)
+    mem = cpm_array(data, used_len=14)                 # backend="auto"
+    print(f"  n={mem.n} used_len={int(mem.used_len)} backend={mem.backend}")
+
     print("== Rule 4: general decoder (range + carry activation)")
-    mask = core.activation_mask(24, start=4, end=20, carry=4)
+    mask = cpm_array(jnp.zeros(24, jnp.int32)).activate(start=4, end=20, carry=4)
     print("  active PEs:", np.where(np.asarray(mask))[0].tolist())
 
-    print("== Content movable: in-place object editing")
-    mem = jnp.array(list(b"hello____world____"), dtype=jnp.int32)
-    mem = movable.insert(mem, 5, jnp.array(list(b", arr"), dtype=jnp.int32), 14)
-    print("  after insert :", bytes(np.asarray(mem)[:16].tolist()))
-    mem = movable.delete(mem, 5, 5, 19)
-    print("  after delete :", bytes(np.asarray(mem)[:12].tolist()))
+    print("== Content movable: memory managing itself (used_len tracked)")
+    mem = mem.insert(5, jnp.array(list(b", arr"), dtype=jnp.int32))
+    print("  after insert :", bytes(np.asarray(mem.data)[:16].tolist()),
+          f"used_len={int(mem.used_len)}")
+    mem = mem.delete(5, 5)
+    print("  after delete :", bytes(np.asarray(mem.data)[:12].tolist()),
+          f"used_len={int(mem.used_len)}")
 
-    print("== Content searchable: substring match in ~M cycles")
-    hay = jnp.array(list(b"the cat sat on the mat"), dtype=jnp.int32)
-    nee = jnp.array(list(b"at"), dtype=jnp.int32)
-    starts, valid = core.find_all(hay, nee, max_out=8)
+    print("== Content searchable: canonical match-START flags in ~M cycles")
+    hay = cpm_array(jnp.array(list(b"the cat sat on the mat"), jnp.int32))
+    starts, valid = hay.find_all(jnp.array(list(b"at"), jnp.int32), max_out=8)
     print("  'at' found at:", np.asarray(starts)[np.asarray(valid)].tolist())
 
     print("== Content comparable: SQL-style filter + histogram")
-    ages = jax.random.randint(jax.random.PRNGKey(0), (1000,), 0, 100)
-    n = int(core.count_matches(comparable.compare(ages, 65, "ge")))
-    print(f"  count(age >= 65) = {n} in ~1 concurrent compare")
-    hist = comparable.histogram(ages, jnp.array([0, 25, 50, 75, 100]))
+    ages = cpm_array(jax.random.randint(jax.random.PRNGKey(0), (1000,), 0, 100))
+    print(f"  count(age >= 65) = {int(ages.count(65, 'ge'))} "
+          "in ~1 concurrent compare")
+    hist = ages.histogram(jnp.array([0, 25, 50, 75, 100]))
     print("  histogram[0,25,50,75,100]:", np.asarray(hist).tolist())
 
     print("== Content computable: sqrt(N) global ops")
-    x = jax.random.normal(jax.random.PRNGKey(1), (4096,))
-    s = computable.section_sum(x)
-    print(f"  sum={float(s):.3f} in ~{computable.section_sum_steps(4096)} steps "
-          f"(vs 4096 serial)")
-    srt = core.hybrid_sort(jax.random.permutation(jax.random.PRNGKey(2),
-                                                  jnp.arange(64.0)))
-    print("  hybrid sort ok:", bool((srt[1:] >= srt[:-1]).all()))
+    x = cpm_array(jax.random.normal(jax.random.PRNGKey(1), (4096,)))
+    print(f"  sum={float(x.section_sum()):.3f} "
+          f"max={float(x.global_limit('max')):.3f} "
+          f"in ~{cpm.op_steps('section_sum', n=4096)} steps (vs 4096 serial)")
+    srt = cpm_array(jax.random.permutation(jax.random.PRNGKey(2),
+                                           jnp.arange(64.0))).sort()
+    print("  sort ok:", bool((srt.data[1:] >= srt.data[:-1]).all()))
 
-    print("== Template match (image-size-independent)")
+    print("== Template match (invalid tail positions masked, not wrapped)")
     sig = jnp.zeros((256,)).at[100:104].set(jnp.array([1.0, 2, 3, 4]))
-    sad = computable.template_match_1d(sig, jnp.array([1.0, 2, 3, 4]))
-    print("  best match at:", int(jnp.argmin(sad)))
+    sad = cpm_array(sig).template_match(jnp.array([1.0, 2, 3, 4]))
+    print("  best match at:", int(jnp.argmin(sad)),
+          f"(masked tail starts at {256 - 4 + 1})")
 
-    print("== Speculative decode verify (searchable carry chain)")
-    acc = searchable.verify_draft(jnp.array([5, 6, 7, 9]), jnp.array([5, 6, 7, 8]))
-    print("  accepted prefix:", int(acc), "of 4 draft tokens")
+    print("== Same ops, forced Pallas VMEM backend (interpret on CPU)")
+    pal = cpm_array(jnp.array(list(b"abracadabra"), jnp.int32),
+                    backend="pallas", interpret=True)
+    ref = cpm_array(pal.data, backend="reference")
+    nee = jnp.array(list(b"abra"), jnp.int32)
+    agree = bool(jnp.all(pal.substring_match(nee) == ref.substring_match(nee)))
+    print("  pallas == reference (bit-identical):", agree)
+
+    print("== The op table: §3–§7 complexity claims from one registry")
+    report = cpm_array(jnp.zeros(4096)).steps_report(needle_len=8, bins=8)
+    for name, steps in report.items():
+        spec = cpm.OP_TABLE[name]
+        print(f"  {name:16s} {spec.family:8s} {spec.paper:8s} ~{steps} steps "
+              f"on {'/'.join(spec.backends)}")
 
 
 if __name__ == "__main__":

@@ -1,24 +1,41 @@
-"""repro.core — the paper's contribution: CPM as a JAX operator library.
+"""repro.core — deprecated alias of the `repro.cpm` reference backend.
 
-Four memory types (movable / searchable / comparable / computable) plus the
-Rule-4 activation decoder, Rule-6 match reductions, and the pod-scale
-collective embodiment.
+The CPM operator library moved to ``repro.cpm`` (PR 2): the pure-`jnp`
+implementations now live in ``repro.cpm.reference.*`` (plus
+``repro.cpm.collectives``) behind the ``CPMArray`` / ``Backend`` surface.
+This package re-exports every historical name so existing imports keep
+working; new code should use ``repro.cpm``.
 """
 
-from . import collectives, comparable, computable, movable, pe_array, searchable
-from .pe_array import (activation_mask, any_match, count_matches,
-                       enumerate_matches, first_match, general_decoder)
-from .movable import compact, delete, insert, move_object, shift_range
-from .searchable import find_all, ngram_lookup, substring_match, verify_draft
-from .comparable import compare, histogram, lex_compare_lt, quantile_threshold, topk_mask
-from .computable import (count_disorder, detect_defects, hybrid_sort,
-                         odd_even_sort, odd_even_step, optimal_section,
-                         section_limit, section_sum, section_sum_2d,
-                         stencil_1d, stencil_2d, template_match_1d,
-                         template_match_2d)
-from .collectives import (distributed_section_sum, grad_sync,
-                          hierarchical_psum, ring_allreduce, ring_shift,
-                          tree_allreduce)
+import warnings as _warnings
+
+from repro.cpm import collectives
+from repro.cpm.reference import (comparable, computable, movable, pe_array,
+                                 searchable)
+from repro.cpm.reference.pe_array import (activation_mask, any_match,
+                                          count_matches, enumerate_matches,
+                                          first_match, general_decoder)
+from repro.cpm.reference.movable import (compact, delete, insert, move_object,
+                                         shift_range)
+from repro.cpm.reference.searchable import (find_all, ngram_lookup,
+                                            substring_match, verify_draft)
+from repro.cpm.reference.comparable import (compare, histogram, lex_compare_lt,
+                                            quantile_threshold, topk_mask)
+from repro.cpm.reference.computable import (count_disorder, detect_defects,
+                                            hybrid_sort, odd_even_sort,
+                                            odd_even_step, optimal_section,
+                                            section_limit, section_sum,
+                                            section_sum_2d, stencil_1d,
+                                            stencil_2d, template_match_1d,
+                                            template_match_2d)
+from repro.cpm.collectives import (distributed_section_sum, grad_sync,
+                                   hierarchical_psum, ring_allreduce,
+                                   ring_shift, tree_allreduce)
+
+_warnings.warn(
+    "repro.core is deprecated; use repro.cpm (CPMArray) or "
+    "repro.cpm.reference.* directly.",
+    DeprecationWarning, stacklevel=2)
 
 __all__ = [
     "activation_mask", "general_decoder", "count_matches", "any_match",

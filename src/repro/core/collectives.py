@@ -1,146 +1,4 @@
-"""Distributed embodiment of CPM at pod scale.
-
-Chips are PEs: Rule 7 (neighbor connectivity) is the ICI torus, realized with
-``jax.lax.ppermute`` rings; Rule 5 (broadcast instruction) is the SPMD
-program; the paper's §7.4 two-phase sectioned reduction becomes hierarchical
-mesh collectives (reduce inside a section of the mesh, then across sections);
-the §8 *super-connectivity* extension (log N skip links) is the
-butterfly/tree all-reduce XLA natively emits.
-
-Three gradient-reduction schedules, selectable in the trainer:
-  * ``ring``       — R7-faithful: N-1 ppermute steps, neighbor-only links.
-  * ``two_phase``  — §7.4: psum over the inner ("data") axis then the outer
-                     ("pod") axis; the paper's sectioned sum on the mesh.
-  * ``xla``        — single psum over all axes (the §8 super-connectivity /
-                     log-depth schedule, left to the XLA collective compiler).
-
-All functions must run inside ``shard_map`` (they use axis names).
-"""
-
-from __future__ import annotations
-
-from functools import partial
-
-import jax
-import jax.numpy as jnp
-from jax import lax
-
-
-def _axis_size(axis_name: str) -> int:
-    """Static mesh-axis size.  ``lax.axis_size`` only exists in newer JAX;
-    ``psum`` of a Python constant constant-folds to the axis size on every
-    version this repo supports."""
-    if hasattr(lax, "axis_size"):
-        return lax.axis_size(axis_name)
-    return lax.psum(1, axis_name)
-
-
-def ring_shift(x: jax.Array, axis_name: str, shift: int = 1) -> jax.Array:
-    """Rule 7: read a register of the neighbor ``shift`` hops away (ring)."""
-    n = _axis_size(axis_name)
-    perm = [(i, (i + shift) % n) for i in range(n)]
-    return lax.ppermute(x, axis_name, perm)
-
-
-def ring_allreduce(x: jax.Array, axis_name: str) -> jax.Array:
-    """Neighbor-only all-reduce: N-1 ppermute+add steps (R7-faithful).
-
-    Bandwidth-inefficient vs reduce-scatter+all-gather but structurally the
-    paper's phase-1 section reduction (a carry marching around the ring).
-    """
-    n = _axis_size(axis_name)
-    acc = x
-
-    def body(i, carry):
-        acc, moving = carry
-        moving = ring_shift(moving, axis_name, 1)
-        return acc + moving, moving
-
-    acc, _ = lax.fori_loop(0, n - 1, body, (acc, x))
-    return acc
-
-
-def ring_reduce_scatter(x: jax.Array, axis_name: str, axis: int = 0) -> jax.Array:
-    """Bandwidth-optimal ring reduce-scatter: N-1 steps, each moving 1/N of x.
-
-    Chunk layout: chunk ``(rank + 1 + i)
-    % N`` is forwarded at step i; after N-1 steps each rank holds the full sum
-    of its own chunk. This is the schedule real pods run; here it documents
-    the lowering we expect XLA to produce for psum_scatter.
-    """
-    return lax.psum_scatter(x, axis_name, scatter_dimension=axis, tiled=True)
-
-
-def ring_allgather(x: jax.Array, axis_name: str, axis: int = 0) -> jax.Array:
-    return lax.all_gather(x, axis_name, axis=axis, tiled=True)
-
-
-def hierarchical_psum(x: jax.Array, inner_axis: str, outer_axis: str | None,
-                      mode: str = "two_phase") -> jax.Array:
-    """§7.4 two-phase sum generalized to the mesh.
-
-    Phase 1: concurrent reduction inside each section (= inner mesh axis,
-    e.g. the 16-chip "data" ring of one pod).  Phase 2: reduction across
-    sections (= outer "pod" axis).  ``mode`` picks the phase-1 schedule.
-    """
-    if mode == "ring":
-        out = ring_allreduce(x, inner_axis)
-    elif mode == "two_phase":
-        out = lax.psum(x, inner_axis)
-    elif mode == "xla":
-        axes = (inner_axis,) if outer_axis is None else (inner_axis, outer_axis)
-        return lax.psum(x, axes)
-    else:
-        raise ValueError(f"unknown mode {mode!r}")
-    if outer_axis is not None:
-        out = lax.psum(out, outer_axis)
-    return out
-
-
-def tree_allreduce(x: jax.Array, axis_name: str) -> jax.Array:
-    """§8 super-connectivity: log2(N) butterfly exchange via ppermute.
-
-    Level j exchanges with the PE 2**j away — exactly Fig. 16's skip links.
-    Requires a power-of-two axis size.
-    """
-    n = _axis_size(axis_name)
-    assert n & (n - 1) == 0, "tree_allreduce needs power-of-two axis"
-    acc = x
-    j = 1
-    while j < n:
-        perm = [(i, i ^ j) for i in range(n)]
-        acc = acc + lax.ppermute(acc, axis_name, perm)
-        j <<= 1
-    return acc
-
-
-def grad_sync(grads, mesh_axes: tuple[str, ...], mode: str = "two_phase"):
-    """Synchronize a gradient pytree across data-parallel mesh axes.
-
-    mesh_axes is ("data",) or ("pod", "data"); the inner-most axis is the
-    section (phase 1), the outer the cross-section (phase 2).
-    """
-    inner = mesh_axes[-1]
-    outer = mesh_axes[0] if len(mesh_axes) > 1 else None
-    f = partial(hierarchical_psum, inner_axis=inner, outer_axis=outer, mode=mode)
-    return jax.tree.map(f, grads)
-
-
-# ---------------------------------------------------------------------------
-# distributed §7.4: the sectioned sum with chips as sections
-# ---------------------------------------------------------------------------
-
-def distributed_section_sum(x_local: jax.Array, axis_name: str,
-                            mode: str = "two_phase") -> jax.Array:
-    """Global sum of a sharded 1-D array: local section sum (phase 1 inside
-    each PE's registers), then cross-PE combine (phase 2 over the ring)."""
-    local = jnp.sum(x_local)
-    if mode == "ring":
-        return ring_allreduce(local, axis_name)
-    return lax.psum(local, axis_name)
-
-
-def distributed_section_limit(x_local: jax.Array, axis_name: str,
-                              mode: str = "max") -> jax.Array:
-    local = jnp.max(x_local) if mode == "max" else jnp.min(x_local)
-    return lax.pmax(local, axis_name) if mode == "max" else lax.pmin(local, axis_name)
+"""Deprecated shim: moved to repro.cpm.collectives (see repro.cpm)."""
+import sys as _sys
+from repro.cpm import collectives as _mod
+_sys.modules[__name__] = _mod

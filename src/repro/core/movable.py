@@ -1,100 +1,4 @@
-"""Content movable memory (paper §4): concurrent in-place range moves.
-
-Every PE can copy its neighbor's addressable register in one cycle (Fig. 5),
-so shifting an arbitrary address range left/right is ~1 instruction cycle
-regardless of range length.  Insertion, deletion and object grow/shrink are
-built from range shifts — the paper's "memory managing itself" (§4.2).
-
-The TPU realization keeps the O(1)-concurrent-step structure: every op below
-lowers to a constant number of full-array vector ops (roll + select), never a
-serial loop over elements.  These ops are the substrate for in-place KV-cache
-management in ``repro.serve.kv_cache``.
-
-All ops work on the last axis; use ``jax.vmap`` for batched layouts.
-"""
-
-from __future__ import annotations
-
-import jax
-import jax.numpy as jnp
-
-from .pe_array import activation_mask
-
-
-def shift_range(x: jax.Array, start, end, shift: int = 1, fill=None) -> jax.Array:
-    """Shift elements whose address lies in [start, end] by ``shift`` places.
-
-    ``shift > 0`` moves content toward higher addresses.  Vacated slots keep
-    their old content unless ``fill`` is given.  Content shifted beyond the
-    range boundary is dropped (as in hardware, it would overwrite neighbors —
-    callers manage the destination range).  O(1) concurrent steps.
-    """
-    n = x.shape[-1]
-    src_mask = activation_mask(n, start, end)            # range being moved
-    moved = jnp.roll(x, shift, axis=-1)
-    dst_mask = jnp.roll(src_mask, shift)
-    if shift > 0:
-        dst_mask = dst_mask & (jnp.arange(n) >= shift)
-    elif shift < 0:
-        dst_mask = dst_mask & (jnp.arange(n) < n + shift)
-    out = jnp.where(dst_mask, moved, x)
-    if fill is not None:
-        vacated = src_mask & ~dst_mask
-        out = jnp.where(vacated, fill, out)
-    return out
-
-
-def insert(x: jax.Array, pos, values: jax.Array, used_len) -> jax.Array:
-    """Insert ``values`` at ``pos``; content in [pos, used_len) shifts right.
-
-    Content beyond the physical end is dropped.  ~1 concurrent step for the
-    shift + ~1 for the write, matching the paper's insertion claim.
-    """
-    k = values.shape[-1]
-    n = x.shape[-1]
-    out = shift_range(x, pos, used_len - 1, k)
-    idx = jnp.arange(n)
-    in_window = (idx >= pos) & (idx < pos + k)
-    # gather the value for each window slot
-    vals = values[jnp.clip(idx - pos, 0, k - 1)]
-    return jnp.where(in_window, vals, out)
-
-
-def delete(x: jax.Array, pos, k: int, used_len, fill=0) -> jax.Array:
-    """Delete ``k`` elements at ``pos``; tail in [pos+k, used_len) shifts left."""
-    out = shift_range(x, pos + k, used_len - 1, -k)
-    idx = jnp.arange(x.shape[-1])
-    vacated = (idx >= used_len - k) & (idx < used_len)
-    return jnp.where(vacated, fill, out)
-
-
-def compact(x: jax.Array, keep: jax.Array, fill=0) -> tuple[jax.Array, jax.Array]:
-    """Stable compaction: move all kept elements to the front.
-
-    Returns ``(compacted, new_len)``.  The paper performs this as per-object
-    range moves; the TPU-native equivalent is a single stable
-    cumsum-gather — O(log N) concurrent steps (scan depth), still
-    element-count independent.  Used for KV-cache hole removal after
-    speculative-decode rejection and sliding-window eviction.
-    """
-    n = x.shape[-1]
-    new_len = jnp.sum(keep.astype(jnp.int32), axis=-1)
-    # stable partition permutation: kept elements first, order preserved
-    order = jnp.argsort(~keep, axis=-1, stable=True)
-    out = jnp.take_along_axis(x, order, axis=-1) if x.ndim == keep.ndim else x[order]
-    out = jnp.where(jnp.arange(n) < new_len, out, fill)
-    return out, new_len
-
-
-def move_object(x: jax.Array, src_start, length, dst_start) -> jax.Array:
-    """Relocate an object of ``length`` items from src_start to dst_start.
-
-    Single gather per element (constant concurrent steps).  Slots uncovered by
-    the move keep their previous content; overlapping moves are handled like
-    ``memmove`` (reads happen before writes).
-    """
-    n = x.shape[-1]
-    idx = jnp.arange(n)
-    in_dst = (idx >= dst_start) & (idx < dst_start + length)
-    src_idx = jnp.clip(idx - dst_start + src_start, 0, n - 1)
-    return jnp.where(in_dst, x[..., src_idx] if x.ndim > 1 else x[src_idx], x)
+"""Deprecated shim: moved to repro.cpm.reference.movable (see repro.cpm)."""
+import sys as _sys
+from repro.cpm.reference import movable as _mod
+_sys.modules[__name__] = _mod

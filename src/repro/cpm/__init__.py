@@ -1,0 +1,31 @@
+"""repro.cpm — the paper's memory device behind one operator surface.
+
+Public API:
+
+  * :class:`CPMArray` / :func:`cpm_array` — the pytree-registered memory
+    device (physical buffer + tracked ``used_len``); every paper op is a
+    method dispatching to a physical backend.
+  * ``backends`` — the :class:`~repro.cpm.backends.Backend` protocol and the
+    ``reference`` / ``pallas`` / ``mesh`` realizations.
+  * ``OP_TABLE`` / :func:`op_steps` — the op registry with each op's
+    concurrent-step-count formula (the complexity table of §3–§7, registered
+    once).
+  * ``semantics`` — the canonical result conventions (match-start flags,
+    masked window tails) and the converters between them.
+  * ``reference`` — the pure-`jnp` op modules (formerly ``repro.core``).
+  * ``collectives`` — the shard_map embodiment used by the mesh backend.
+"""
+
+from . import backends, collectives, optable, reference, semantics
+from .array import CPMArray, cpm_array
+from .backends import Backend, get_backend
+from .optable import FAMILIES, OP_TABLE, op_steps, ops_for_backend
+from .semantics import ends_to_starts, mask_window_tail, starts_to_ends, window_valid
+
+__all__ = [
+    "CPMArray", "cpm_array",
+    "Backend", "get_backend", "backends",
+    "OP_TABLE", "op_steps", "ops_for_backend", "FAMILIES", "optable",
+    "ends_to_starts", "starts_to_ends", "window_valid", "mask_window_tail",
+    "semantics", "reference", "collectives",
+]

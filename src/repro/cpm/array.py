@@ -1,0 +1,255 @@
+"""`CPMArray` — one memory device, any physical realization.
+
+The paper's promise is a memory that is "general-purposed, easy to use, pin
+compatible with conventional memory": you issue broadcast instructions to a
+device and never care whether the PEs are VREG lanes, VMEM rows, or chips on
+a mesh.  `CPMArray` is that surface: a pytree-registered value holding
+
+  * ``data``     — the physical buffer ``(*batch, n)``; the last axis is the
+                   PE address axis,
+  * ``used_len`` — the tracked logical length (§4.2 "memory managing
+                   itself"), a **traced** scalar (or per-batch vector) so one
+                   compiled program serves every length,
+  * ``backend``/``interpret`` — static routing hints (aux data).
+
+Every paper operation dispatches through the backend registry
+(``repro.cpm.backends``) and is registered once in the op table
+(``repro.cpm.optable``) with its concurrent-step-count formula —
+``steps_report()`` and the benchmarks validate the paper's complexity table
+from that single source of truth.
+
+Ops that read the used region mask the tail identically on every backend,
+so differential tests demand bit-identical results for every discrete op
+(activate, moves, matches, compares, sort) and for integer reductions;
+float reductions (`section_sum`) may differ by accumulation order across
+backends and agree to float tolerance instead.  Batched layouts
+work through ``jax.vmap`` (the pytree registration carries ``data`` and
+``used_len`` together); the in-place move ops expect a scalar ``used_len``
+per call — vmap over the array for per-row lengths.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from . import backends, semantics
+from .optable import OP_TABLE, op_steps
+from .reference import movable, pe_array
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True)
+class CPMArray:
+    data: jax.Array                    # (*batch, n) physical buffer
+    used_len: jax.Array                # () or (*batch,) logical length
+    backend: str = "auto"              # "auto" | "reference" | "pallas" | "mesh"
+    interpret: bool | None = None      # pallas only; None = auto (off-TPU)
+
+    # -- pytree plumbing ----------------------------------------------------
+    def tree_flatten(self):
+        return (self.data, self.used_len), (self.backend, self.interpret)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        data, used_len = children
+        return cls(data, used_len, *aux)
+
+    # -- layout -------------------------------------------------------------
+    @property
+    def n(self) -> int:
+        return self.data.shape[-1]
+
+    @property
+    def batch_shape(self) -> tuple[int, ...]:
+        return self.data.shape[:-1]
+
+    @property
+    def dtype(self):
+        return self.data.dtype
+
+    def _with(self, **kw) -> "CPMArray":
+        return dataclasses.replace(self, **kw)
+
+    def _b(self, op: str):
+        return backends.resolve(self.backend, op, self.data,
+                                interpret=self.interpret)
+
+    def _live(self) -> jax.Array:
+        """Used-region mask, broadcast against the batch layout."""
+        ul = jnp.asarray(self.used_len)
+        addr = jnp.arange(self.n)
+        return addr < (ul[..., None] if ul.ndim else ul)
+
+    # -- family: activate (Rule 4) -----------------------------------------
+    def activate(self, start, end, carry=1) -> jax.Array:
+        """General-decoder activation mask over the PE address axis."""
+        return self._b("activate").activate(self.n, start, end, carry)
+
+    # -- family: move (§4) ---------------------------------------------------
+    def shift(self, start, end, shift: int = 1, fill=None) -> "CPMArray":
+        """Concurrent range move; ``used_len`` is unchanged."""
+        data = self._b("shift").shift_range(self.data, start, end, shift, fill)
+        return self._with(data=data)
+
+    def insert(self, pos, values) -> "CPMArray":
+        """Insert ``values`` at ``pos``: range shift + broadcast write
+        (~2 concurrent steps).  ``used_len`` grows (clipped to ``n``)."""
+        values = jnp.asarray(values, self.dtype)
+        k = values.shape[-1]
+        shifted = self._b("insert").shift_range(
+            self.data, pos, self.used_len - 1, k, None)
+        data = movable.write_window(shifted, pos, values)
+        return self._with(data=data,
+                          used_len=jnp.minimum(self.used_len + k, self.n))
+
+    def delete(self, pos, k: int, fill=0) -> "CPMArray":
+        """Delete ``k`` items at ``pos``: the tail shifts left, vacated slots
+        take ``fill``, ``used_len`` shrinks."""
+        shifted = self._b("delete").shift_range(
+            self.data, pos + k, self.used_len - 1, -k, None)
+        data = movable.fill_deleted_tail(shifted, self.used_len, k,
+                                         jnp.asarray(fill, self.dtype))
+        return self._with(data=data,
+                          used_len=jnp.maximum(self.used_len - k, 0))
+
+    def truncate(self, new_len) -> "CPMArray":
+        """Range delete at the tail: O(1), lengths only (entries stay put;
+        the used-region mask excludes them)."""
+        new_len = jnp.asarray(new_len, jnp.int32)
+        return self._with(used_len=jnp.minimum(self.used_len, new_len))
+
+    # -- family: search (§5) -------------------------------------------------
+    def substring_match(self, needle, where: str = "start") -> jax.Array:
+        """Match an M-item needle everywhere in the used region (~M steps).
+
+        Canonical convention: flags at match **start** addresses
+        (``where="end"`` gives the paper's raw carry-chain view; the two are
+        one `repro.cpm.semantics` converter apart).
+        """
+        needle = jnp.asarray(needle, self.dtype)
+        ends = self._b("substring_match").substring_match(self.data, needle)
+        ends = ends & self._live()
+        if where == "end":
+            return ends
+        if where != "start":
+            raise ValueError(f"where must be 'start' or 'end', got {where!r}")
+        return semantics.ends_to_starts(ends, needle.shape[-1])
+
+    def find_all(self, needle, max_out: int):
+        """Start addresses of every occurrence (ascending) via Rule 6."""
+        starts = self.substring_match(needle, where="start")
+        return pe_array.enumerate_matches(starts, max_out)
+
+    # -- family: compare (§6) ------------------------------------------------
+    def compare(self, datum, op: str = "eq", mask=None) -> jax.Array:
+        """One concurrent compare against a broadcast datum, tail masked."""
+        if mask is not None:                   # bit-field compare: int domain
+            x, d = self.data & mask, jnp.asarray(datum, self.dtype) & mask
+        else:                                  # value compare: promote, don't
+            d = jnp.asarray(datum)             # truncate (e.g. int x vs 2.5)
+            ct = jnp.promote_types(self.dtype, d.dtype)
+            x, d = self.data.astype(ct), d.astype(ct)
+        got = self._b("compare").compare(x, d, op)
+        return got & self._live()
+
+    def count(self, datum, op: str = "eq", mask=None) -> jax.Array:
+        """Rule-6 parallel count of matching PEs."""
+        return pe_array.count_matches(self.compare(datum, op, mask))
+
+    def histogram(self, edges) -> jax.Array:
+        """M-bin histogram of the used region (~M compare+count steps)."""
+        if self.data.ndim != 1:
+            raise ValueError("histogram is 1-D; vmap over batched arrays")
+        edges = jnp.asarray(edges)
+        ct = jnp.promote_types(self.dtype, edges.dtype)
+        x, e = self.data.astype(ct), edges.astype(ct)
+        # tail values take the top edge, which lands in no [e_i, e_{i+1}) bin
+        x = jnp.where(self._live(), x, e[-1])
+        return self._b("histogram").histogram(x, e)
+
+    # -- family: compute / reduce (§7) ---------------------------------------
+    def section_sum(self, section: int | None = None) -> jax.Array:
+        """Two-phase global sum of the used region (~2·sqrt(N) steps)."""
+        if self.data.ndim != 1:
+            raise ValueError("section_sum is 1-D; vmap over batched arrays")
+        x = jnp.where(self._live(), self.data, jnp.asarray(0, self.dtype))
+        return self._b("section_sum").section_sum(x, section)
+
+    def global_limit(self, mode: str = "max",
+                     section: int | None = None) -> jax.Array:
+        """Two-phase global max/min of the used region (§7.5)."""
+        if self.data.ndim != 1:
+            raise ValueError("global_limit is 1-D; vmap over batched arrays")
+        fill = semantics.limit_identity(self.dtype, mode)
+        x = jnp.where(self._live(), self.data, jnp.asarray(fill, self.dtype))
+        return self._b("global_limit").global_limit(x, mode, section)
+
+    def sort(self, steps: int | None = None, fill=0) -> "CPMArray":
+        """Ascending sort of the used prefix; tail slots take ``fill``.
+
+        ``steps`` bounds the odd-even exchange cycles (``None`` = full sort).
+        """
+        if jnp.issubdtype(self.dtype, jnp.integer):
+            big = jnp.iinfo(self.dtype).max
+        else:
+            big = jnp.inf
+        x = jnp.where(self._live(), self.data, jnp.asarray(big, self.dtype))
+        out = self._b("sort").sort(x, steps)
+        data = jnp.where(self._live(), out, jnp.asarray(fill, self.dtype))
+        return self._with(data=data)
+
+    def template_match(self, template, mask_tail: bool = True) -> jax.Array:
+        """SAD of an M-item template at every start address (~M steps).
+
+        Start positions whose window runs past the used region are invalid;
+        ``mask_tail=True`` (canonical) pins them to ``+inf`` so every backend
+        reports the identical, well-defined result.  ``mask_tail=False``
+        exposes the raw wrapping output.
+        """
+        template = jnp.asarray(template)
+        out = self._b("template_match").template_match(self.data, template)
+        if mask_tail:
+            out = semantics.mask_window_tail(out, template.shape[-1],
+                                             self.used_len)
+        return out
+
+    def stencil(self, taps, wrap: bool = False) -> jax.Array:
+        """§7.3 tap-algebra stencil (~M steps).
+
+        Canonical (``wrap=False``): the used region with zero padding — tail
+        slots contribute nothing.  ``wrap=True`` is exactly the historical
+        ring over the full physical buffer (tail content included), so
+        migrated callers get the old numbers bit-for-bit.
+        """
+        if wrap:
+            return self._b("stencil").stencil(self.data, taps, wrap=True)
+        x = jnp.where(self._live(), self.data, jnp.asarray(0, self.dtype))
+        return self._b("stencil").stencil(x, taps, wrap=False)
+
+    # -- introspection -------------------------------------------------------
+    def steps_report(self, *, needle_len: int = 8, bins: int = 8,
+                     template_len: int = 8, taps_len: int = 3,
+                     section: int | None = None) -> dict[str, int]:
+        """Concurrent-step count of every registered op at this array's size,
+        evaluated from the op table and checked against the paper bounds."""
+        n = self.n
+        m_of = {"substring_match": needle_len, "histogram": bins,
+                "template_match": template_len, "stencil": taps_len}
+        return {name: op_steps(name, n=n, m=m_of.get(name, 0),
+                               section=section)
+                for name in OP_TABLE}
+
+
+def cpm_array(data, used_len=None, backend: str = "auto",
+              interpret: bool | None = None) -> CPMArray:
+    """Canonical constructor: coerces ``data`` to a jax array and defaults
+    ``used_len`` to the full physical length."""
+    data = jnp.asarray(data)
+    if used_len is None:
+        used_len = data.shape[-1]
+    used_len = jnp.asarray(used_len, jnp.int32)
+    return CPMArray(data, used_len, backend, interpret)

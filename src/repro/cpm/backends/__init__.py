@@ -1,0 +1,141 @@
+"""Physical realizations of the CPM instruction set.
+
+One :class:`Backend` protocol, three embodiments of the same memory device:
+
+  * ``reference`` — pure ``jnp`` vector ops (`repro.cpm.reference`).  Always
+    available; the oracle the other two are validated against.
+  * ``pallas``    — VMEM kernels (`repro.kernels.cpm_kernels`): the VMEM
+    block is the PE array, VREG lanes are PEs.  ``interpret=`` is plumbed
+    through so CPU containers execute the kernel bodies.
+  * ``mesh``      — chips as PEs: ``shard_map`` collectives over a named
+    mesh axis (`repro.cpm.collectives`), wired to the partition rules in
+    ``repro.distributed.sharding`` when a sharding context is active.
+
+``resolve`` picks a backend automatically from array residency/size, or
+honors an explicit request (raising if the op is not realizable there — the
+paper's pin-compatibility promise is per-op, checked against the op table).
+"""
+
+from __future__ import annotations
+
+from typing import Protocol, runtime_checkable
+
+import jax
+
+from ..optable import OP_TABLE
+
+#: rows shorter than this are not worth a kernel launch — stay on reference
+PALLAS_MIN_N = 1024
+
+
+@runtime_checkable
+class Backend(Protocol):
+    """The broadcast-instruction surface every physical realization offers.
+
+    All ops treat the **last axis** as the PE address axis; scalar reductions
+    (`section_sum`, `global_limit`, `histogram`) take 1-D arrays (the
+    dispatch layer vmaps over batch layouts).
+    """
+
+    name: str
+
+    def supports(self, op: str) -> bool: ...
+    def activate(self, n: int, start, end, carry=1): ...
+    def shift_range(self, x, start, end, shift: int, fill=None): ...
+    def substring_match(self, hay, needle): ...          # match-END flags
+    def compare(self, x, datum, op: str = "eq"): ...
+    def histogram(self, x, edges): ...
+    def section_sum(self, x, section=None): ...
+    def global_limit(self, x, mode: str = "max", section=None): ...
+    def sort(self, x, steps=None): ...
+    def template_match(self, data, template): ...
+    def stencil(self, x, taps, wrap: bool = False): ...
+
+
+class _TableBacked:
+    """supports() read off the op table (single source of truth)."""
+
+    name: str = "?"
+
+    def supports(self, op: str) -> bool:
+        spec = OP_TABLE.get(op)
+        return spec is not None and self.name in spec.backends
+
+
+def _registry():
+    from . import mesh, pallas, reference
+    return {
+        "reference": reference.ReferenceBackend,
+        "pallas": pallas.PallasBackend,
+        "mesh": mesh.MeshBackend,
+    }
+
+
+_INSTANCES: dict = {}
+
+
+def get_backend(name: str, **kw) -> Backend:
+    """Instantiate a backend by name (``reference`` | ``pallas`` | ``mesh``).
+
+    Instances are memoized per (name, kwargs) — resolve() runs per op call,
+    and MeshBackend's constructor builds a device mesh, which must not be
+    repeated in eager loops.  Unhashable kwargs (e.g. an explicit Mesh)
+    fall back to a fresh instance.
+    """
+    reg = _registry()
+    if name not in reg:
+        raise ValueError(f"unknown CPM backend {name!r}; have {sorted(reg)}")
+    extra = ()
+    if name == "mesh":
+        # default mesh construction reads the (mutable) sharding context —
+        # a cached instance is only valid while that context is unchanged
+        from repro.distributed import sharding
+        extra = (sharding.current_ctx(),)
+    try:
+        key = (name, tuple(sorted(kw.items())), extra)
+        if key not in _INSTANCES:
+            _INSTANCES[key] = reg[name](**kw)
+        return _INSTANCES[key]
+    except TypeError:                      # unhashable kwarg / ctx
+        return reg[name](**kw)
+
+
+def _residency(data) -> str:
+    """Platform holding ``data`` — falls back to the default backend for
+    tracers (inside jit the concrete residency is the jit target's)."""
+    try:
+        return next(iter(data.devices())).platform
+    except Exception:
+        return jax.default_backend()
+
+
+def resolve(requested: str, op: str, data, *, interpret=None) -> Backend:
+    """Pick the backend for one op call.
+
+    ``requested == "auto"``: Pallas when the array lives on a TPU and the row
+    is long enough to amortize a kernel launch; otherwise the reference
+    lowering (which XLA fuses into the surrounding program).  Ops outside a
+    backend's table entry fall back to reference under auto but raise when
+    the backend was forced.
+    """
+    if requested == "auto":
+        if (_residency(data) == "tpu" and data.shape[-1] >= PALLAS_MIN_N
+                and "pallas" in OP_TABLE[op].backends):
+            # honor an explicit interpret hint (debugging); default compiled
+            return get_backend("pallas",
+                               interpret=False if interpret is None
+                               else interpret)
+        return get_backend("reference")
+    if requested not in _registry():
+        raise ValueError(f"unknown CPM backend {requested!r}; "
+                         f"have {sorted(_registry())}")
+    # table check BEFORE instantiation: MeshBackend builds a device mesh
+    # in __init__, which should not run (or mask this error) for an op
+    # the backend cannot realize anyway
+    if requested not in OP_TABLE[op].backends:
+        raise NotImplementedError(
+            f"op {op!r} is not realizable on the {requested!r} backend "
+            f"(table says {OP_TABLE[op].backends}); use backend='auto' "
+            f"to fall back to reference")
+    return get_backend(requested, **({"interpret": interpret}
+                                     if requested == "pallas" else {}))

@@ -1,0 +1,78 @@
+"""Pod-scale backend: chips as PEs via ``shard_map`` collectives.
+
+The PE address axis is sharded over one named mesh axis; every op is the
+paper's two-phase schedule — phase 1 inside each chip's registers, phase 2
+across the ICI ring (`repro.cpm.collectives`).  When a sharding context from
+``repro.distributed.sharding`` is active its mesh and innermost data axis
+are used; otherwise a 1-axis mesh over all local devices is built.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from .. import collectives
+from . import _TableBacked
+
+
+class MeshBackend(_TableBacked):
+    name = "mesh"
+
+    def __init__(self, mesh=None, axis: str | None = None,
+                 mode: str = "two_phase"):
+        if mesh is None:
+            from repro.distributed import sharding
+            ctx = sharding.current_ctx()
+            if ctx.mesh is not None:
+                mesh = ctx.mesh
+                axis = axis or (ctx.data_axes[-1] if ctx.data_axes
+                                else mesh.axis_names[0])
+            else:
+                devs = jax.devices()
+                mesh = jax.make_mesh((len(devs),), ("cpm",))
+                axis = "cpm"
+        self.mesh = mesh
+        self.axis = axis or mesh.axis_names[0]
+        self.mode = mode
+
+    @property
+    def n_devices(self) -> int:
+        return int(self.mesh.shape[self.axis])
+
+    def _pad(self, x, fill):
+        pad = (-x.shape[-1]) % self.n_devices
+        if pad:
+            x = jnp.pad(x, (0, pad), constant_values=fill)
+        return x
+
+    def compare(self, x, datum, op="eq"):
+        n = x.shape[-1]
+        xp = self._pad(x, 0)
+        from ..reference import comparable
+
+        f = shard_map(partial(comparable.compare, datum=datum, op=op),
+                      mesh=self.mesh, in_specs=P(self.axis),
+                      out_specs=P(self.axis))
+        return f(xp)[..., :n]
+
+    def section_sum(self, x, section=None):
+        xp = self._pad(x, 0)
+        f = shard_map(
+            lambda xl: collectives.distributed_section_sum(
+                xl, self.axis, mode=self.mode),
+            mesh=self.mesh, in_specs=P(self.axis), out_specs=P())
+        return f(xp)
+
+    def global_limit(self, x, mode="max", section=None):
+        from ..semantics import limit_identity
+        xp = self._pad(x, limit_identity(x.dtype, mode))
+        f = shard_map(
+            lambda xl: collectives.distributed_section_limit(
+                xl, self.axis, mode=mode),
+            mesh=self.mesh, in_specs=P(self.axis), out_specs=P())
+        return f(xp)

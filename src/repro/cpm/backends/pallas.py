@@ -1,0 +1,79 @@
+"""Chip-scale backend: VMEM Pallas kernels (VREG lanes = PEs).
+
+Adapter over `repro.kernels.cpm_kernels`.  Row-wise kernels see a flattened
+``(rows, n)`` layout (batch dims collapse to rows); reductions take 1-D
+arrays.  ``interpret=None`` auto-selects: compiled on TPU, interpreter
+elsewhere — the ``interpret=`` plumbing the kernels already expose.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import cpm_kernels as K
+
+from ..optable import optimal_section
+from . import _TableBacked
+
+
+def _rows(x):
+    """(..., n) -> ((R, n), unflatten)."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1]) if x.ndim != 2 else x
+    if x.ndim == 1:
+        x2 = x.reshape(1, -1)
+    return x2, (lambda out: out.reshape(*lead, out.shape[-1]))
+
+
+class PallasBackend(_TableBacked):
+    name = "pallas"
+
+    def __init__(self, interpret: bool | None = None):
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        self.interpret = bool(interpret)
+
+    def activate(self, n, start, end, carry=1):
+        return K.activate(n, start, end, carry, interpret=self.interpret)
+
+    def shift_range(self, x, start, end, shift, fill=None):
+        x2, un = _rows(x)
+        return un(K.shift_range(x2, start, end, shift, fill,
+                                interpret=self.interpret))
+
+    def substring_match(self, hay, needle):
+        x2, un = _rows(hay)
+        return un(K.substring_match(x2, needle,
+                                    interpret=self.interpret).astype(bool))
+
+    def compare(self, x, datum, op="eq"):
+        x2, un = _rows(x)
+        return un(K.compare(x2, datum, op, interpret=self.interpret))
+
+    def histogram(self, x, edges):
+        return K.histogram(x, edges, interpret=self.interpret)
+
+    def section_sum(self, x, section=None):
+        sec = section or optimal_section(x.shape[-1])
+        out = K.section_sum(x, sec, interpret=self.interpret)
+        # match the reference accumulation dtype (jnp.sum semantics)
+        ref_dtype = jnp.zeros((), x.dtype).sum().dtype
+        return out.astype(ref_dtype)
+
+    def global_limit(self, x, mode="max", section=None):
+        sec = section or optimal_section(x.shape[-1])
+        return K.section_limit(x, sec, mode, interpret=self.interpret)
+
+    def sort(self, x, steps=None):
+        x2, un = _rows(x)
+        return un(K.oddeven_sort(x2, steps, interpret=self.interpret))
+
+    def template_match(self, data, template):
+        x2, un = _rows(data)
+        return un(K.template_match(x2, template, interpret=self.interpret))
+
+    def stencil(self, x, taps, wrap=False):
+        x2, un = _rows(x)
+        return un(K.stencil(x2, tuple(float(t) for t in taps), wrap=wrap,
+                            interpret=self.interpret))

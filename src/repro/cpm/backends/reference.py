@@ -1,0 +1,54 @@
+"""The always-available pure-`jnp` backend (the oracle).
+
+Thin adapter over `repro.cpm.reference.*` — the paper's ops lowered to
+constant counts of full-array vector primitives.  Shapes: every op works on
+the last axis; reductions take 1-D arrays.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import reference as R
+from . import _TableBacked
+
+
+class ReferenceBackend(_TableBacked):
+    name = "reference"
+
+    def activate(self, n, start, end, carry=1):
+        return R.pe_array.activation_mask(n, start, end, carry)
+
+    def shift_range(self, x, start, end, shift, fill=None):
+        return R.movable.shift_range(x, start, end, shift, fill)
+
+    def substring_match(self, hay, needle):
+        return R.searchable.substring_match(hay, needle)
+
+    def compare(self, x, datum, op="eq"):
+        return R.comparable.compare(x, datum, op)
+
+    def histogram(self, x, edges):
+        return R.comparable.histogram(x, edges)
+
+    def section_sum(self, x, section=None):
+        return R.computable.section_sum(x, section)
+
+    def global_limit(self, x, mode="max", section=None):
+        return R.computable.section_limit(x, section, mode)
+
+    def sort(self, x, steps=None):
+        # full sort: jnp.sort is the XLA-native realization of the N-step
+        # odd-even exchange (bitwise-equal output — sorting is a function
+        # of the value multiset).  A bounded local phase keeps the paper's
+        # step structure.
+        if steps is not None:
+            return R.computable.odd_even_sort(x, steps)
+        return jnp.sort(x, axis=-1)
+
+    def template_match(self, data, template):
+        return R.computable.template_match_1d(data, template)
+
+    def stencil(self, x, taps, wrap=False):
+        return R.computable.stencil_1d(x, taps, wrap=wrap)

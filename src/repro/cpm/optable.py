@@ -1,0 +1,113 @@
+"""The CPM instruction set, registered once with its cost model.
+
+Every paper operation is an :class:`OpSpec` carrying its *concurrent step
+count* formula — the paper's instruction-cycle currency — plus the paper
+bound it must stay under.  ``CPMArray.steps_report()`` and
+``benchmarks/run.py``'s ``cpm_ops`` scenario both read this table, so the
+complexity claims of §3–§7 are validated from a single source of truth.
+
+Formula arguments (all keyword, extras ignored):
+  n        physical array length (PE count)
+  m        op-specific size: needle length (search), bin count (histogram),
+           tap/template length (stencil / template match)
+  section  §7.4 section size M (defaults to the optimal ~sqrt(n))
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Callable
+
+
+def optimal_section(n: int) -> int:
+    """M ~ sqrt(N) minimizes the two-phase cost M + N/M (§7.4).
+
+    The single definition — ``reference.computable`` and the backends
+    import it from here.
+    """
+    return max(1, int(math.isqrt(max(1, n))))
+
+
+def two_phase_steps(n, section=None, **_):
+    """§7.4/§7.5 concurrent steps: M in-section + N/M cross-section."""
+    m = section or optimal_section(n)
+    return m + -(-n // m)
+
+
+_two_phase = two_phase_steps
+
+
+@dataclass(frozen=True)
+class OpSpec:
+    name: str
+    family: str                       # activate | move | search | compare | compute
+    paper: str                        # section of the source paper
+    steps: Callable[..., int]         # concurrent-step formula (registered once)
+    bound: Callable[..., int]         # the paper's claimed ceiling
+    backends: tuple[str, ...]         # which backends implement it
+
+    def check(self, **sizes) -> int:
+        """Evaluate the formula and assert it obeys the paper bound."""
+        got, cap = self.steps(**sizes), self.bound(**sizes)
+        if got > cap:
+            raise AssertionError(
+                f"{self.name}: steps formula {got} exceeds paper bound {cap} "
+                f"for sizes {sizes}")
+        return got
+
+
+_RPM = ("reference", "pallas", "mesh")
+_RP = ("reference", "pallas")
+
+OP_TABLE: dict[str, OpSpec] = {spec.name: spec for spec in [
+    # -- activate (Rule 4) --------------------------------------------------
+    OpSpec("activate", "activate", "§3.3 R4",
+           steps=lambda **_: 1, bound=lambda **_: 1, backends=_RP),
+    # -- move (§4) ----------------------------------------------------------
+    OpSpec("shift", "move", "§4.1",
+           steps=lambda **_: 1, bound=lambda **_: 1, backends=_RP),
+    OpSpec("insert", "move", "§4.2",       # range shift + broadcast write
+           steps=lambda **_: 2, bound=lambda **_: 2, backends=_RP),
+    OpSpec("delete", "move", "§4.2",
+           steps=lambda **_: 2, bound=lambda **_: 2, backends=_RP),
+    # -- search (§5) --------------------------------------------------------
+    OpSpec("substring_match", "search", "§5.1",
+           steps=lambda m, **_: m, bound=lambda m, **_: m, backends=_RP),
+    # -- compare (§6) -------------------------------------------------------
+    OpSpec("compare", "compare", "§6.1",
+           steps=lambda **_: 1, bound=lambda **_: 1, backends=_RPM),
+    OpSpec("histogram", "compare", "§6.3", # one compare+count per section edge
+           steps=lambda m, **_: m + 1, bound=lambda m, **_: m + 1,
+           backends=_RP),
+    # -- compute / reduce (§7) ----------------------------------------------
+    OpSpec("section_sum", "compute", "§7.4",
+           steps=_two_phase,
+           bound=lambda n, **_: 2 * math.ceil(math.sqrt(max(1, n))) + 1,
+           backends=_RPM),
+    OpSpec("global_limit", "compute", "§7.5",
+           steps=_two_phase,
+           bound=lambda n, **_: 2 * math.ceil(math.sqrt(max(1, n))) + 1,
+           backends=_RPM),
+    OpSpec("sort", "compute", "§7.7",      # full odd-even transposition sort
+           steps=lambda n, **_: n, bound=lambda n, **_: n, backends=_RP),
+    OpSpec("hybrid_sort", "compute", "§7.7",   # local phase of the sqrt(N) plan
+           steps=_two_phase,
+           bound=lambda n, **_: 2 * math.ceil(math.sqrt(max(1, n))) + 1,
+           backends=("reference",)),
+    OpSpec("template_match", "compute", "§7.6",    # ~M vectorized; paper ~M^2
+           steps=lambda m, **_: m, bound=lambda m, **_: m * m, backends=_RP),
+    OpSpec("stencil", "compute", "§7.3",
+           steps=lambda m, **_: m, bound=lambda m, **_: m, backends=_RP),
+]}
+
+FAMILIES = ("activate", "move", "search", "compare", "compute")
+
+
+def op_steps(name: str, **sizes) -> int:
+    """Concurrent-step count of ``name`` for the given sizes (bound-checked)."""
+    return OP_TABLE[name].check(**sizes)
+
+
+def ops_for_backend(backend: str) -> list[str]:
+    return [s.name for s in OP_TABLE.values() if backend in s.backends]

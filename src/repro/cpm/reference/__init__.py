@@ -1,0 +1,12 @@
+"""The pure-`jnp` realization of every paper operation — always available.
+
+These modules are the *reference backend* of `repro.cpm`: the O(1)/O(sqrt N)
+concurrent-step structure of the paper lowered to full-array vector ops.
+They are also the oracles the Pallas kernels and the mesh collectives are
+validated against.  The historical import path ``repro.core.*`` still works
+via thin deprecation shims.
+"""
+
+from . import comparable, computable, movable, pe_array, searchable
+
+__all__ = ["comparable", "computable", "movable", "pe_array", "searchable"]

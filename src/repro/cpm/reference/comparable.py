@@ -1,0 +1,107 @@
+"""Content comparable memory (paper §6): concurrent value comparison.
+
+Every PE compares its masked register against a broadcast datum with one of
+{=, !=, <, >, <=, >=} in ~1 cycle; multi-word values compare lexicographically
+via the neighbor carry chain (§6.1); M-bin histograms take ~M cycles (§6.3).
+
+Framework use: MoE routing masks and load statistics (``repro.models``),
+top-p/top-k sampling thresholds (``repro.serve.sampling``), quantile
+calibration.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .pe_array import count_matches
+
+_OPS = {
+    "eq": lambda a, b: a == b,
+    "ne": lambda a, b: a != b,
+    "lt": lambda a, b: a < b,
+    "gt": lambda a, b: a > b,
+    "le": lambda a, b: a <= b,
+    "ge": lambda a, b: a >= b,
+}
+
+
+def compare(x: jax.Array, datum, op: str = "eq", mask=None) -> jax.Array:
+    """One concurrent compare of every item against a broadcast datum."""
+    if mask is not None:
+        x = x & mask
+        datum = jnp.asarray(datum) & mask
+    return _OPS[op](x, datum)
+
+
+def lex_compare_lt(words: jax.Array, datum: jax.Array) -> jax.Array:
+    """Multi-word ``<`` via the paper's §6.1 carry-chain algorithm.
+
+    ``words``: (..., n_items, n_words) with word significance decreasing
+    left-to-right (words[..., 0] most significant).  ``datum``: (n_words,).
+    Scans from least to most significant word — ~n_words concurrent steps:
+        lt = (w < d) | ((w == d) & lt_from_right)
+    """
+    n_words = words.shape[-1]
+
+    def step(carry, j):
+        w = words[..., j]
+        d = datum[j]
+        return (w < d) | ((w == d) & carry), None
+
+    init = jnp.zeros(words.shape[:-1], dtype=bool)
+    out, _ = jax.lax.scan(step, init, jnp.arange(n_words - 1, -1, -1))
+    return out
+
+
+def histogram(x: jax.Array, edges: jax.Array) -> jax.Array:
+    """Paper §6.3: M-section histogram in ~M concurrent count steps.
+
+    ``edges``: (M+1,) ascending section limits.  Returns (M,) counts of
+    items in [edges[i], edges[i+1]).  Each step is one broadcast compare +
+    one Rule-6 parallel count.
+    """
+    def below(e):
+        return count_matches(compare(x, e, "lt"))
+
+    cum = jax.vmap(below)(edges)        # M+1 concurrent compare+count steps
+    return jnp.diff(cum)
+
+
+def quantile_threshold(x: jax.Array, k, lo, hi, iters: int = 24) -> jax.Array:
+    """Smallest t such that count(x > t) < k — bisection over value range.
+
+    Each iteration is one compare + one parallel count (~1 cycle in CPM
+    terms); ``iters`` iterations give value resolution (hi-lo)/2**iters.
+    Used for top-k/top-p mask construction without a full sort.
+    """
+    lo = jnp.asarray(lo, dtype=x.dtype)
+    hi = jnp.asarray(hi, dtype=x.dtype)
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = (lo + hi) / 2
+        above = count_matches(compare(x, mid, "gt"))
+        keep_hi = above >= k            # too many above -> raise threshold
+        return jnp.where(keep_hi, mid, lo), jnp.where(keep_hi, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    return hi
+
+
+def topk_mask(x: jax.Array, k: int, axis: int = -1) -> jax.Array:
+    """Boolean mask of the k largest entries along ``axis``.
+
+    The content-comparable formulation: one threshold lookup + one compare.
+    Ties at the threshold are broken by address (first-match priority, R6).
+    """
+    x = jax.lax.stop_gradient(jnp.moveaxis(x, axis, -1))  # boolean output: no tangent
+    kth = -jnp.sort(-x, axis=-1)[..., k - 1 : k]
+    gt = x > kth
+    eq = x == kth
+    need = k - jnp.sum(gt, axis=-1, keepdims=True)
+    tie_rank = jnp.cumsum(eq, axis=-1)
+    mask = gt | (eq & (tie_rank <= need))
+    if axis != -1:
+        mask = jnp.moveaxis(mask, -1, axis)
+    return mask

@@ -1,0 +1,331 @@
+"""Content computable memory (paper §7): the general SIMD array algorithms.
+
+Implements, with the paper's concurrent-step structure preserved:
+  §7.3  local stencil algebra  (`+` and `#` composition, Eq. 7-2..7-12)
+  §7.4  two-phase sectioned sum       ~(M + N/M)  -> ~sqrt(N)
+  §7.5  global limit (same pattern)
+  §7.6  template matching             ~M^2 (1-D), ~Mx^2*My (2-D), size-free
+  §7.7  sorting: odd-even local exchange, defect detection (Fig. 13),
+        hybrid local+global ~sqrt(N)
+  §7.9  messenger line detection      ~D^2, image-size-free
+
+Every op reports its *concurrent step count* (the paper's instruction-cycle
+currency) via the companion ``*_steps`` functions so benchmarks can check the
+paper's complexity claims directly.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# the §7.4 cost model lives in the op table — one definition repo-wide
+from ..optable import optimal_section, two_phase_steps
+
+
+# ---------------------------------------------------------------------------
+# §7.4 / §7.5 — two-phase sectioned global reductions
+# ---------------------------------------------------------------------------
+
+
+def section_sum(x: jax.Array, section: int | None = None) -> jax.Array:
+    """Paper §7.4 two-phase sum along the last axis.
+
+    Phase 1: all M-item sections reduce concurrently (ring carry, ~M steps).
+    Phase 2: the N/M section sums combine (~N/M steps).
+    Lowered as two reductions so XLA sees the same dataflow shape.
+    """
+    n = x.shape[-1]
+    m = section or optimal_section(n)
+    pad = (-n) % m
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    sec = x.reshape(*x.shape[:-1], -1, m)
+    return jnp.sum(jnp.sum(sec, axis=-1), axis=-1)
+
+
+def section_sum_steps(n: int, section: int | None = None) -> int:
+    return two_phase_steps(n, section)
+
+
+def section_limit(x: jax.Array, section: int | None = None, mode: str = "max") -> jax.Array:
+    """Paper §7.5: global limit with the same two-phase structure."""
+    n = x.shape[-1]
+    m = section or optimal_section(n)
+    pad = (-n) % m
+    op = jnp.max if mode == "max" else jnp.min
+    if pad:
+        from ..semantics import limit_identity
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)],
+                    constant_values=limit_identity(x.dtype, mode))
+    sec = x.reshape(*x.shape[:-1], -1, m)
+    return op(op(sec, axis=-1), axis=-1)
+
+
+def section_sum_2d(x: jax.Array, mx: int | None = None, my: int | None = None) -> jax.Array:
+    """Paper §7.4 2-D sum: row phase, column phase, serial section scan.
+
+    Optimal at Mx ~ My ~ cbrt(Nx*Ny): total ~(Mx + My + Nx/Mx * Ny/My).
+    """
+    ny, nx = x.shape[-2], x.shape[-1]
+    m = max(1, round((nx * ny) ** (1.0 / 3.0)))
+    mx = mx or m
+    my = my or m
+    px, py = (-nx) % mx, (-ny) % my
+    if px or py:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 2) + [(0, py), (0, px)])
+    sec = x.reshape(*x.shape[:-2], x.shape[-2] // my, my, x.shape[-1] // mx, mx)
+    return jnp.sum(sec, axis=(-3, -2, -1)).sum(axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# §7.3 — local stencil algebra
+# ---------------------------------------------------------------------------
+
+def compose_taps(a, b):
+    """The ``#`` operator (Eq. 7-6): applying A then B == conv(A, B)."""
+    return np.convolve(np.asarray(a), np.asarray(b))
+
+
+def add_taps(a, b):
+    """The ``+`` operator (Eq. 7-3): center-aligned tap addition."""
+    a, b = np.asarray(a), np.asarray(b)
+    n = max(a.shape[0], b.shape[0])
+    pa, pb = (n - a.shape[0]) // 2, (n - b.shape[0]) // 2
+    return np.pad(a, (pa, pa)) + np.pad(b, (pb, pb))
+
+
+def stencil_1d(x: jax.Array, taps, wrap: bool = True) -> jax.Array:
+    """Apply an odd-length tap vector by M neighbor-shift accumulations.
+
+    Index convention matches §7.3: taps[center + k] weights the neighbor k
+    places to the *left* (lower address) being accumulated into each PE, i.e.
+    (1 0 0) denotes the content of the left layer.
+
+    ``wrap=True`` treats the row as a ring (historical behavior);
+    ``wrap=False`` zero-pads past the row ends — the canonical `repro.cpm`
+    convention, matching the Pallas kernel's ``wrap=`` flag.
+    """
+    taps = np.asarray(taps)
+    n = x.shape[-1]
+    idx = jnp.arange(n)
+    c = taps.shape[0] // 2
+    out = jnp.zeros_like(x, dtype=jnp.result_type(x.dtype, jnp.float32)
+                         if jnp.issubdtype(x.dtype, jnp.integer) else x.dtype)
+    for k in range(-c, c + 1):          # ~M concurrent shift+multiply-add steps
+        w = taps[c + k]
+        if w == 0:
+            continue
+        shifted = jnp.roll(x, k, axis=-1)
+        if not wrap:                    # drop contributions that wrapped
+            if k > 0:
+                shifted = jnp.where(idx >= k, shifted, 0)
+            elif k < 0:
+                shifted = jnp.where(idx < n + k, shifted, 0)
+        out = out + w * shifted
+    return out
+
+
+def stencil_2d(x: jax.Array, taps2d) -> jax.Array:
+    """2-D stencil via neighbor shifts (square lattice, §7.1)."""
+    taps2d = np.asarray(taps2d)
+    cy, cx = taps2d.shape[0] // 2, taps2d.shape[1] // 2
+    out = jnp.zeros_like(x, dtype=jnp.result_type(x.dtype, jnp.float32)
+                         if jnp.issubdtype(x.dtype, jnp.integer) else x.dtype)
+    for dy in range(-cy, cy + 1):
+        for dx in range(-cx, cx + 1):
+            w = taps2d[cy + dy, cx + dx]
+            if w == 0:
+                continue
+            out = out + w * jnp.roll(jnp.roll(x, dy, axis=-2), dx, axis=-1)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# §7.7 — sorting
+# ---------------------------------------------------------------------------
+
+def count_disorder(x: jax.Array, descending: bool = False) -> jax.Array:
+    """Rule 6 applied to sorting: # of neighbors violating the order."""
+    a, b = x[..., :-1], x[..., 1:]
+    bad = (a > b) if not descending else (a < b)
+    return jnp.sum(bad.astype(jnp.int32), axis=-1)
+
+
+def odd_even_step(x: jax.Array, odd_phase) -> jax.Array:
+    """One concurrent compare-exchange of all (even,odd) or (odd,even) pairs.
+
+    ~1 instruction cycle in the paper; one vector min/max + select here.
+    """
+    n = x.shape[-1]
+    idx = jnp.arange(n)
+    odd_phase = jnp.asarray(odd_phase)
+    is_left = (idx % 2) == (odd_phase % 2)
+    partner = jnp.clip(jnp.where(is_left, idx + 1, idx - 1), 0, n - 1)
+    px = jnp.take(x, partner, axis=-1)
+    lo = jnp.minimum(x, px)
+    hi = jnp.maximum(x, px)
+    out = jnp.where(is_left, lo, hi)
+    # boundary PEs without a partner keep their value
+    solo = (partner == idx) | (is_left & (idx == n - 1))
+    return jnp.where(solo, x, out)
+
+
+def odd_even_sort(x: jax.Array, steps: int | None = None) -> jax.Array:
+    """Local-exchange sort: ``steps`` alternating odd/even exchange cycles.
+
+    Full sort needs N steps; the hybrid algorithm (below) stops at ~sqrt(N).
+    """
+    n = x.shape[-1]
+    steps = n if steps is None else steps
+
+    def body(i, x):
+        return odd_even_step(x, i % 2)
+
+    return jax.lax.fori_loop(0, steps, body, x)
+
+
+def detect_defects(x: jax.Array) -> dict[str, jax.Array]:
+    """Fig. 13 point-defect classification in each neighborhood (~4 cycles).
+
+    peak:  x[i] > both neighbors;  valley: x[i] < both neighbors;
+    fault: an exchanged adjacent pair inside otherwise sorted context.
+    """
+    left = jnp.roll(x, 1, axis=-1).at[..., 0].set(-jnp.inf)
+    right = jnp.roll(x, -1, axis=-1).at[..., -1].set(jnp.inf)
+    peak = (x > left) & (x > right)
+    valley = (x < left) & (x < right)
+    r2 = jnp.roll(x, -2, axis=-1).at[..., -2:].set(jnp.inf)
+    l2 = jnp.roll(x, 2, axis=-1).at[..., :2].set(-jnp.inf)
+    fault = (x > right) & (x <= r2) & (right >= left) & (l2 <= right)
+    return {"peak": peak & ~fault, "valley": valley & ~fault, "fault": fault}
+
+
+def hybrid_sort(x: jax.Array, local_steps: int | None = None) -> jax.Array:
+    """Paper §7.7 ~sqrt(N) strategy: local exchange then global defect moves.
+
+    Phase 1: ~sqrt(N) odd-even cycles leave ~sqrt(N)-spaced point defects.
+    Phase 2: global move — each round concurrently detects defects (R6) and
+    inserts the worst remaining peak/valley at its destination via movable-
+    memory range shifts (~2 cycles each); loops until the disorder counter
+    reads zero.  A while_loop bounds phase 2 by the remaining disorder.
+    """
+    from .movable import insert, delete
+
+    n = x.shape[-1]
+    m = local_steps or optimal_section(n)
+    x = odd_even_sort(x, m)
+
+    def fix_one(x):
+        # faults fix concurrently by one exchange step pair (~2 cycles)
+        x = odd_even_step(odd_even_step(x, 0), 1)
+        d = detect_defects(x)
+        any_defect = d["peak"] | d["valley"]
+        idx = jnp.where(any_defect, jnp.arange(n), n)
+        pos = jnp.min(idx)
+
+        def move(x):
+            p = jnp.minimum(pos, n - 1)
+            v = x[p]
+            is_peak = d["peak"][p]
+            # remove the defect, then insert at its sorted destination
+            removed = delete(x, pos, 1, n,
+                             fill=jnp.where(is_peak, x.dtype.type(jnp.inf),
+                                            x.dtype.type(-jnp.inf))
+                             if jnp.issubdtype(x.dtype, jnp.floating) else 0)
+            dest = jnp.sum((removed[: n - 1] < v).astype(jnp.int32))
+            return insert(removed, dest, v[None], n)
+
+        return jax.lax.cond(pos < n, move, lambda x: x, x)
+
+    def cond(x):
+        return count_disorder(x) > 0
+
+    def body(x):
+        return fix_one(x)
+
+    return jax.lax.while_loop(cond, body, x)
+
+
+def hybrid_sort_steps(n: int) -> int:
+    return two_phase_steps(n)
+
+
+# ---------------------------------------------------------------------------
+# §7.6 — template matching (SAD over all alignments)
+# ---------------------------------------------------------------------------
+
+def template_match_1d(data: jax.Array, template: jax.Array) -> jax.Array:
+    """SAD of the template at every start position (~M concurrent steps here;
+    ~M^2 in the paper's section-local schedule — both image-size-free).
+
+    Output o[p] = sum_j |data[p+j] - template[j]|, positions running off the
+    end wrap (callers mask the tail).
+    """
+    m = template.shape[-1]
+
+    def step(acc, j):
+        shifted = jnp.roll(data, -j, axis=-1)
+        return acc + jnp.abs(shifted - template[j]), None
+
+    acc = jnp.zeros(data.shape, dtype=jnp.result_type(data.dtype, jnp.float32)
+                    if jnp.issubdtype(data.dtype, jnp.integer) else data.dtype)
+    out, _ = jax.lax.scan(step, acc, jnp.arange(m))
+    return out
+
+
+def template_match_2d(data: jax.Array, template: jax.Array) -> jax.Array:
+    """2-D SAD at every (y, x) start position (wrapping tail)."""
+    my, mx = template.shape[-2], template.shape[-1]
+
+    def step(acc, ji):
+        j, i = ji // mx, ji % mx
+        shifted = jnp.roll(jnp.roll(data, -j, axis=-2), -i, axis=-1)
+        return acc + jnp.abs(shifted - template[j, i]), None
+
+    acc = jnp.zeros(data.shape, dtype=jnp.result_type(data.dtype, jnp.float32)
+                    if jnp.issubdtype(data.dtype, jnp.integer) else data.dtype)
+    out, _ = jax.lax.scan(step, acc, jnp.arange(my * mx))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# §7.9 — messenger line detection
+# ---------------------------------------------------------------------------
+
+def line_segment_value(img: jax.Array, mx: int, my: int) -> jax.Array:
+    """Messenger accumulation for slope my/mx (Fig. 14), all pixels at once.
+
+    A messenger walks (mx+my) steps from the far corner of each pixel's
+    (mx x my) area back to the pixel, adding intensities left of the ideal
+    line and subtracting those right of it.  ~(mx+my) concurrent steps,
+    image-size independent.
+    """
+    steps = []
+    x, y = mx, my
+    # Bresenham-style walk from (mx, my) to (0, 0)
+    while x > 0 or y > 0:
+        if x * my >= y * mx and x > 0:
+            x -= 1
+            steps.append((0, 1))       # step left in x: roll +1 in axis -1
+        else:
+            y -= 1
+            steps.append((1, 0))
+        # sign: pixels below the ideal line add, above subtract
+    acc = jnp.zeros(img.shape, dtype=jnp.float32)
+    px, py = mx, my
+    for dy, dx in steps:
+        side = 1.0 if px * my - py * mx >= 0 else -1.0
+        contrib = jnp.roll(jnp.roll(img, -py, axis=-2), -px, axis=-1)
+        acc = acc + side * contrib
+        px, py = px - dx, py - dy
+    return acc
+
+
+def edge_along_x(img: jax.Array, length: int) -> jax.Array:
+    """§7.9 axis-aligned edge detector: vertical gradient, L-neighbor sum."""
+    grad = jnp.roll(img, -1, axis=-2) - jnp.roll(img, 1, axis=-2)
+    taps = np.ones(2 * length + 1)
+    taps[:length] = 0                   # only the L left neighbors + self
+    return stencil_1d(grad, taps)

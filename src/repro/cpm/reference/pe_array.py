@@ -1,0 +1,109 @@
+"""Rules 4 & 6 of the CPM paper: PE activation and self-identification.
+
+The paper's *general decoder* (§3.3) activates every PE whose element address
+``a`` satisfies::
+
+    start <= a <= end   and   (a - start) % carry == 0          (Rule 4)
+
+in ~1 instruction cycle, by composing (1) a carry-pattern generator,
+(2) a parallel shifter and (3) an all-line decoder.  On TPU the decoder is a
+vectorized predicate over an iota — also O(1).  Both the fused predicate and
+the paper's three-stage decomposition are provided; tests assert equivalence.
+
+Rule 6 (match line -> priority encoder / parallel counter) becomes global
+predicate reductions: ``count_matches`` (parallel counter), ``first_match``
+(priority encoder), ``enumerate_matches``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Rule 4 — the general decoder
+# ---------------------------------------------------------------------------
+
+def activation_mask(n: int, start, end, carry=1) -> jax.Array:
+    """Fused general decoder: O(1) boolean activation mask of length ``n``."""
+    addr = jnp.arange(n)
+    start = jnp.asarray(start)
+    end = jnp.asarray(end)
+    carry = jnp.maximum(jnp.asarray(carry), 1)
+    return (addr >= start) & (addr <= end) & ((addr - start) % carry == 0)
+
+
+def carry_pattern(n: int, carry) -> jax.Array:
+    """Paper Eq. 3-1: assert every address that is a multiple of ``carry``.
+
+    D[0] is always asserted; D[a] is asserted iff a % carry == 0.
+    """
+    addr = jnp.arange(n)
+    carry = jnp.maximum(jnp.asarray(carry), 1)
+    return addr % carry == 0
+
+
+def parallel_shift(bits: jax.Array, shift) -> jax.Array:
+    """Paper Eq. 3-2 / Fig. 2: H[a] = D[a - s] if a >= s else 0.
+
+    Implemented as the paper does — an accumulative barrel shifter over the
+    binary digits of ``shift`` (each digit shifts by 2**j) — expressed with a
+    scan so the lowering matches the log-depth hardware structure.
+    """
+    n = bits.shape[0]
+    nbits = max(1, (n - 1).bit_length())
+    shift = jnp.asarray(shift)
+
+    def stage(h, j):
+        take = (shift >> j) & 1
+        shifted = jnp.roll(h, 1 << j)
+        # zero the wrapped-around low addresses
+        shifted = jnp.where(jnp.arange(n) < (1 << j), False, shifted)
+        return jnp.where(take == 1, shifted, h), None
+
+    out, _ = jax.lax.scan(stage, bits, jnp.arange(nbits))
+    return out
+
+
+def all_line(n: int, end) -> jax.Array:
+    """Paper Eq. 3-3 / Fig. 3: assert every address <= ``end``."""
+    return jnp.arange(n) <= jnp.asarray(end)
+
+
+def general_decoder(n: int, start, end, carry=1) -> jax.Array:
+    """Paper §3.3 three-stage decoder: carry pattern -> shift -> all-line AND."""
+    return parallel_shift(carry_pattern(n, carry), start) & all_line(n, end)
+
+
+# ---------------------------------------------------------------------------
+# Rule 6 — match line, parallel counter, priority encoder
+# ---------------------------------------------------------------------------
+
+def count_matches(match: jax.Array) -> jax.Array:
+    """Parallel counter: number of asserted match lines (any shape)."""
+    return jnp.sum(match.astype(jnp.int32))
+
+
+def any_match(match: jax.Array) -> jax.Array:
+    return jnp.any(match)
+
+
+def first_match(match: jax.Array) -> jax.Array:
+    """Priority encoder: lowest asserted address, or n if none asserted."""
+    n = match.shape[-1]
+    idx = jnp.where(match, jnp.arange(n), n)
+    return jnp.min(idx, axis=-1)
+
+
+def enumerate_matches(match: jax.Array, max_out: int) -> tuple[jax.Array, jax.Array]:
+    """Materialize up to ``max_out`` asserted addresses in ascending order.
+
+    Returns ``(indices, valid)``; unused slots hold ``n``.  Replaces the
+    paper's serial priority-encoder drain with a single sort — on TPU the
+    one-shot materialization is cheaper than a serial drain.
+    """
+    n = match.shape[-1]
+    keyed = jnp.where(match, jnp.arange(n), n)
+    ordered = jnp.sort(keyed)[:max_out]
+    return ordered, ordered < n

@@ -1,0 +1,85 @@
+"""Content searchable memory (paper §5): streaming substring match.
+
+Each PE compares its register against a broadcast ``(datum, mask)`` and ANDs
+the result with its *right* neighbor's storage bit (Fig. 6), so matching an
+M-item needle takes ~M instruction cycles with no alignment or length limit.
+
+The TPU realization is a ``scan`` over needle positions — one concurrent
+compare + one neighbor shift per step, exactly the paper's cycle structure.
+Used by ``repro.serve.spec`` for n-gram/draft verification over on-device
+token buffers.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def masked_eq(hay: jax.Array, datum, mask=None) -> jax.Array:
+    """One concurrent compare: (hay & mask) == (datum & mask)."""
+    if mask is None:
+        return hay == datum
+    return (hay & mask) == (jnp.asarray(datum) & mask)
+
+
+def substring_match(hay: jax.Array, needle: jax.Array,
+                    needle_len=None, mask=None) -> jax.Array:
+    """Match ``needle`` everywhere in ``hay``; True at match *end* positions.
+
+    Paper §5.1: step 0 matches needle[0] with self-code true; step i>0 ANDs
+    the compare of needle[i] with the right-shifted storage bit.  ~M steps.
+
+    ``needle_len`` (optional, dynamic) restricts to a needle prefix so a
+    single compiled program serves any needle length <= needle.shape[0].
+    """
+    m = needle.shape[-1]
+    if needle_len is None:
+        needle_len = m
+
+    def step(state, i):
+        hit = masked_eq(hay, needle[i], mask)
+        shifted = jnp.roll(state, 1, axis=-1).at[..., 0].set(False)
+        new = jnp.where(i == 0, hit, hit & shifted)
+        # steps beyond the live needle leave the storage bits untouched
+        return jnp.where(i < needle_len, new, state), None
+
+    init = jnp.zeros(hay.shape, dtype=bool)
+    out, _ = jax.lax.scan(step, init, jnp.arange(m))
+    return out
+
+
+def find_all(hay: jax.Array, needle: jax.Array, max_out: int):
+    """Start addresses of every occurrence (ascending), via Rule 6."""
+    from ..semantics import ends_to_starts
+    from .pe_array import enumerate_matches
+    ends = substring_match(hay, needle)
+    return enumerate_matches(ends_to_starts(ends, needle.shape[-1]), max_out)
+
+
+def verify_draft(draft: jax.Array, target: jax.Array) -> jax.Array:
+    """Speculative-decode acceptance: longest matching prefix length.
+
+    ``draft[i]`` is accepted iff all ``draft[:i+1] == target[:i+1]`` — the
+    searchable-memory carry chain applied along the draft. O(log) steps via
+    cumulative AND.
+    """
+    ok = jnp.cumprod((draft == target).astype(jnp.int32), axis=-1)
+    return jnp.sum(ok, axis=-1)
+
+
+def ngram_lookup(context: jax.Array, ngram: jax.Array, max_out: int = 8):
+    """Find previous occurrences of the trailing n-gram in the context.
+
+    Prompt-lookup decoding: candidate continuations start right after each
+    historical occurrence of the current n-gram.  Returns (starts, valid) of
+    the *continuation* positions.
+    """
+    n = ngram.shape[-1]
+    ends = substring_match(context, ngram)
+    # continuation begins one past the match end; exclude the trailing self-match
+    idx = jnp.arange(context.shape[-1])
+    ends = ends & (idx < context.shape[-1] - 1)
+    from .pe_array import enumerate_matches
+    starts, valid = enumerate_matches(ends, max_out)
+    return jnp.where(valid, starts + 1, starts), valid

@@ -1,0 +1,73 @@
+"""Canonical result conventions shared by every backend.
+
+Historically the reference ops and the Pallas kernels disagreed on details:
+substring matches were reported at match *end* addresses (the paper's Fig. 6
+carry chain asserts the match line when the last needle item compares), while
+``find_all`` spoke in *start* addresses; template match and stencil let
+positions run off the row end and wrap (``jnp.roll``), leaving an
+implementation-defined tail.
+
+``repro.cpm`` fixes one canonical convention:
+
+  * substring matches are reported at **start** addresses (the address a user
+    would index with); the raw end-address view is one documented converter
+    away (`starts_to_ends` / `ends_to_starts`).
+  * sliding-window ops (template match) report every start whose window fits:
+    tail positions ``p > n - m`` are *invalid* and masked (`window_valid`).
+  * stencils default to zero padding at the row ends (no wrap); the ring
+    (wrapping) view stays available via ``wrap=True``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ends_to_starts(ends: jax.Array, m: int) -> jax.Array:
+    """Convert match-*end* flags to match-*start* flags for an m-item needle.
+
+    A match ending at address ``e`` starts at ``e - (m - 1)``; end flags in
+    the first ``m - 1`` addresses cannot be complete matches and are dropped
+    (the roll would wrap them into the tail).
+    """
+    n = ends.shape[-1]
+    starts = jnp.roll(ends, -(m - 1), axis=-1)
+    return starts & (jnp.arange(n) <= n - m)
+
+
+def starts_to_ends(starts: jax.Array, m: int) -> jax.Array:
+    """Inverse of :func:`ends_to_starts` (start flags -> end flags)."""
+    n = starts.shape[-1]
+    ends = jnp.roll(starts, m - 1, axis=-1)
+    return ends & (jnp.arange(n) >= m - 1)
+
+
+def window_valid(n: int, m: int, used_len=None) -> jax.Array:
+    """Validity flag per start address of an m-item sliding window.
+
+    Position ``p`` is valid iff the whole window lies inside the used region:
+    ``p + m <= used_len`` (``used_len`` defaults to the physical length; a
+    per-batch vector broadcasts against a trailing address axis).
+    """
+    used = jnp.asarray(n if used_len is None else used_len)
+    return jnp.arange(n) + m <= (used[..., None] if used.ndim else used)
+
+
+def limit_identity(dtype, mode: str):
+    """Identity element of the §7.5 global-limit reduction for ``dtype``.
+
+    The one definition every backend (reference, pallas kernel pad/acc,
+    mesh pad) uses for its fill, so the cross-backend bit-identity contract
+    cannot be broken by divergent fill conventions.
+    """
+    if jnp.issubdtype(jnp.dtype(dtype), jnp.integer):
+        info = jnp.iinfo(dtype)
+        return info.min if mode == "max" else info.max
+    return -jnp.inf if mode == "max" else jnp.inf
+
+
+def mask_window_tail(out: jax.Array, m: int, used_len=None, fill=jnp.inf):
+    """Mask sliding-window results at invalid tail starts with ``fill``."""
+    valid = window_valid(out.shape[-1], m, used_len)
+    return jnp.where(valid, out, jnp.asarray(fill, out.dtype))

@@ -5,17 +5,26 @@ kernel body is the broadcast instruction stream (Rule 5), intra-block shifts
 are neighbor reads (Rule 7).
 
 Kernels:
+  * ``activate``        — §3.3 Rule-4 general decoder (range + carry mask).
+  * ``shift_range``     — §4.1 concurrent range move (roll + select in VMEM).
   * ``oddeven_sort``    — §7.7 local-exchange sort, N compare-exchange cycles
                           entirely in VMEM (used by MoE routing).
+  * ``compare``         — §6.1 broadcast-datum compare, one VPU cycle.
+  * ``histogram``       — §6.3 M-bin histogram, one compare+count per edge.
   * ``section_sum``     — §7.4 two-phase reduction: concurrent per-section
                           sums (phase 1, one grid step per section batch)
                           accumulated across the grid (phase 2).
+  * ``section_limit``   — §7.5 global max/min with the same structure.
   * ``template_match``  — §7.6 sliding SAD, ~M shift-accumulate cycles.
   * ``substring_match`` — §5 streaming needle match with neighbor carry.
-  * ``stencil``         — §7.3 tap algebra, ~M shift-multiply-accumulate.
+  * ``stencil``         — §7.3 tap algebra, ~M shift-multiply-accumulate
+                          (``wrap=False`` zero-pads the row ends instead of
+                          wrapping, matching the canonical `repro.cpm`
+                          semantics).
 
 All take ``interpret=`` so the CPU container executes the kernel bodies for
-validation; on TPU pass interpret=False.
+validation; on TPU pass interpret=False.  These kernels are the ``pallas``
+backend of ``repro.cpm`` — prefer driving them through ``CPMArray``.
 """
 
 from __future__ import annotations
@@ -27,6 +36,82 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+
+# ---------------------------------------------------------------------------
+# §3.3 Rule 4 — the general decoder
+# ---------------------------------------------------------------------------
+
+def _activate_kernel(p_ref, o_ref, *, n: int):
+    start, end = p_ref[0, 0], p_ref[0, 1]
+    carry = jnp.maximum(p_ref[0, 2], 1)
+    idx = jax.lax.broadcasted_iota(jnp.int32, (1, n), 1)
+    mask = (idx >= start) & (idx <= end) & ((idx - start) % carry == 0)
+    o_ref[...] = mask.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "interpret"))
+def activate(n: int, start, end, carry=1, *, interpret: bool = True) -> jax.Array:
+    """Rule-4 activation mask of length ``n`` as one VPU predicate cycle."""
+    params = jnp.stack([jnp.asarray(start, jnp.int32),
+                        jnp.asarray(end, jnp.int32),
+                        jnp.asarray(carry, jnp.int32)]).reshape(1, 3)
+    out = pl.pallas_call(
+        functools.partial(_activate_kernel, n=n),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.VMEM)],
+        out_specs=pl.BlockSpec(memory_space=pltpu.VMEM),
+        out_shape=jax.ShapeDtypeStruct((1, n), jnp.int8),
+        interpret=interpret,
+    )(params)
+    return out[0].astype(bool)
+
+
+# ---------------------------------------------------------------------------
+# §4.1 — concurrent range move
+# ---------------------------------------------------------------------------
+
+def _shift_range_kernel(x_ref, p_ref, f_ref, o_ref, *, n: int, shift: int,
+                        has_fill: bool):
+    x = x_ref[...]
+    start, end = p_ref[0, 0], p_ref[0, 1]
+    idx = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    src_mask = (idx >= start) & (idx <= end)
+    moved = jnp.roll(x, shift, axis=-1)
+    dst_mask = jnp.roll(src_mask, shift, axis=-1)
+    if shift > 0:
+        dst_mask = dst_mask & (idx >= shift)
+    elif shift < 0:
+        dst_mask = dst_mask & (idx < n + shift)
+    out = jnp.where(dst_mask, moved, x)
+    if has_fill:
+        out = jnp.where(src_mask & ~dst_mask, f_ref[0, 0], out)
+    o_ref[...] = out
+
+
+@functools.partial(jax.jit, static_argnames=("shift", "interpret"))
+def shift_range(x: jax.Array, start, end, shift: int = 1, fill=None, *,
+                interpret: bool = True) -> jax.Array:
+    """Move the [start, end] range of every (R, N) row by ``shift`` places.
+
+    Same semantics as ``repro.cpm.reference.movable.shift_range`` — vacated
+    slots keep old content unless ``fill`` is given; content crossing the
+    physical ends is dropped.  One concurrent roll+select cycle in VMEM.
+    """
+    r, n = x.shape
+    params = jnp.stack([jnp.asarray(start, jnp.int32),
+                        jnp.asarray(end, jnp.int32)]).reshape(1, 2)
+    fill_arr = jnp.asarray(0 if fill is None else fill, x.dtype).reshape(1, 1)
+    return pl.pallas_call(
+        functools.partial(_shift_range_kernel, n=n, shift=shift,
+                          has_fill=fill is not None),
+        grid=(r,),
+        in_specs=[pl.BlockSpec((1, n), lambda i: (i, 0)),
+                  pl.BlockSpec((1, 2), lambda i: (0, 0)),
+                  pl.BlockSpec((1, 1), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((1, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, n), x.dtype),
+        interpret=interpret,
+    )(x, params, fill_arr)
 
 
 # ---------------------------------------------------------------------------
@@ -75,7 +160,7 @@ def _section_sum_kernel(x_ref, o_ref, acc_ref):
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     # phase 1: concurrent in-section reduction of this VMEM block
-    acc_ref[...] += jnp.sum(x_ref[...].astype(jnp.float32), axis=-1,
+    acc_ref[...] += jnp.sum(x_ref[...].astype(acc_ref.dtype), axis=-1,
                             keepdims=True)
 
     # phase 2: the running accumulator marches across sections (grid order)
@@ -87,8 +172,14 @@ def _section_sum_kernel(x_ref, o_ref, acc_ref):
 @functools.partial(jax.jit, static_argnames=("section", "interpret"))
 def section_sum(x: jax.Array, section: int = 1024, *,
                 interpret: bool = True) -> jax.Array:
-    """Two-phase global sum of a 1-D array; section = VMEM block size."""
+    """Two-phase global sum of a 1-D array; section = VMEM block size.
+
+    Integer inputs accumulate in int32 (exact, matching ``jnp.sum``
+    semantics); floats accumulate in float32.
+    """
     n = x.shape[-1]
+    acc_dtype = (jnp.int32 if jnp.issubdtype(x.dtype, jnp.integer)
+                 else jnp.float32)
     pad = (-n) % section
     if pad:
         x = jnp.pad(x, (0, pad))
@@ -99,11 +190,134 @@ def section_sum(x: jax.Array, section: int = 1024, *,
         grid=(nsec,),
         in_specs=[pl.BlockSpec((1, section), lambda i: (0, i))],
         out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
-        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
-        scratch_shapes=[pltpu.VMEM((1, 1), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((1, 1), acc_dtype),
+        scratch_shapes=[pltpu.VMEM((1, 1), acc_dtype)],
         interpret=interpret,
     )(xs)
-    return out[0, 0].astype(jnp.promote_types(x.dtype, jnp.float32))
+    return out[0, 0].astype(jnp.promote_types(x.dtype, acc_dtype))
+
+
+# ---------------------------------------------------------------------------
+# §6.1 broadcast compare + §6.3 histogram
+# ---------------------------------------------------------------------------
+
+_CMP = {
+    "eq": lambda a, b: a == b,
+    "ne": lambda a, b: a != b,
+    "lt": lambda a, b: a < b,
+    "gt": lambda a, b: a > b,
+    "le": lambda a, b: a <= b,
+    "ge": lambda a, b: a >= b,
+}
+
+
+def _compare_kernel(x_ref, d_ref, o_ref, *, op: str):
+    o_ref[...] = _CMP[op](x_ref[...], d_ref[0, 0]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("op", "interpret"))
+def compare(x: jax.Array, datum, op: str = "eq", *,
+            interpret: bool = True) -> jax.Array:
+    """(R, N) rows vs a broadcast datum: one concurrent VPU compare.
+
+    Mixed dtypes promote (never truncate toward ``x.dtype``): comparing int
+    rows against 2.5 compares against 2.5, matching the reference oracle.
+    """
+    ct = jnp.promote_types(x.dtype, jnp.asarray(datum).dtype)
+    x = x.astype(ct)
+    r, n = x.shape
+    d = jnp.asarray(datum, ct).reshape(1, 1)
+    out = pl.pallas_call(
+        functools.partial(_compare_kernel, op=op),
+        grid=(r,),
+        in_specs=[pl.BlockSpec((1, n), lambda i: (i, 0)),
+                  pl.BlockSpec((1, 1), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((1, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, n), jnp.int8),
+        interpret=interpret,
+    )(x, d)
+    return out.astype(bool)
+
+
+def _histogram_kernel(x_ref, e_ref, o_ref, *, m: int):
+    x = x_ref[...]                                   # (1, N)
+    # one broadcast compare + Rule-6 parallel count per section edge
+    below = (x < e_ref[...].reshape(m + 1, 1)).astype(jnp.int32)
+    cum = jnp.sum(below, axis=-1)                    # (M+1,)
+    o_ref[...] = (cum[1:] - cum[:-1]).reshape(1, m)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def histogram(x: jax.Array, edges: jax.Array, *,
+              interpret: bool = True) -> jax.Array:
+    """(N,) values x (M+1,) ascending edges -> (M,) counts (§6.3, ~M cycles).
+
+    Mixed dtypes promote (fractional edges stay fractional on int data).
+    """
+    ct = jnp.promote_types(x.dtype, edges.dtype)
+    n = x.shape[-1]
+    m = edges.shape[-1] - 1
+    out = pl.pallas_call(
+        functools.partial(_histogram_kernel, m=m),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.VMEM),
+                  pl.BlockSpec(memory_space=pltpu.VMEM)],
+        out_specs=pl.BlockSpec(memory_space=pltpu.VMEM),
+        out_shape=jax.ShapeDtypeStruct((1, m), jnp.int32),
+        interpret=interpret,
+    )(x.astype(ct).reshape(1, n), edges.astype(ct).reshape(1, m + 1))
+    return out[0]
+
+
+# ---------------------------------------------------------------------------
+# §7.5 two-phase sectioned limit (global max/min)
+# ---------------------------------------------------------------------------
+
+def _section_limit_kernel(x_ref, o_ref, acc_ref, *, mode: str, init):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _():
+        acc_ref[...] = jnp.full_like(acc_ref, init)
+
+    red = jnp.max if mode == "max" else jnp.min
+    cmb = jnp.maximum if mode == "max" else jnp.minimum
+    acc_ref[...] = cmb(acc_ref[...],
+                       red(x_ref[...].astype(acc_ref.dtype), axis=-1,
+                           keepdims=True))
+
+    @pl.when(i == pl.num_programs(0) - 1)
+    def _():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("section", "mode", "interpret"))
+def section_limit(x: jax.Array, section: int = 1024, mode: str = "max", *,
+                  interpret: bool = True) -> jax.Array:
+    """Two-phase global max/min of a 1-D array (§7.5); section = block size."""
+    # function-level import: keeps the kernels module import-free of the
+    # cpm package at module scope (backends.pallas imports this module)
+    from repro.cpm.semantics import limit_identity
+
+    n = x.shape[-1]
+    acc_dtype = (jnp.int32 if jnp.issubdtype(x.dtype, jnp.integer)
+                 else jnp.float32)
+    pad_fill = limit_identity(x.dtype, mode)
+    fill = limit_identity(acc_dtype, mode)
+    pad = (-n) % section
+    if pad:
+        x = jnp.pad(x, (0, pad), constant_values=pad_fill)
+    xs = x.reshape(1, -1)
+    nsec = xs.shape[-1] // section
+    out = pl.pallas_call(
+        functools.partial(_section_limit_kernel, mode=mode, init=fill),
+        grid=(nsec,),
+        in_specs=[pl.BlockSpec((1, section), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), acc_dtype),
+        scratch_shapes=[pltpu.VMEM((1, 1), acc_dtype)],
+        interpret=interpret,
+    )(xs)
+    return out[0, 0].astype(x.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -175,24 +389,37 @@ def substring_match(hay: jax.Array, needle: jax.Array, *,
 # §7.3 stencil (row-wise tap accumulation)
 # ---------------------------------------------------------------------------
 
-def _stencil_kernel(x_ref, o_ref, *, taps: tuple[float, ...]):
+def _stencil_kernel(x_ref, o_ref, *, taps: tuple[float, ...], wrap: bool):
     x = x_ref[...].astype(jnp.float32)
+    n = x.shape[-1]
+    idx = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
     c = len(taps) // 2
     acc = jnp.zeros_like(x)
     for k, w in enumerate(taps):        # unrolled ~M shift-mul-add cycles
         if w == 0:
             continue
-        acc = acc + w * jnp.roll(x, k - c, axis=-1)
+        shifted = jnp.roll(x, k - c, axis=-1)
+        if not wrap:                    # zero the lanes that wrapped around
+            if k - c > 0:
+                shifted = jnp.where(idx >= k - c, shifted, 0.0)
+            elif k - c < 0:
+                shifted = jnp.where(idx < n + (k - c), shifted, 0.0)
+        acc = acc + w * shifted
     o_ref[...] = acc
 
 
-@functools.partial(jax.jit, static_argnames=("taps", "interpret"))
-def stencil(x: jax.Array, taps: tuple[float, ...], *,
+@functools.partial(jax.jit, static_argnames=("taps", "wrap", "interpret"))
+def stencil(x: jax.Array, taps: tuple[float, ...], *, wrap: bool = True,
             interpret: bool = True) -> jax.Array:
-    """(R, N) rows filtered by an odd-length tap vector (wrapping ends)."""
+    """(R, N) rows filtered by an odd-length tap vector.
+
+    ``wrap=True`` keeps the historical ring semantics (row ends wrap);
+    ``wrap=False`` zero-pads the row ends — the canonical `repro.cpm`
+    convention (see ``repro.cpm.semantics``).
+    """
     r, n = x.shape
     return pl.pallas_call(
-        functools.partial(_stencil_kernel, taps=taps),
+        functools.partial(_stencil_kernel, taps=taps, wrap=wrap),
         grid=(r,),
         in_specs=[pl.BlockSpec((1, n), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((1, n), lambda i: (i, 0)),

@@ -154,20 +154,20 @@ def oddeven_sort_ref(x):
 
 
 def section_sum_ref(x, section=None):
-    from repro.core.computable import section_sum
+    from repro.cpm.reference.computable import section_sum
     return section_sum(x, section)
 
 
 def template_match_ref(data, template):
-    from repro.core.computable import template_match_1d
+    from repro.cpm.reference.computable import template_match_1d
     return template_match_1d(data, template)
 
 
 def substring_match_ref(hay, needle):
-    from repro.core.searchable import substring_match
+    from repro.cpm.reference.searchable import substring_match
     return substring_match(hay, needle)
 
 
 def stencil_ref(x, taps):
-    from repro.core.computable import stencil_1d
+    from repro.cpm.reference.computable import stencil_1d
     return stencil_1d(x, taps)

@@ -26,7 +26,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.distributed.sharding import shard
 from repro.kernels import ops
-from repro.core import comparable
+from repro.cpm.reference import comparable
 
 Params = dict
 COMPUTE_DTYPE = jnp.bfloat16
@@ -267,7 +267,7 @@ def init_moe(cfg: ModelConfig, key) -> Params:
 def apply_moe(p: Params, x: jax.Array, cfg: ModelConfig):
     """Top-k capacity routing.
 
-    Routing mask via ``repro.core.comparable.topk_mask`` — the paper's
+    Routing mask via ``repro.cpm.reference.comparable.topk_mask`` — the paper's
     content-comparable memory: every token PE compares its expert scores
     against the broadcast k-th value concurrently (~1 cycle), replacing a
     serial arg-top-k.  Load statistics come from Rule-6 parallel counting.

@@ -44,7 +44,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core import searchable
+from repro.cpm.reference import searchable
 from repro.models import lm
 from . import kv_cache, sampling
 

@@ -10,6 +10,8 @@ round-trip over the bus.  This is the paper's thesis applied to serving:
   * prefix-cache splice      = range insert (`splice_prefix`)
 
 All ops treat the slot axis (-2 of (B, KVH, S, dh)) as the PE address axis.
+The insert/truncate paths run through :class:`repro.cpm.CPMArray` — the
+cache is literally a CPM device whose ``used_len`` is the `len` leaf.
 """
 
 from __future__ import annotations
@@ -17,7 +19,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import movable
+from repro.cpm import CPMArray
 
 
 def _map_kv(cache_tree, fn):
@@ -54,6 +56,8 @@ def truncate(caches, new_len):
     def walk(node):
         if isinstance(node, dict):
             if "len" in node and "k" in node:
+                # CPMArray.truncate semantics on the slot axis: lengths only,
+                # data stays put (the used-region mask excludes it)
                 return dict(node, len=jnp.minimum(node["len"], new_len))
             return {kk: vv if kk == "cross_kv" else walk(vv)
                     for kk, vv in node.items()}
@@ -117,9 +121,15 @@ def splice_prefix(k: jax.Array, v: jax.Array, pk: jax.Array, pv: jax.Array,
     s = k.shape[2]
 
     def ins(x, px):
+        def per_col(col, pcol):                   # (S,) slot column
+            # reference backend: under vmap+jit this fuses into one XLA
+            # roll+select; auto-dispatch could pick a per-column Pallas
+            # kernel launch on TPU, which would be wrong here
+            return CPMArray(col, jnp.asarray(used_len, jnp.int32),
+                            backend="reference").insert(0, pcol).data
+
         def per_row(row, prow):                   # row (S, dh)
-            return jax.vmap(lambda col, pcol: movable.insert(
-                col, 0, pcol, used_len), in_axes=(-1, -1), out_axes=-1)(row, prow)
+            return jax.vmap(per_col, in_axes=(-1, -1), out_axes=-1)(row, prow)
         return jax.vmap(jax.vmap(per_row))(x, px)
 
     return ins(k, pk), ins(v, pv), used_len + plen
@@ -129,6 +139,6 @@ def evict_by_score(k, v, scores, keep_count: int):
     """Importance-based eviction (H2O-style): keep the ``keep_count`` slots
     with highest attention mass.  Threshold from the content-comparable
     bisection; compaction via content-movable packing."""
-    from repro.core import comparable
+    from repro.cpm.reference import comparable
     keep = comparable.topk_mask(scores, keep_count)   # (B, S)
     return compact_slots(k, v, keep)

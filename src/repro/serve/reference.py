@@ -26,7 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import searchable
+from repro.cpm.reference import searchable
 from repro.models import lm
 from . import kv_cache, sampling
 from .engine import GenConfig

@@ -12,7 +12,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import comparable
+from repro.cpm.reference import comparable
 
 
 def greedy(logits: jax.Array) -> jax.Array:

@@ -4,7 +4,7 @@ remat+pattern-scan forward, AdamW update.
 Gradient synchronization: with FSDP/DP shardings, GSPMD inserts the
 reduce-scatter/all-reduce schedule — on a torus this is the paper's §8
 super-connectivity (log-depth) realization of the §7.4 two-phase sum.  The
-R7-faithful ring schedule is available in ``repro.core.collectives`` and is
+R7-faithful ring schedule is available in ``repro.cpm.collectives`` and is
 compared in the benchmarks; the compiled collective bytes are identical.
 """
 

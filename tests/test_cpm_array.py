@@ -1,0 +1,352 @@
+"""`repro.cpm` — the unified operator surface.
+
+Covers the PR-2 acceptance criteria: all five op families through
+``CPMArray`` on the reference and pallas backends with bit-identical
+results; mesh covered for section_sum/global_limit under a 2-device CPU
+mesh (subprocess, so the main process keeps its single-device view);
+pytree/jit/vmap compatibility with a traced ``used_len``; the canonical
+match semantics with its converters; and the kernel-vs-reference tail
+equivalence for the sliding-window ops.
+"""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.cpm as cpm
+from repro.cpm import CPMArray, cpm_array
+from repro.cpm.reference import computable
+from repro.kernels import cpm_kernels
+
+jax.config.update("jax_platform_name", "cpu")
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def int_data(seed, n, lo=0, hi=7):
+    return jax.random.randint(jax.random.PRNGKey(seed), (n,), lo, hi)
+
+
+def pair(data, used):
+    """(reference, pallas-interpret) views of the same device state."""
+    return (cpm_array(data, used, backend="reference"),
+            cpm_array(data, used, backend="pallas", interpret=True))
+
+
+# ---------------------------------------------------------------------------
+# cross-backend differential: all five families, bit-identical
+# ---------------------------------------------------------------------------
+
+class TestBackendDifferential:
+    @pytest.mark.parametrize("n,used", [(64, 50), (130, 130), (96, 17)])
+    def test_activate_family(self, n, used):
+        ref, pal = pair(int_data(n, n), used)
+        np.testing.assert_array_equal(np.asarray(ref.activate(3, n - 2, 3)),
+                                      np.asarray(pal.activate(3, n - 2, 3)))
+
+    @pytest.mark.parametrize("n,used", [(64, 50), (130, 100)])
+    def test_move_family(self, n, used):
+        ref, pal = pair(int_data(n, n), used)
+        for get in (lambda a: a.insert(4, jnp.array([9, 9])),
+                    lambda a: a.delete(4, 2),
+                    lambda a: a.shift(2, used - 1, 3),
+                    lambda a: a.shift(5, used - 1, -2, fill=-1)):
+            r, p = get(ref), get(pal)
+            np.testing.assert_array_equal(np.asarray(r.data), np.asarray(p.data))
+            np.testing.assert_array_equal(np.asarray(r.used_len),
+                                          np.asarray(p.used_len))
+
+    @pytest.mark.parametrize("n,used", [(64, 50), (130, 130)])
+    def test_search_family(self, n, used):
+        data = int_data(n, n, 0, 4)
+        ref, pal = pair(data, used)
+        nee = data[5:8]
+        for where in ("start", "end"):
+            np.testing.assert_array_equal(
+                np.asarray(ref.substring_match(nee, where=where)),
+                np.asarray(pal.substring_match(nee, where=where)))
+        ri, rv = ref.find_all(nee, 8)
+        pi, pv = pal.find_all(nee, 8)
+        np.testing.assert_array_equal(np.asarray(ri), np.asarray(pi))
+        np.testing.assert_array_equal(np.asarray(rv), np.asarray(pv))
+
+    @pytest.mark.parametrize("n,used", [(64, 50), (130, 130)])
+    def test_compare_family(self, n, used):
+        ref, pal = pair(int_data(n, n), used)
+        for op in ("eq", "lt", "ge"):
+            np.testing.assert_array_equal(np.asarray(ref.compare(3, op)),
+                                          np.asarray(pal.compare(3, op)))
+            np.testing.assert_array_equal(np.asarray(ref.count(3, op)),
+                                          np.asarray(pal.count(3, op)))
+        edges = jnp.array([0, 2, 4, 7])
+        np.testing.assert_array_equal(np.asarray(ref.histogram(edges)),
+                                      np.asarray(pal.histogram(edges)))
+
+    @pytest.mark.parametrize("n,used", [(64, 50), (130, 100)])
+    def test_compute_family(self, n, used):
+        data = int_data(n, n)
+        ref, pal = pair(data, used)
+        np.testing.assert_array_equal(np.asarray(ref.section_sum()),
+                                      np.asarray(pal.section_sum()))
+        for mode in ("max", "min"):
+            np.testing.assert_array_equal(np.asarray(ref.global_limit(mode)),
+                                          np.asarray(pal.global_limit(mode)))
+        np.testing.assert_array_equal(np.asarray(ref.sort().data),
+                                      np.asarray(pal.sort().data))
+        fref, fpal = pair(data.astype(jnp.float32), used)
+        t = data[3:6].astype(jnp.float32)
+        np.testing.assert_array_equal(np.asarray(fref.template_match(t)),
+                                      np.asarray(fpal.template_match(t)))
+        for wrap in (False, True):
+            np.testing.assert_array_equal(
+                np.asarray(fref.stencil((1.0, 2.0, 1.0), wrap=wrap)),
+                np.asarray(fpal.stencil((1.0, 2.0, 1.0), wrap=wrap)))
+
+    def test_float_section_sum_tolerance(self):
+        """Float reductions differ by accumulation order across backends —
+        the contract is tolerance, not bit-identity (ints ARE bit-exact)."""
+        data = jax.random.normal(jax.random.PRNGKey(5), (4096,))
+        ref, pal = pair(data, 4096)
+        np.testing.assert_allclose(np.asarray(ref.section_sum()),
+                                   np.asarray(pal.section_sum()), rtol=1e-5)
+
+    def test_large_int_section_sum_exact(self):
+        """Integer sums must accumulate exactly (int32, not float32) even
+        when intermediates exceed the f32 mantissa (2^24)."""
+        data = jax.random.randint(jax.random.PRNGKey(3), (4096,), 0, 1 << 16)
+        ref, pal = pair(data, 4096)
+        np.testing.assert_array_equal(np.asarray(ref.section_sum()),
+                                      np.asarray(pal.section_sum()))
+        assert int(ref.section_sum()) == int(np.asarray(data, np.int64).sum())
+
+    def test_compare_promotes_float_datum(self):
+        """A fractional threshold on an int array must not be truncated."""
+        arr = cpm_array(jnp.array([0, 1, 2, 3], jnp.int32))
+        for backend in ("reference", "pallas"):
+            a = cpm_array(arr.data, backend=backend,
+                          interpret=True if backend == "pallas" else None)
+            np.testing.assert_array_equal(np.asarray(a.compare(2.5, "lt")),
+                                          [True, True, True, False])
+
+    def test_forced_backend_rejects_unsupported_op(self):
+        arr = cpm_array(jnp.arange(8), backend="mesh")
+        with pytest.raises(NotImplementedError):
+            arr.sort()
+
+
+# ---------------------------------------------------------------------------
+# satellite: wrapping-tail consistency (kernel vs reference, tails included)
+# ---------------------------------------------------------------------------
+
+class TestWindowTailSemantics:
+    @pytest.mark.parametrize("n,m", [(32, 4), (65, 7)])
+    def test_template_kernel_matches_reference_including_tail(self, n, m):
+        """Raw kernel and raw reference agree at *every* position — including
+        the wrapped tail — and the canonical surface masks that tail."""
+        data = jax.random.normal(jax.random.PRNGKey(0), (1, n))
+        t = jax.random.normal(jax.random.PRNGKey(1), (m,))
+        raw_kernel = np.asarray(cpm_kernels.template_match(data, t))[0]
+        raw_ref = np.asarray(computable.template_match_1d(data[0], t))
+        np.testing.assert_array_equal(raw_kernel, raw_ref)
+
+        ref, pal = pair(data[0], n)
+        for arr in (ref, pal):
+            out = np.asarray(arr.template_match(t))
+            assert np.all(np.isinf(out[n - m + 1:])), "tail not masked"
+            assert np.all(np.isfinite(out[: n - m + 1]))
+
+    @pytest.mark.parametrize("taps", [(1.0, 2.0, 1.0), (1.0, 1.0, 1.0, 1.0, 1.0)])
+    def test_stencil_wrap_flag_consistent(self, taps):
+        x = jax.random.normal(jax.random.PRNGKey(2), (2, 33))
+        for wrap in (False, True):
+            got = np.asarray(cpm_kernels.stencil(x, taps, wrap=wrap))
+            want = np.asarray(jax.vmap(
+                lambda r: computable.stencil_1d(r, list(taps), wrap=wrap))(x))
+            np.testing.assert_allclose(got, want, atol=1e-6)
+        # the two conventions genuinely differ at the row ends
+        a = np.asarray(cpm_kernels.stencil(x, taps, wrap=True))
+        b = np.asarray(cpm_kernels.stencil(x, taps, wrap=False))
+        assert not np.allclose(a[:, 0], b[:, 0])
+
+    def test_stencil_wrap_true_is_historical_ring(self):
+        """wrap=True must reproduce the historical full-buffer ring even on
+        a partially-used array (no masked zeros leaking into the ring)."""
+        x = jnp.arange(1.0, 9.0)
+        arr = cpm_array(x, used_len=4)
+        got = np.asarray(arr.stencil((1.0, 0.0, 0.0), wrap=True))
+        want = np.asarray(computable.stencil_1d(x, [1.0, 0.0, 0.0]))
+        np.testing.assert_array_equal(got, want)
+
+    def test_used_len_tightens_window_validity(self):
+        data = jnp.arange(16.0)
+        arr = cpm_array(data, used_len=10)
+        out = np.asarray(arr.template_match(jnp.array([1.0, 2, 3])))
+        assert np.all(np.isinf(out[8:]))      # windows past used_len invalid
+        assert np.all(np.isfinite(out[:8]))
+
+
+# ---------------------------------------------------------------------------
+# canonical match semantics + converters
+# ---------------------------------------------------------------------------
+
+class TestSemantics:
+    def test_start_end_round_trip(self):
+        hay = jnp.array(list(b"abracadabra"), jnp.int32)
+        nee = jnp.array(list(b"abra"), jnp.int32)
+        arr = cpm_array(hay)
+        starts = arr.substring_match(nee, where="start")
+        ends = arr.substring_match(nee, where="end")
+        np.testing.assert_array_equal(np.where(np.asarray(starts))[0], [0, 7])
+        np.testing.assert_array_equal(np.where(np.asarray(ends))[0], [3, 10])
+        np.testing.assert_array_equal(
+            np.asarray(cpm.ends_to_starts(ends, 4)), np.asarray(starts))
+        np.testing.assert_array_equal(
+            np.asarray(cpm.starts_to_ends(starts, 4)), np.asarray(ends))
+
+    def test_match_restricted_to_used_region(self):
+        hay = jnp.array(list(b"abcabcabc"), jnp.int32)
+        arr = cpm_array(hay, used_len=5)       # "abcab"
+        starts = arr.substring_match(jnp.array(list(b"abc"), jnp.int32))
+        np.testing.assert_array_equal(np.where(np.asarray(starts))[0], [0])
+
+    def test_window_valid(self):
+        v = np.asarray(cpm.window_valid(8, 3, 6))
+        np.testing.assert_array_equal(np.where(v)[0], [0, 1, 2, 3])
+
+
+# ---------------------------------------------------------------------------
+# satellite: pytree / jit / vmap compatibility
+# ---------------------------------------------------------------------------
+
+class TestTransformCompat:
+    def test_pytree_roundtrip_preserves_aux(self):
+        arr = cpm_array(jnp.arange(8), 5, backend="pallas", interpret=True)
+        leaves, tree = jax.tree_util.tree_flatten(arr)
+        assert len(leaves) == 2
+        back = jax.tree_util.tree_unflatten(tree, leaves)
+        assert back.backend == "pallas" and back.interpret is True
+        np.testing.assert_array_equal(np.asarray(back.data),
+                                      np.asarray(arr.data))
+
+    def test_jit_no_recompile_across_used_len(self):
+        """used_len is a traced leaf: one trace serves every length."""
+        data = jnp.arange(16, dtype=jnp.int32)
+        traces = [0]
+
+        @jax.jit
+        def f(arr, datum):
+            traces[0] += 1
+            return arr.count(datum), arr.section_sum()
+
+        got = {}
+        for length in (3, 9, 14):
+            c, s = f(cpm_array(data, jnp.int32(length)), 4)
+            got[length] = (int(c), int(s))
+        assert traces[0] == 1, f"retraced {traces[0]}x across used_len values"
+        for length, (c, s) in got.items():
+            assert c == sum(1 for v in range(length) if v == 4)
+            assert s == sum(range(length))
+
+    def test_jit_returns_cpm_array(self):
+        @jax.jit
+        def grow(arr):
+            return arr.insert(0, jnp.array([7, 7]))
+
+        out = grow(cpm_array(jnp.arange(8), 4))
+        assert isinstance(out, CPMArray)
+        assert int(out.used_len) == 6
+        np.testing.assert_array_equal(np.asarray(out.data)[:6],
+                                      [7, 7, 0, 1, 2, 3])
+
+    def test_batched_template_match_per_row_lengths(self):
+        """window_valid broadcasts a per-batch used_len like every other op."""
+        arr = CPMArray(jnp.arange(24.0).reshape(4, 6),
+                       jnp.array([2, 4, 6, 3], jnp.int32))
+        out = np.asarray(arr.template_match(jnp.array([1.0, 2.0])))
+        assert out.shape == (4, 6)
+        for row_i, used in enumerate([2, 4, 6, 3]):
+            assert np.all(np.isinf(out[row_i, max(used - 1, 0):]))
+
+    def test_vmap_per_row_lengths(self):
+        batch = jnp.arange(24, dtype=jnp.int32).reshape(4, 6)
+        lens = jnp.array([2, 4, 6, 3], jnp.int32)
+        arr = CPMArray(batch, lens)
+        sums = jax.vmap(lambda a: a.section_sum())(arr)
+        want = [sum(range(i * 6, i * 6 + int(l))) for i, l in enumerate(lens)]
+        np.testing.assert_array_equal(np.asarray(sums), want)
+        sorted_arr = jax.vmap(lambda a: a.sort())(arr)
+        assert isinstance(sorted_arr, CPMArray)
+        np.testing.assert_array_equal(np.asarray(sorted_arr.used_len),
+                                      np.asarray(lens))
+
+
+# ---------------------------------------------------------------------------
+# op table: step formulas against the paper bounds
+# ---------------------------------------------------------------------------
+
+class TestOpTable:
+    def test_all_families_registered(self):
+        assert set(cpm.FAMILIES) == {s.family for s in cpm.OP_TABLE.values()}
+
+    @pytest.mark.parametrize("n", [64, 1000, 4096])
+    def test_steps_report_within_bounds(self, n):
+        arr = cpm_array(jnp.zeros(n))
+        report = arr.steps_report(needle_len=8, bins=16, template_len=8)
+        assert report["substring_match"] == 8
+        assert report["histogram"] == 17
+        assert report["compare"] == 1 and report["insert"] == 2
+        assert report["section_sum"] <= 2 * int(np.ceil(np.sqrt(n))) + 1
+
+    def test_bound_violation_raises(self):
+        with pytest.raises(AssertionError):
+            cpm.op_steps("section_sum", n=4096, section=4096)  # 1 section: N steps
+
+    def test_backend_coverage_matches_table(self):
+        for name in ("reference", "pallas"):
+            ops = set(cpm.ops_for_backend(name))
+            for fam in cpm.FAMILIES:
+                assert any(cpm.OP_TABLE[o].family == fam for o in ops), \
+                    f"{name} backend covers no {fam!r} op"
+        assert {"section_sum", "global_limit"} <= set(cpm.ops_for_backend("mesh"))
+
+
+# ---------------------------------------------------------------------------
+# mesh backend under a real 2-device CPU mesh (subprocess)
+# ---------------------------------------------------------------------------
+
+MESH_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+import jax, jax.numpy as jnp, numpy as np
+import repro.cpm as cpm
+
+assert len(jax.devices()) == 2
+data = jnp.arange(13, dtype=jnp.int32)
+for used in (13, 7):
+    mesh = cpm.cpm_array(data, used, backend="mesh")
+    ref = cpm.cpm_array(data, used, backend="reference")
+    np.testing.assert_array_equal(np.asarray(mesh.section_sum()),
+                                  np.asarray(ref.section_sum()))
+    for mode in ("max", "min"):
+        np.testing.assert_array_equal(np.asarray(mesh.global_limit(mode)),
+                                      np.asarray(ref.global_limit(mode)))
+    np.testing.assert_array_equal(np.asarray(mesh.compare(4, "lt")),
+                                  np.asarray(ref.compare(4, "lt")))
+print("MESH_BACKEND_OK")
+"""
+
+
+@pytest.mark.slow
+def test_mesh_backend_two_devices():
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO_ROOT, "src"),
+               JAX_PLATFORMS="cpu")
+    r = subprocess.run([sys.executable, "-c", MESH_SCRIPT],
+                       capture_output=True, text=True, cwd=REPO_ROOT, env=env)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "MESH_BACKEND_OK" in r.stdout

@@ -125,6 +125,17 @@ class TestCPMKernels:
         want = np.asarray(jax.vmap(lambda h: ref.substring_match_ref(h, nee))(hay))
         np.testing.assert_array_equal(got, want)
 
+    def test_compare_histogram_promote_float_datum(self):
+        """Raw kernels promote mixed dtypes like the reference oracle —
+        a fractional threshold on int rows must not truncate."""
+        x = jnp.array([[0, 1, 2, 3]], jnp.int32)
+        got = cpm_kernels.compare(x, 2.5, "lt")
+        np.testing.assert_array_equal(np.asarray(got),
+                                      [[True, True, True, False]])
+        h = cpm_kernels.histogram(jnp.array([0, 1, 2, 3], jnp.int32),
+                                  jnp.array([0.0, 1.5, 4.0]))
+        np.testing.assert_array_equal(np.asarray(h), [2, 2])
+
     @pytest.mark.parametrize("taps", [(1.0, 2.0, 1.0), (1.0, 1.0, 1.0, 1.0, 1.0)])
     def test_stencil(self, taps):
         x = jax.random.normal(jax.random.PRNGKey(4), (2, 64))

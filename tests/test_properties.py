@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings, strategies as st
 
-from repro.core import comparable, computable, movable, searchable
+from repro.cpm.reference import comparable, computable, movable, searchable
 from repro.serve import sampling
 
 
@@ -79,6 +79,64 @@ class TestCacheInvariants:
         assert n == sum(keep)
         want = np.asarray(k)[0, 0][np.asarray(keep)]
         np.testing.assert_array_equal(np.asarray(ks)[0, 0, :n], want)
+
+
+class TestMovableInvariants:
+    """§4 content-movable semantics at range boundaries (PR-2 satellite)."""
+
+    @given(st.lists(st.integers(-5, 5), min_size=1, max_size=8),
+           st.integers(0, 24), st.integers(1, 20))
+    @settings(max_examples=40, deadline=None)
+    def test_insert_delete_roundtrip(self, vals, pos, used):
+        """delete(insert(x, p, v), p, len(v)) restores the used prefix."""
+        n = 32
+        k = len(vals)
+        used = min(used, n - k)
+        pos = min(pos, used)
+        x = jnp.asarray((np.arange(n) * 7 + 3) % 23, jnp.int32)
+        v = jnp.asarray(vals, jnp.int32)
+        y = movable.insert(x, pos, v, used)
+        # the inserted window must actually be present before deleting
+        np.testing.assert_array_equal(np.asarray(y)[pos: pos + k], vals)
+        z = movable.delete(y, pos, k, used + k)
+        np.testing.assert_array_equal(np.asarray(z)[:used],
+                                      np.asarray(x)[:used])
+
+    @given(st.integers(0, 31), st.integers(0, 31), st.integers(1, 5))
+    @settings(max_examples=40, deadline=None)
+    def test_shift_right_fill_and_drop(self, a, b, s):
+        """shift>0: [start+s, end+s]∩[0,n) receives, overflow past the
+        physical end is dropped, vacated low slots take the fill."""
+        n = 32
+        start, end = min(a, b), max(a, b)
+        x = np.arange(n) + 1
+        out = np.asarray(movable.shift_range(jnp.asarray(x), start, end, s,
+                                             fill=-7))
+        want = x.copy()
+        for i in range(n):
+            if start + s <= i <= min(end + s, n - 1):
+                want[i] = x[i - s]                   # moved content
+            elif start <= i <= min(end, start + s - 1):
+                want[i] = -7                         # vacated, filled
+        np.testing.assert_array_equal(out, want)
+
+    @given(st.integers(0, 31), st.integers(0, 31), st.integers(1, 5))
+    @settings(max_examples=40, deadline=None)
+    def test_shift_left_fill_and_drop(self, a, b, s):
+        """shift<0: content crossing address 0 is dropped, vacated high
+        slots of the range take the fill."""
+        n = 32
+        start, end = min(a, b), max(a, b)
+        x = np.arange(n) + 1
+        out = np.asarray(movable.shift_range(jnp.asarray(x), start, end, -s,
+                                             fill=-7))
+        want = x.copy()
+        for i in range(n):
+            if max(start - s, 0) <= i <= end - s:
+                want[i] = x[i + s]
+            elif max(start, end - s + 1) <= i <= end:
+                want[i] = -7
+        np.testing.assert_array_equal(out, want)
 
 
 class TestAlgebraInvariants:
