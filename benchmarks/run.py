@@ -11,6 +11,9 @@ instruction-cycle *complexity* claims rather than wall-clock tables:
   T6  1-D template match                            ~M^2 cycles      (§7.6)
   T7  line detection at radius D                    ~D^2 cycles      (§7.9)
   T8  super-connectivity upgrade                    sqrt(N) -> log N (§8)
+      — both as collective schedules (ring vs tree all-reduce) and as the
+      CPMArray ``super_sum``/``super_limit`` ops, whose jaxpr-measured
+      trip counts the ``cpm_ops`` scenario asserts <= ~2*log2(N)+1.
 
 Each bench validates the claim in the *concurrent-step* currency (derived
 column) and reports wall-clock us_per_call of the TPU-adapted JAX lowering.
@@ -237,13 +240,18 @@ def bench_cpm_ops():
         "histogram": lambda a: a.histogram(edges),
         "section_sum": lambda a: a.section_sum(),
         "global_limit": lambda a: a.global_limit("max"),
+        "super_sum": lambda a: a.super_sum(),
+        "super_limit": lambda a: a.super_limit("max"),
         "sort": lambda a: a.sort().data,
         "template_match": lambda a: a.template_match(template),
         "stencil": lambda a: a.stencil(taps),
     }
     # reference lowerings whose step structure is a literal scan: the jaxpr
-    # trip count must equal the registered formula
-    scan_structured = {"substring_match", "template_match"}
+    # trip count must equal the registered formula.  For the §8 super ops
+    # (T8: the sqrt(N) -> log N upgrade) the scan trips are the tree levels
+    # of both phases, asserted below against the ~2*log2(N)+1 paper bound.
+    scan_structured = {"substring_match", "template_match",
+                       "super_sum", "super_limit"}
     # ops lowering to a constant number of vector ops: the jaxpr must be
     # loop-free (O(1) concurrent steps regardless of N)
     loop_free = {"activate", "shift", "insert", "delete", "compare",
@@ -267,8 +275,23 @@ def bench_cpm_ops():
                     assert steps == formula, (op, steps, formula)
                 elif op in loop_free:
                     assert no_loops, f"{op}: unexpected loop in lowering"
+                if op in ("super_sum", "super_limit"):
+                    # T8: measured log-depth schedule obeys ~2*log2(N)+1
+                    cap = spec.bound(n=n)
+                    assert steps <= cap, (op, steps, cap)
             row(f"CPM_{op}_{backend}_N{n}", us,
                 f"steps={formula};family={spec.family};paper={spec.paper}")
+
+    # T8 super-connectivity upgrade at the CPMArray surface: jaxpr-measured
+    # trip counts of the §8 schedule vs the §7.4 two-phase, across sizes
+    for nn in (4096, 65536, 1048576):
+        zeros = cpm_array(jnp.zeros(nn, jnp.int32), backend="reference")
+        meas, _ = measured_steps(jax.jit(lambda a: a.super_sum()), zeros)
+        cap = OP_TABLE["super_sum"].bound(n=nn)
+        assert meas == op_steps("super_sum", n=nn), (nn, meas)
+        assert meas <= cap, (nn, meas, cap)
+        row(f"T8_super_sum_trips_N{nn}", 0.0,
+            f"steps={meas}<=2log2N+1={cap};two_phase={op_steps('section_sum', n=nn)}")
 
     # mesh backend (chips as PEs) for its table entries, on 8 host devices
     script = r"""
@@ -277,6 +300,8 @@ from repro.cpm import cpm_array
 data = jax.random.randint(jax.random.PRNGKey(0), (4096,), 0, 16)
 for op, call in [("section_sum", lambda a: a.section_sum()),
                  ("global_limit", lambda a: a.global_limit("max")),
+                 ("super_sum", lambda a: a.super_sum()),
+                 ("super_limit", lambda a: a.super_limit("max")),
                  ("compare", lambda a: a.compare(8, "lt"))]:
     arr = cpm_array(data, 4089, backend="mesh")
     f = jax.jit(lambda a, call=call: call(a))
@@ -386,13 +411,27 @@ SCENARIOS = {
 
 
 def main(argv=None) -> None:
-    names = (argv if argv is not None else sys.argv[1:]) or list(SCENARIOS)
+    args = list(argv if argv is not None else sys.argv[1:])
+    json_path = None
+    if "--json" in args:                       # --json PATH: machine-readable
+        i = args.index("--json")               # copy of the CSV rows (CI
+        if i + 1 >= len(args):                 # uploads it as an artifact)
+            raise SystemExit("--json requires a PATH operand")
+        json_path = args[i + 1]
+        del args[i:i + 2]
+    names = args or list(SCENARIOS)
     unknown = [s for s in names if s not in SCENARIOS]
     if unknown:
         raise SystemExit(f"unknown scenario(s) {unknown}; have {list(SCENARIOS)}")
     print("name,us_per_call,derived")
     for s in names:
         SCENARIOS[s]()
+    if json_path:
+        import json
+        with open(json_path, "w") as fh:
+            json.dump([{"name": n, "us_per_call": us, "derived": d}
+                       for n, us, d in ROWS], fh, indent=1)
+        print(f"wrote {len(ROWS)} rows to {json_path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

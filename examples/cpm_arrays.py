@@ -49,6 +49,17 @@ def main():
     print(f"  sum={float(x.section_sum()):.3f} "
           f"max={float(x.global_limit('max')):.3f} "
           f"in ~{cpm.op_steps('section_sum', n=4096)} steps (vs 4096 serial)")
+    print("== §8 super-connectivity: same sums, log-depth combine")
+    print(f"  super_sum={float(x.super_sum()):.3f} "
+          f"in ~{cpm.op_steps('super_sum', n=4096)} steps "
+          f"(vs ~{cpm.op_steps('section_sum', n=4096)} two-phase)")
+
+    print("== Batched rows: one kernel launch, per-row used_len")
+    rows = cpm.CPMArray(jnp.arange(24, dtype=jnp.int32).reshape(3, 8),
+                        jnp.array([8, 4, 2], jnp.int32), backend="pallas",
+                        interpret=True)
+    print("  per-row sums:", np.asarray(rows.section_sum()).tolist(),
+          "(single pallas_call over a rows x sections grid)")
     srt = cpm_array(jax.random.permutation(jax.random.PRNGKey(2),
                                            jnp.arange(64.0))).sort()
     print("  sort ok:", bool((srt.data[1:] >= srt.data[:-1]).all()))

@@ -8,8 +8,8 @@ Public API:
   * ``backends`` — the :class:`~repro.cpm.backends.Backend` protocol and the
     ``reference`` / ``pallas`` / ``mesh`` realizations.
   * ``OP_TABLE`` / :func:`op_steps` — the op registry with each op's
-    concurrent-step-count formula (the complexity table of §3–§7, registered
-    once).
+    concurrent-step-count formula (the complexity table of §3–§8, registered
+    once — including the §8 super-connected ``super_sum``/``super_limit``).
   * ``semantics`` — the canonical result conventions (match-start flags,
     masked window tails) and the converters between them.
   * ``reference`` — the pure-`jnp` op modules (formerly ``repro.core``).

@@ -22,10 +22,14 @@ Ops that read the used region mask the tail identically on every backend,
 so differential tests demand bit-identical results for every discrete op
 (activate, moves, matches, compares, sort) and for integer reductions;
 float reductions (`section_sum`) may differ by accumulation order across
-backends and agree to float tolerance instead.  Batched layouts
-work through ``jax.vmap`` (the pytree registration carries ``data`` and
-``used_len`` together); the in-place move ops expect a scalar ``used_len``
-per call — vmap over the array for per-row lengths.
+backends and agree to float tolerance instead.  Reductions
+(`section_sum`, `global_limit`, `histogram`, `super_sum`, `super_limit`)
+are row-batched: a ``(*batch, n)`` layout with per-row ``used_len``
+dispatches as ONE backend call — one Pallas launch over a
+(rows, sections) grid, never a vmap over per-row launches.  ``jax.vmap``
+still works (the pytree registration carries ``data`` and ``used_len``
+together); the in-place move ops expect a scalar ``used_len`` per call —
+vmap over the array for per-row lengths.
 """
 
 from __future__ import annotations
@@ -161,9 +165,10 @@ class CPMArray:
         return pe_array.count_matches(self.compare(datum, op, mask))
 
     def histogram(self, edges) -> jax.Array:
-        """M-bin histogram of the used region (~M compare+count steps)."""
-        if self.data.ndim != 1:
-            raise ValueError("histogram is 1-D; vmap over batched arrays")
+        """Per-row M-bin histogram of the used region (~M compare+count
+        steps).  Batched ``(*batch, n)`` layouts dispatch as ONE backend
+        call (one Pallas launch over a rows x sections grid) and return
+        ``(*batch, M)`` counts."""
         edges = jnp.asarray(edges)
         ct = jnp.promote_types(self.dtype, edges.dtype)
         x, e = self.data.astype(ct), edges.astype(ct)
@@ -171,22 +176,40 @@ class CPMArray:
         x = jnp.where(self._live(), x, e[-1])
         return self._b("histogram").histogram(x, e)
 
-    # -- family: compute / reduce (§7) ---------------------------------------
+    # -- family: compute / reduce (§7–§8) ------------------------------------
+    def _masked(self, fill) -> jax.Array:
+        return jnp.where(self._live(), self.data,
+                         jnp.asarray(fill, self.dtype))
+
     def section_sum(self, section: int | None = None) -> jax.Array:
-        """Two-phase global sum of the used region (~2·sqrt(N) steps)."""
-        if self.data.ndim != 1:
-            raise ValueError("section_sum is 1-D; vmap over batched arrays")
-        x = jnp.where(self._live(), self.data, jnp.asarray(0, self.dtype))
-        return self._b("section_sum").section_sum(x, section)
+        """Two-phase per-row sum of the used region (~2·sqrt(N) steps).
+
+        Batched layouts reduce in ONE backend call — ``(*batch, n)`` data
+        with ``(*batch,)`` (or scalar) ``used_len`` returns ``(*batch,)``
+        sums from a single tiled kernel launch on the pallas backend.
+        """
+        return self._b("section_sum").section_sum(self._masked(0), section)
 
     def global_limit(self, mode: str = "max",
                      section: int | None = None) -> jax.Array:
-        """Two-phase global max/min of the used region (§7.5)."""
-        if self.data.ndim != 1:
-            raise ValueError("global_limit is 1-D; vmap over batched arrays")
+        """Two-phase per-row max/min of the used region (§7.5); batched
+        layouts reduce in ONE backend call like :meth:`section_sum`."""
         fill = semantics.limit_identity(self.dtype, mode)
-        x = jnp.where(self._live(), self.data, jnp.asarray(fill, self.dtype))
-        return self._b("global_limit").global_limit(x, mode, section)
+        return self._b("global_limit").global_limit(self._masked(fill),
+                                                    mode, section)
+
+    def super_sum(self, section: int | None = None) -> jax.Array:
+        """§8 super-connected per-row sum: log-depth trees in both phases,
+        ~2·log2(n)+1 concurrent steps instead of ~2·sqrt(n)+1.  Same value
+        as :meth:`section_sum` (bit-identical for integer dtypes)."""
+        return self._b("super_sum").super_sum(self._masked(0), section)
+
+    def super_limit(self, mode: str = "max",
+                    section: int | None = None) -> jax.Array:
+        """§8 super-connected per-row max/min (log-depth phase 1 + 2)."""
+        fill = semantics.limit_identity(self.dtype, mode)
+        return self._b("super_limit").super_limit(self._masked(fill),
+                                                  mode, section)
 
     def sort(self, steps: int | None = None, fill=0) -> "CPMArray":
         """Ascending sort of the used prefix; tail slots take ``fill``.

@@ -32,9 +32,11 @@ PALLAS_MIN_N = 1024
 class Backend(Protocol):
     """The broadcast-instruction surface every physical realization offers.
 
-    All ops treat the **last axis** as the PE address axis; scalar reductions
-    (`section_sum`, `global_limit`, `histogram`) take 1-D arrays (the
-    dispatch layer vmaps over batch layouts).
+    All ops treat the **last axis** as the PE address axis.  Reductions
+    (`section_sum`, `global_limit`, `histogram`, `super_sum`, `super_limit`)
+    are row-batched: ``(..., N)`` in, ``(...,)`` (or ``(..., M)`` bins) out —
+    batched `CPMArray` layouts dispatch as ONE backend call, never a
+    vmap-over-launch.
     """
 
     name: str
@@ -47,6 +49,8 @@ class Backend(Protocol):
     def histogram(self, x, edges): ...
     def section_sum(self, x, section=None): ...
     def global_limit(self, x, mode: str = "max", section=None): ...
+    def super_sum(self, x, section=None): ...            # §8 log-depth
+    def super_limit(self, x, mode: str = "max", section=None): ...
     def sort(self, x, steps=None): ...
     def template_match(self, data, template): ...
     def stencil(self, x, taps, wrap: bool = False): ...

@@ -47,8 +47,13 @@ class MeshBackend(_TableBacked):
     def _pad(self, x, fill):
         pad = (-x.shape[-1]) % self.n_devices
         if pad:
-            x = jnp.pad(x, (0, pad), constant_values=fill)
+            x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)],
+                        constant_values=fill)
         return x
+
+    def _spec(self, ndim: int):
+        """Shard the last (PE address) axis; batch rows replicate."""
+        return P(*([None] * (ndim - 1) + [self.axis]))
 
     def compare(self, x, datum, op="eq"):
         n = x.shape[-1]
@@ -56,8 +61,8 @@ class MeshBackend(_TableBacked):
         from ..reference import comparable
 
         f = shard_map(partial(comparable.compare, datum=datum, op=op),
-                      mesh=self.mesh, in_specs=P(self.axis),
-                      out_specs=P(self.axis))
+                      mesh=self.mesh, in_specs=self._spec(x.ndim),
+                      out_specs=self._spec(x.ndim))
         return f(xp)[..., :n]
 
     def section_sum(self, x, section=None):
@@ -65,7 +70,7 @@ class MeshBackend(_TableBacked):
         f = shard_map(
             lambda xl: collectives.distributed_section_sum(
                 xl, self.axis, mode=self.mode),
-            mesh=self.mesh, in_specs=P(self.axis), out_specs=P())
+            mesh=self.mesh, in_specs=self._spec(x.ndim), out_specs=P())
         return f(xp)
 
     def global_limit(self, x, mode="max", section=None):
@@ -74,5 +79,28 @@ class MeshBackend(_TableBacked):
         f = shard_map(
             lambda xl: collectives.distributed_section_limit(
                 xl, self.axis, mode=mode),
-            mesh=self.mesh, in_specs=P(self.axis), out_specs=P())
+            mesh=self.mesh, in_specs=self._spec(x.ndim), out_specs=P())
+        return f(xp)
+
+    def super_sum(self, x, section=None):
+        """§8 on chips: local partial per device, log-depth butterfly
+        combine over the mesh axis (``collectives.tree_allreduce``).
+        ``check_rep=False``: the ppermute butterfly leaves every device
+        holding the full combine, but shard_map's static replication
+        checker cannot prove that."""
+        xp = self._pad(x, 0)
+        f = shard_map(
+            lambda xl: collectives.distributed_super_sum(xl, self.axis),
+            mesh=self.mesh, in_specs=self._spec(x.ndim), out_specs=P(),
+            check_rep=False)
+        return f(xp)
+
+    def super_limit(self, x, mode="max", section=None):
+        from ..semantics import limit_identity
+        xp = self._pad(x, limit_identity(x.dtype, mode))
+        f = shard_map(
+            lambda xl: collectives.distributed_super_limit(
+                xl, self.axis, mode=mode),
+            mesh=self.mesh, in_specs=self._spec(x.ndim), out_specs=P(),
+            check_rep=False)
         return f(xp)

@@ -1,9 +1,12 @@
 """Chip-scale backend: VMEM Pallas kernels (VREG lanes = PEs).
 
 Adapter over `repro.kernels.cpm_kernels`.  Row-wise kernels see a flattened
-``(rows, n)`` layout (batch dims collapse to rows); reductions take 1-D
-arrays.  ``interpret=None`` auto-selects: compiled on TPU, interpreter
-elsewhere — the ``interpret=`` plumbing the kernels already expose.
+``(rows, n)`` layout (batch dims collapse to rows); reductions are
+row-batched and HBM-tiled inside the kernels themselves — a batched
+``(..., N)`` layout is ONE ``pallas_call`` over a (rows, sections) grid,
+never a vmap over per-row launches, and N may exceed one VMEM block.
+``interpret=None`` auto-selects: compiled on TPU, interpreter elsewhere —
+the ``interpret=`` plumbing the kernels already expose.
 """
 
 from __future__ import annotations
@@ -51,8 +54,9 @@ class PallasBackend(_TableBacked):
         x2, un = _rows(x)
         return un(K.compare(x2, datum, op, interpret=self.interpret))
 
-    def histogram(self, x, edges):
-        return K.histogram(x, edges, interpret=self.interpret)
+    def histogram(self, x, edges, section=None):
+        sec = min(section or 1024, x.shape[-1])
+        return K.histogram(x, edges, sec, interpret=self.interpret)
 
     def section_sum(self, x, section=None):
         sec = section or optimal_section(x.shape[-1])
@@ -64,6 +68,15 @@ class PallasBackend(_TableBacked):
     def global_limit(self, x, mode="max", section=None):
         sec = section or optimal_section(x.shape[-1])
         return K.section_limit(x, sec, mode, interpret=self.interpret)
+
+    def super_sum(self, x, section=None):
+        sec = section or optimal_section(x.shape[-1])
+        out = K.super_sum(x, sec, interpret=self.interpret)
+        return out.astype(jnp.zeros((), x.dtype).sum().dtype)
+
+    def super_limit(self, x, mode="max", section=None):
+        sec = section or optimal_section(x.shape[-1])
+        return K.super_limit(x, sec, mode, interpret=self.interpret)
 
     def sort(self, x, steps=None):
         x2, un = _rows(x)

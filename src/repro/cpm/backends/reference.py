@@ -2,7 +2,7 @@
 
 Thin adapter over `repro.cpm.reference.*` — the paper's ops lowered to
 constant counts of full-array vector primitives.  Shapes: every op works on
-the last axis; reductions take 1-D arrays.
+the last axis; reductions are row-batched (``(..., N)`` -> ``(...,)``).
 """
 
 from __future__ import annotations
@@ -37,6 +37,12 @@ class ReferenceBackend(_TableBacked):
 
     def global_limit(self, x, mode="max", section=None):
         return R.computable.section_limit(x, section, mode)
+
+    def super_sum(self, x, section=None):
+        return R.computable.super_sum(x, section)
+
+    def super_limit(self, x, mode="max", section=None):
+        return R.computable.super_limit(x, section, mode)
 
     def sort(self, x, steps=None):
         # full sort: jnp.sort is the XLA-native realization of the N-step

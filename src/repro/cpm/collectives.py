@@ -97,19 +97,22 @@ def hierarchical_psum(x: jax.Array, inner_axis: str, outer_axis: str | None,
     return out
 
 
-def tree_allreduce(x: jax.Array, axis_name: str) -> jax.Array:
+def tree_allreduce(x: jax.Array, axis_name: str, combine=None) -> jax.Array:
     """§8 super-connectivity: log2(N) butterfly exchange via ppermute.
 
     Level j exchanges with the PE 2**j away — exactly Fig. 16's skip links.
-    Requires a power-of-two axis size.
+    Requires a power-of-two axis size.  ``combine`` defaults to addition;
+    any associative-commutative op (max/min) gives the same log-depth
+    schedule for the §7.5 limits.
     """
     n = _axis_size(axis_name)
     assert n & (n - 1) == 0, "tree_allreduce needs power-of-two axis"
+    combine = jnp.add if combine is None else combine
     acc = x
     j = 1
     while j < n:
         perm = [(i, i ^ j) for i in range(n)]
-        acc = acc + lax.ppermute(acc, axis_name, perm)
+        acc = combine(acc, lax.ppermute(acc, axis_name, perm))
         j <<= 1
     return acc
 
@@ -132,9 +135,11 @@ def grad_sync(grads, mesh_axes: tuple[str, ...], mode: str = "two_phase"):
 
 def distributed_section_sum(x_local: jax.Array, axis_name: str,
                             mode: str = "two_phase") -> jax.Array:
-    """Global sum of a sharded 1-D array: local section sum (phase 1 inside
-    each PE's registers), then cross-PE combine (phase 2 over the ring)."""
-    local = jnp.sum(x_local)
+    """Per-row global sum of a last-axis-sharded array: local section sum
+    (phase 1 inside each PE's registers), then cross-PE combine (phase 2
+    over the ring).  ``(..., N/devices)`` local shards -> replicated
+    ``(...,)`` — batch rows reduce concurrently in the one collective."""
+    local = jnp.sum(x_local, axis=-1)
     if mode == "ring":
         return ring_allreduce(local, axis_name)
     return lax.psum(local, axis_name)
@@ -142,5 +147,26 @@ def distributed_section_sum(x_local: jax.Array, axis_name: str,
 
 def distributed_section_limit(x_local: jax.Array, axis_name: str,
                               mode: str = "max") -> jax.Array:
-    local = jnp.max(x_local) if mode == "max" else jnp.min(x_local)
+    local = jnp.max(x_local, axis=-1) if mode == "max" else jnp.min(x_local, axis=-1)
+    return lax.pmax(local, axis_name) if mode == "max" else lax.pmin(local, axis_name)
+
+
+def distributed_super_sum(x_local: jax.Array, axis_name: str) -> jax.Array:
+    """§8 on the mesh: local partial, then the log-depth butterfly combine
+    (Fig. 16 skip links = ICI all-to-all reach).  Non-power-of-two axes fall
+    back to ``psum`` — XLA's own log-depth schedule."""
+    local = jnp.sum(x_local, axis=-1)
+    n = _axis_size(axis_name)
+    if n & (n - 1) == 0:
+        return tree_allreduce(local, axis_name)
+    return lax.psum(local, axis_name)
+
+
+def distributed_super_limit(x_local: jax.Array, axis_name: str,
+                            mode: str = "max") -> jax.Array:
+    local = jnp.max(x_local, axis=-1) if mode == "max" else jnp.min(x_local, axis=-1)
+    n = _axis_size(axis_name)
+    combine = jnp.maximum if mode == "max" else jnp.minimum
+    if n & (n - 1) == 0:
+        return tree_allreduce(local, axis_name, combine=combine)
     return lax.pmax(local, axis_name) if mode == "max" else lax.pmin(local, axis_name)

@@ -4,7 +4,7 @@ Every paper operation is an :class:`OpSpec` carrying its *concurrent step
 count* formula — the paper's instruction-cycle currency — plus the paper
 bound it must stay under.  ``CPMArray.steps_report()`` and
 ``benchmarks/run.py``'s ``cpm_ops`` scenario both read this table, so the
-complexity claims of §3–§7 are validated from a single source of truth.
+complexity claims of §3–§8 are validated from a single source of truth.
 
 Formula arguments (all keyword, extras ignored):
   n        physical array length (PE count)
@@ -33,6 +33,23 @@ def two_phase_steps(n, section=None, **_):
     """§7.4/§7.5 concurrent steps: M in-section + N/M cross-section."""
     m = section or optimal_section(n)
     return m + -(-n // m)
+
+
+def _clog2(k: int) -> int:
+    """Tree levels to combine ``k`` items: ceil(log2(k)), 0 for k <= 1."""
+    return (k - 1).bit_length() if k > 1 else 0
+
+
+def log_depth_steps(n, section=None, **_):
+    """§8 super-connected steps: log-depth trees in both phases,
+    clog2(M) + clog2(N/M) ~ log2(N) — the √N → log N upgrade."""
+    m = section or optimal_section(n)
+    return _clog2(m) + _clog2(-(-n // m))
+
+
+def log_depth_bound(n, **_):
+    """The §8 claim this repo enforces: ~2·log2(N) + 1 concurrent steps."""
+    return 2 * _clog2(max(2, n)) + 1
 
 
 _two_phase = two_phase_steps
@@ -89,6 +106,10 @@ OP_TABLE: dict[str, OpSpec] = {spec.name: spec for spec in [
            steps=_two_phase,
            bound=lambda n, **_: 2 * math.ceil(math.sqrt(max(1, n))) + 1,
            backends=_RPM),
+    OpSpec("super_sum", "compute", "§8",       # log-depth phase-1 + phase-2
+           steps=log_depth_steps, bound=log_depth_bound, backends=_RPM),
+    OpSpec("super_limit", "compute", "§8",
+           steps=log_depth_steps, bound=log_depth_bound, backends=_RPM),
     OpSpec("sort", "compute", "§7.7",      # full odd-even transposition sort
            steps=lambda n, **_: n, bound=lambda n, **_: n, backends=_RP),
     OpSpec("hybrid_sort", "compute", "§7.7",   # local phase of the sqrt(N) plan

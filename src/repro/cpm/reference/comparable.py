@@ -57,15 +57,16 @@ def lex_compare_lt(words: jax.Array, datum: jax.Array) -> jax.Array:
 def histogram(x: jax.Array, edges: jax.Array) -> jax.Array:
     """Paper §6.3: M-section histogram in ~M concurrent count steps.
 
-    ``edges``: (M+1,) ascending section limits.  Returns (M,) counts of
-    items in [edges[i], edges[i+1]).  Each step is one broadcast compare +
-    one Rule-6 parallel count.
+    ``x``: (..., N) rows; ``edges``: (M+1,) ascending section limits.
+    Returns (..., M) per-row counts of items in [edges[i], edges[i+1]).
+    Each step is one broadcast compare + one Rule-6 parallel count (the
+    count runs over the PE address axis only, so batch rows stay separate).
     """
     def below(e):
-        return count_matches(compare(x, e, "lt"))
+        return jnp.sum(compare(x, e, "lt").astype(jnp.int32), axis=-1)
 
-    cum = jax.vmap(below)(edges)        # M+1 concurrent compare+count steps
-    return jnp.diff(cum)
+    cum = jax.vmap(below)(edges)        # (M+1, ...) compare+count steps
+    return jnp.moveaxis(jnp.diff(cum, axis=0), 0, -1)
 
 
 def quantile_threshold(x: jax.Array, k, lo, hi, iters: int = 24) -> jax.Array:

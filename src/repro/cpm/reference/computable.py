@@ -20,8 +20,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-# the §7.4 cost model lives in the op table — one definition repo-wide
-from ..optable import optimal_section, two_phase_steps
+# the §7.4/§8 cost models live in the op table — one definition repo-wide
+from ..optable import _clog2, optimal_section, two_phase_steps
 
 
 # ---------------------------------------------------------------------------
@@ -61,6 +61,74 @@ def section_limit(x: jax.Array, section: int | None = None, mode: str = "max") -
                     constant_values=limit_identity(x.dtype, mode))
     sec = x.reshape(*x.shape[:-1], -1, m)
     return op(op(sec, axis=-1), axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# §8 — super-connectivity: log-depth combine instead of the serial march
+# ---------------------------------------------------------------------------
+
+def tree_combine(parts: jax.Array, combine, identity) -> jax.Array:
+    """§8 log-depth pairwise combine along the last axis -> ``(...,)``.
+
+    Level ``j`` (one scan trip = one concurrent instruction cycle) reads the
+    partner 2**j places away — the Fig. 16 skip links — so ceil(log2(K))
+    trips leave the full combine in element 0.  Lowered as a ``lax.scan``
+    over levels so the jaxpr trip count *is* the concurrent-step count the
+    op table registers (``benchmarks/run.py cpm_ops`` asserts equality).
+    """
+    k = parts.shape[-1]
+    levels = _clog2(k)
+    if levels == 0:
+        return parts[..., 0]
+    idx = jnp.arange(k)
+
+    def step(x, j):
+        stride = jnp.left_shift(1, j)
+        partner = jnp.take(x, jnp.clip(idx + stride, 0, k - 1), axis=-1)
+        partner = jnp.where(idx + stride < k, partner,
+                            jnp.asarray(identity, x.dtype))
+        return combine(x, partner), None
+
+    out, _ = jax.lax.scan(step, parts, jnp.arange(levels))
+    return out[..., 0]
+
+
+def super_sum(x: jax.Array, section: int | None = None) -> jax.Array:
+    """§8 super-connected global sum along the last axis.
+
+    Phase 1: log-depth tree inside every M-item section; phase 2: log-depth
+    tree over the N/M section partials — ~log2(M) + log2(N/M) ~ log2(N)
+    concurrent steps, vs the §7.4 two-phase ~2·√N.  Same value as
+    :func:`section_sum` (bit-identical for ints).
+    """
+    # match jnp.sum accumulation semantics (ints promote to int32)
+    x = x.astype(jnp.zeros((), x.dtype).sum().dtype)
+    n = x.shape[-1]
+    m = section or optimal_section(n)
+    pad = (-n) % m
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    sec = x.reshape(*x.shape[:-1], -1, m)
+    partials = tree_combine(sec, jnp.add, 0)          # phase 1: clog2(M)
+    return tree_combine(partials, jnp.add, 0)         # phase 2: clog2(N/M)
+
+
+def super_limit(x: jax.Array, section: int | None = None,
+                mode: str = "max") -> jax.Array:
+    """§8 super-connected global max/min (log-depth two-phase)."""
+    from ..semantics import limit_identity
+
+    identity = limit_identity(x.dtype, mode)
+    combine = jnp.maximum if mode == "max" else jnp.minimum
+    n = x.shape[-1]
+    m = section or optimal_section(n)
+    pad = (-n) % m
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)],
+                    constant_values=identity)
+    sec = x.reshape(*x.shape[:-1], -1, m)
+    partials = tree_combine(sec, combine, identity)
+    return tree_combine(partials, combine, identity)
 
 
 def section_sum_2d(x: jax.Array, mx: int | None = None, my: int | None = None) -> jax.Array:

@@ -94,7 +94,10 @@ def compact(x: jax.Array, keep: jax.Array, fill=0) -> tuple[jax.Array, jax.Array
     # stable partition permutation: kept elements first, order preserved
     order = jnp.argsort(~keep, axis=-1, stable=True)
     out = jnp.take_along_axis(x, order, axis=-1) if x.ndim == keep.ndim else x[order]
-    out = jnp.where(jnp.arange(n) < new_len, out, fill)
+    # mask against the address axis only: a batched (B,) new_len must not
+    # broadcast into the batch axis (wrong-and-silent when B == n)
+    live = jnp.arange(n) < (new_len[..., None] if new_len.ndim else new_len)
+    out = jnp.where(live, out, fill)
     return out, new_len
 
 

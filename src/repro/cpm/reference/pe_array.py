@@ -99,11 +99,14 @@ def first_match(match: jax.Array) -> jax.Array:
 def enumerate_matches(match: jax.Array, max_out: int) -> tuple[jax.Array, jax.Array]:
     """Materialize up to ``max_out`` asserted addresses in ascending order.
 
-    Returns ``(indices, valid)``; unused slots hold ``n``.  Replaces the
-    paper's serial priority-encoder drain with a single sort — on TPU the
-    one-shot materialization is cheaper than a serial drain.
+    Returns ``(indices, valid)`` of shape ``(..., max_out)``; unused slots
+    hold ``n``.  Replaces the paper's serial priority-encoder drain with a
+    single sort — on TPU the one-shot materialization is cheaper than a
+    serial drain.  The slice runs along the *address* axis (batched
+    ``(B, n)`` match lines keep their batch axis and per-row ``max_out``
+    truncation).
     """
     n = match.shape[-1]
     keyed = jnp.where(match, jnp.arange(n), n)
-    ordered = jnp.sort(keyed)[:max_out]
+    ordered = jnp.sort(keyed, axis=-1)[..., :max_out]
     return ordered, ordered < n

@@ -10,11 +10,21 @@ Kernels:
   * ``oddeven_sort``    — §7.7 local-exchange sort, N compare-exchange cycles
                           entirely in VMEM (used by MoE routing).
   * ``compare``         — §6.1 broadcast-datum compare, one VPU cycle.
-  * ``histogram``       — §6.3 M-bin histogram, one compare+count per edge.
+  * ``histogram``       — §6.3 M-bin histogram, one compare+count per edge;
+                          row-batched and HBM-tiled (rows x sections grid).
   * ``section_sum``     — §7.4 two-phase reduction: concurrent per-section
-                          sums (phase 1, one grid step per section batch)
-                          accumulated across the grid (phase 2).
+                          sums (phase 1, one grid step per section block)
+                          accumulated across the grid (phase 2).  Batched:
+                          ``(R, N)`` rows reduce in ONE launch over a
+                          (rows, sections) grid with a per-row accumulator,
+                          and N may exceed a single VMEM block (sections
+                          stream from HBM).
   * ``section_limit``   — §7.5 global max/min with the same structure.
+  * ``super_sum``       — §8 super-connected sum: per-section partials kept
+                          in a VMEM scratch line, combined by a log-depth
+                          pairwise tree (Fig. 16 skip links) instead of the
+                          serial phase-2 march.
+  * ``super_limit``     — §8 log-depth global max/min.
   * ``template_match``  — §7.6 sliding SAD, ~M shift-accumulate cycles.
   * ``substring_match`` — §5 streaming needle match with neighbor carry.
   * ``stencil``         — §7.3 tap algebra, ~M shift-multiply-accumulate
@@ -149,14 +159,30 @@ def oddeven_sort(x: jax.Array, steps: int | None = None, *,
 
 
 # ---------------------------------------------------------------------------
-# §7.4 two-phase sectioned sum
+# §7.4 two-phase sectioned sum (row-batched, HBM-tiled)
 # ---------------------------------------------------------------------------
 
-def _section_sum_kernel(x_ref, o_ref, acc_ref):
-    i = pl.program_id(0)
+def _pad_rows(x: jax.Array, section: int, fill=0):
+    """(..., N) -> ((R, N_padded), nsec, unflatten-to-leading-dims)."""
+    lead = x.shape[:-1]
+    n = x.shape[-1]
+    pad = (-n) % section
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)],
+                    constant_values=fill)
+    x2 = x.reshape(-1, x.shape[-1])
+    return x2, x2.shape[-1] // section, (lambda out: out.reshape(lead))
 
-    @pl.when(i == 0)
-    def _():
+
+def _acc_dtype(dtype):
+    return jnp.int32 if jnp.issubdtype(dtype, jnp.integer) else jnp.float32
+
+
+def _section_sum_kernel(x_ref, o_ref, acc_ref):
+    j = pl.program_id(1)                    # section index (innermost)
+
+    @pl.when(j == 0)
+    def _():                                # fresh accumulator per row
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     # phase 1: concurrent in-section reduction of this VMEM block
@@ -164,7 +190,7 @@ def _section_sum_kernel(x_ref, o_ref, acc_ref):
                             keepdims=True)
 
     # phase 2: the running accumulator marches across sections (grid order)
-    @pl.when(i == pl.num_programs(0) - 1)
+    @pl.when(j == pl.num_programs(1) - 1)
     def _():
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
@@ -172,29 +198,26 @@ def _section_sum_kernel(x_ref, o_ref, acc_ref):
 @functools.partial(jax.jit, static_argnames=("section", "interpret"))
 def section_sum(x: jax.Array, section: int = 1024, *,
                 interpret: bool = True) -> jax.Array:
-    """Two-phase global sum of a 1-D array; section = VMEM block size.
+    """Two-phase sum of every ``(..., N)`` row; section = VMEM block size.
 
-    Integer inputs accumulate in int32 (exact, matching ``jnp.sum``
-    semantics); floats accumulate in float32.
+    ONE kernel launch for any batch shape: the grid is (rows, sections)
+    with a per-row VMEM accumulator, and sections stream from HBM so N may
+    exceed a single VMEM block.  Integer inputs accumulate in int32 (exact,
+    matching ``jnp.sum`` semantics); floats accumulate in float32.
     """
-    n = x.shape[-1]
-    acc_dtype = (jnp.int32 if jnp.issubdtype(x.dtype, jnp.integer)
-                 else jnp.float32)
-    pad = (-n) % section
-    if pad:
-        x = jnp.pad(x, (0, pad))
-    xs = x.reshape(1, -1)
-    nsec = xs.shape[-1] // section
+    acc_dtype = _acc_dtype(x.dtype)
+    xs, nsec, unflatten = _pad_rows(x, section)
+    r = xs.shape[0]
     out = pl.pallas_call(
         _section_sum_kernel,
-        grid=(nsec,),
-        in_specs=[pl.BlockSpec((1, section), lambda i: (0, i))],
-        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
-        out_shape=jax.ShapeDtypeStruct((1, 1), acc_dtype),
+        grid=(r, nsec),
+        in_specs=[pl.BlockSpec((1, section), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, 1), acc_dtype),
         scratch_shapes=[pltpu.VMEM((1, 1), acc_dtype)],
         interpret=interpret,
     )(xs)
-    return out[0, 0].astype(jnp.promote_types(x.dtype, acc_dtype))
+    return unflatten(out).astype(jnp.promote_types(x.dtype, acc_dtype))
 
 
 # ---------------------------------------------------------------------------
@@ -239,33 +262,52 @@ def compare(x: jax.Array, datum, op: str = "eq", *,
     return out.astype(bool)
 
 
-def _histogram_kernel(x_ref, e_ref, o_ref, *, m: int):
-    x = x_ref[...]                                   # (1, N)
+def _histogram_kernel(x_ref, e_ref, o_ref, acc_ref, *, m: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]                                   # (1, section)
     # one broadcast compare + Rule-6 parallel count per section edge
     below = (x < e_ref[...].reshape(m + 1, 1)).astype(jnp.int32)
     cum = jnp.sum(below, axis=-1)                    # (M+1,)
-    o_ref[...] = (cum[1:] - cum[:-1]).reshape(1, m)
+    acc_ref[...] += (cum[1:] - cum[:-1]).reshape(1, m)
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _():
+        o_ref[...] = acc_ref[...]
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def histogram(x: jax.Array, edges: jax.Array, *,
+@functools.partial(jax.jit, static_argnames=("section", "interpret"))
+def histogram(x: jax.Array, edges: jax.Array, section: int = 1024, *,
               interpret: bool = True) -> jax.Array:
-    """(N,) values x (M+1,) ascending edges -> (M,) counts (§6.3, ~M cycles).
+    """(..., N) values x (M+1,) ascending edges -> (..., M) per-row counts
+    (§6.3, ~M compare+count cycles).
 
-    Mixed dtypes promote (fractional edges stay fractional on int data).
+    Same (rows, sections) grid as the §7.4 reductions: one launch for any
+    batch shape, N streamed section-by-section from HBM into VMEM with a
+    per-row (1, M) bin accumulator.  Row padding takes the top edge, which
+    lands in no ``[e_i, e_{i+1})`` bin.  Mixed dtypes promote (fractional
+    edges stay fractional on int data).
     """
     ct = jnp.promote_types(x.dtype, edges.dtype)
-    n = x.shape[-1]
+    x, edges = x.astype(ct), edges.astype(ct)
     m = edges.shape[-1] - 1
+    xs, nsec, _ = _pad_rows(x, section, fill=edges[-1])
+    r = xs.shape[0]
     out = pl.pallas_call(
         functools.partial(_histogram_kernel, m=m),
-        in_specs=[pl.BlockSpec(memory_space=pltpu.VMEM),
-                  pl.BlockSpec(memory_space=pltpu.VMEM)],
-        out_specs=pl.BlockSpec(memory_space=pltpu.VMEM),
-        out_shape=jax.ShapeDtypeStruct((1, m), jnp.int32),
+        grid=(r, nsec),
+        in_specs=[pl.BlockSpec((1, section), lambda i, j: (i, j)),
+                  pl.BlockSpec((1, m + 1), lambda i, j: (0, 0))],
+        out_specs=pl.BlockSpec((1, m), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, m), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((1, m), jnp.int32)],
         interpret=interpret,
-    )(x.astype(ct).reshape(1, n), edges.astype(ct).reshape(1, m + 1))
-    return out[0]
+    )(xs, edges.reshape(1, m + 1))
+    return out.reshape(*x.shape[:-1], m)
 
 
 # ---------------------------------------------------------------------------
@@ -273,9 +315,9 @@ def histogram(x: jax.Array, edges: jax.Array, *,
 # ---------------------------------------------------------------------------
 
 def _section_limit_kernel(x_ref, o_ref, acc_ref, *, mode: str, init):
-    i = pl.program_id(0)
+    j = pl.program_id(1)
 
-    @pl.when(i == 0)
+    @pl.when(j == 0)
     def _():
         acc_ref[...] = jnp.full_like(acc_ref, init)
 
@@ -285,7 +327,7 @@ def _section_limit_kernel(x_ref, o_ref, acc_ref, *, mode: str, init):
                        red(x_ref[...].astype(acc_ref.dtype), axis=-1,
                            keepdims=True))
 
-    @pl.when(i == pl.num_programs(0) - 1)
+    @pl.when(j == pl.num_programs(1) - 1)
     def _():
         o_ref[...] = acc_ref[...]
 
@@ -293,31 +335,108 @@ def _section_limit_kernel(x_ref, o_ref, acc_ref, *, mode: str, init):
 @functools.partial(jax.jit, static_argnames=("section", "mode", "interpret"))
 def section_limit(x: jax.Array, section: int = 1024, mode: str = "max", *,
                   interpret: bool = True) -> jax.Array:
-    """Two-phase global max/min of a 1-D array (§7.5); section = block size."""
+    """Two-phase max/min of every ``(..., N)`` row (§7.5).
+
+    Same batched (rows, sections) grid as :func:`section_sum`: one launch,
+    per-row accumulator, sections streamed from HBM.
+    """
     # function-level import: keeps the kernels module import-free of the
     # cpm package at module scope (backends.pallas imports this module)
     from repro.cpm.semantics import limit_identity
 
-    n = x.shape[-1]
-    acc_dtype = (jnp.int32 if jnp.issubdtype(x.dtype, jnp.integer)
-                 else jnp.float32)
-    pad_fill = limit_identity(x.dtype, mode)
+    acc_dtype = _acc_dtype(x.dtype)
     fill = limit_identity(acc_dtype, mode)
-    pad = (-n) % section
-    if pad:
-        x = jnp.pad(x, (0, pad), constant_values=pad_fill)
-    xs = x.reshape(1, -1)
-    nsec = xs.shape[-1] // section
+    xs, nsec, unflatten = _pad_rows(x, section,
+                                    fill=limit_identity(x.dtype, mode))
+    r = xs.shape[0]
     out = pl.pallas_call(
         functools.partial(_section_limit_kernel, mode=mode, init=fill),
-        grid=(nsec,),
-        in_specs=[pl.BlockSpec((1, section), lambda i: (0, i))],
-        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
-        out_shape=jax.ShapeDtypeStruct((1, 1), acc_dtype),
+        grid=(r, nsec),
+        in_specs=[pl.BlockSpec((1, section), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, 1), acc_dtype),
         scratch_shapes=[pltpu.VMEM((1, 1), acc_dtype)],
         interpret=interpret,
     )(xs)
-    return out[0, 0].astype(x.dtype)
+    return unflatten(out).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# §8 super-connectivity: log-depth combine of the section partials
+# ---------------------------------------------------------------------------
+
+def _tree_combine_block(x, k: int, combine, identity):
+    """Log-depth pairwise combine of the first ``k`` lanes of a (1, K) block.
+
+    Level ``j`` reads the partner 2**j lanes away — exactly Fig. 16's skip
+    links; ceil(log2(k)) unrolled levels leave the full combine in lane 0.
+    """
+    idx = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    levels = max(1, (k - 1).bit_length()) if k > 1 else 0
+    for j in range(levels):
+        stride = 1 << j
+        partner = jnp.roll(x, -stride, axis=-1)
+        partner = jnp.where(idx + stride < k, partner, identity)
+        x = combine(x, partner)
+    return x
+
+
+def _super_kernel(x_ref, o_ref, acc_ref, *, mode: str, nsec: int, identity):
+    j = pl.program_id(1)
+    red = {"sum": jnp.sum, "max": jnp.max, "min": jnp.min}[mode]
+    cmb = {"sum": jnp.add, "max": jnp.maximum, "min": jnp.minimum}[mode]
+
+    # phase 1: this section's concurrent partial, parked in its scratch lane
+    part = red(x_ref[...].astype(acc_ref.dtype), axis=-1, keepdims=True)
+    acc_ref[:, pl.ds(j, 1)] = part
+
+    # phase 2: §8 log-depth tree over the section partials (not a march)
+    @pl.when(j == nsec - 1)
+    def _():
+        o_ref[...] = _tree_combine_block(acc_ref[...], nsec, cmb,
+                                         identity)[:, :1]
+
+
+def _super_reduce(x: jax.Array, section: int, mode: str, *, interpret: bool):
+    from repro.cpm.semantics import limit_identity
+
+    acc_dtype = _acc_dtype(x.dtype)
+    if mode == "sum":
+        pad_fill, identity = 0, 0            # python scalars: the kernel body
+    else:                                    # must not close over tracers
+        pad_fill = limit_identity(x.dtype, mode)
+        identity = limit_identity(acc_dtype, mode)
+    xs, nsec, unflatten = _pad_rows(x, section, fill=pad_fill)
+    r = xs.shape[0]
+    out = pl.pallas_call(
+        functools.partial(_super_kernel, mode=mode, nsec=nsec,
+                          identity=identity),
+        grid=(r, nsec),
+        in_specs=[pl.BlockSpec((1, section), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, 1), acc_dtype),
+        scratch_shapes=[pltpu.VMEM((1, nsec), acc_dtype)],
+        interpret=interpret,
+    )(xs)
+    return unflatten(out)
+
+
+@functools.partial(jax.jit, static_argnames=("section", "interpret"))
+def super_sum(x: jax.Array, section: int = 1024, *,
+              interpret: bool = True) -> jax.Array:
+    """§8 super-connected sum of every ``(..., N)`` row: sectioned phase 1,
+    log-depth tree phase 2 (~2·log2(N) concurrent steps instead of ~2·√N).
+    Same result as :func:`section_sum` (bit-identical for ints)."""
+    out = _super_reduce(x, section, "sum", interpret=interpret)
+    return out.astype(jnp.promote_types(x.dtype, out.dtype))
+
+
+@functools.partial(jax.jit, static_argnames=("section", "mode", "interpret"))
+def super_limit(x: jax.Array, section: int = 1024, mode: str = "max", *,
+                interpret: bool = True) -> jax.Array:
+    """§8 super-connected max/min of every ``(..., N)`` row (log-depth
+    phase 2).  Same result as :func:`section_limit`."""
+    return _super_reduce(x, section, mode, interpret=interpret).astype(x.dtype)
 
 
 # ---------------------------------------------------------------------------

@@ -73,18 +73,32 @@ def broadcast_lens(caches, batch: int):
     Prefill produces scalar lengths (all rows equal).  The batched engine
     needs per-row lengths — rows diverge after partial draft acceptance —
     and shape-stable scan carries (``attention_step`` returns ``pos + 1``
-    which is ``(B,)`` under per-row decode).  Call once, on fresh prefill
-    caches: a scalar leaf becomes ``(B,)``, a rep-stacked ``(R,)`` leaf
-    becomes ``(R, B)``.
+    which is ``(B,)`` under per-row decode).  A scalar leaf becomes
+    ``(B,)``, a rep-stacked ``(R,)`` leaf becomes ``(R, B)``.
+
+    Idempotent: a leaf that already carries the batch axis is left
+    untouched, so a second call cannot silently stack another batch axis
+    onto every length (scalar -> ``(B,)`` -> ``(B, B)``).  The
+    discriminator is the sibling data leaf in the same cache node
+    (attention ``k`` or recurrent ``C``), which always has exactly three
+    trailing content dims — a broadcast length has ``sib.ndim - 3`` dims,
+    a fresh one ``sib.ndim - 4`` — so even a rep-stacked ``(R,)`` leaf
+    with ``R == batch`` is classified correctly.  Nodes without such a
+    sibling fall back to the trailing-axis-equals-``batch`` test.
     """
     def walk(node):
         if isinstance(node, dict):
             out = {}
+            sib = node.get("k", node.get("C"))
             for kk, vv in node.items():
                 if kk == "len":
                     lv = jnp.asarray(vv, jnp.int32)
-                    out[kk] = jnp.broadcast_to(lv[..., None],
-                                               lv.shape + (batch,))
+                    if sib is not None:
+                        done = lv.ndim == jnp.ndim(sib) - 3
+                    else:
+                        done = lv.ndim >= 1 and lv.shape[-1] == batch
+                    out[kk] = lv if done else jnp.broadcast_to(
+                        lv[..., None], lv.shape + (batch,))
                 else:
                     out[kk] = walk(vv)
             return out

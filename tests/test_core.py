@@ -54,6 +54,20 @@ class TestRule6:
         assert int(core.first_match(match)) == 7
         assert not bool(core.any_match(match))
 
+    def test_enumerate_matches_batched_slices_address_axis(self):
+        """PR-3 regression: ``[:max_out]`` used to slice the *batch* axis,
+        silently ignoring max_out and breaking the output shape."""
+        match = jnp.array([[True, False, True, False, True],
+                           [False, False, False, True, False],
+                           [False, False, False, False, False]])
+        idx, valid = core.enumerate_matches(match, 2)
+        assert idx.shape == valid.shape == (3, 2)
+        np.testing.assert_array_equal(np.asarray(idx),
+                                      [[0, 2], [3, 5], [5, 5]])
+        np.testing.assert_array_equal(np.asarray(valid),
+                                      [[True, True], [True, False],
+                                       [False, False]])
+
 
 # ---------------------------------------------------------------------------
 # Content movable memory
@@ -94,6 +108,25 @@ class TestMovable:
         out, new_len = movable.compact(jnp.asarray(x), jnp.asarray(keep))
         assert int(new_len) == keep.sum()
         np.testing.assert_array_equal(np.asarray(out)[: keep.sum()], x[keep])
+
+    @given(st.integers(2, 6), st.integers(1, 12), st.integers(0, 2 ** 16 - 1))
+    @settings(max_examples=40, deadline=None)
+    def test_compact_batched_matches_numpy(self, b, n, bits):
+        """PR-3 regression: the tail mask used to broadcast ``(B,)`` lengths
+        against the batch axis — a crash for B != n and silently wrong rows
+        when B == n (exercised here by the b == n cases)."""
+        keep = np.array([(bits >> (i % 16)) & 1 for i in range(b * n)],
+                        dtype=bool).reshape(b, n)
+        x = (np.arange(b * n) + 100).reshape(b, n)
+        out, new_len = movable.compact(jnp.asarray(x), jnp.asarray(keep),
+                                       fill=-1)
+        np.testing.assert_array_equal(np.asarray(new_len), keep.sum(-1))
+        for r in range(b):
+            kept = keep[r].sum()
+            np.testing.assert_array_equal(np.asarray(out)[r, :kept],
+                                          x[r][keep[r]])
+            np.testing.assert_array_equal(np.asarray(out)[r, kept:],
+                                          np.full(n - kept, -1))
 
     def test_move_object(self):
         x = jnp.arange(10)

@@ -140,6 +140,182 @@ class TestBackendDifferential:
 
 
 # ---------------------------------------------------------------------------
+# batched (R, N) reductions: one kernel launch, cross-backend bit-identity
+# ---------------------------------------------------------------------------
+
+def batched_pair(data, lens):
+    return (CPMArray(data, lens, backend="reference"),
+            CPMArray(data, lens, backend="pallas", interpret=True))
+
+
+def count_pallas_calls(fn, *args) -> int:
+    closed = jax.make_jaxpr(fn)(*args)
+    n = 0
+
+    def walk(jaxpr):
+        nonlocal n
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "pallas_call":
+                n += 1
+            for v in eqn.params.values():
+                if hasattr(v, "jaxpr"):
+                    walk(v.jaxpr)
+
+    walk(closed.jaxpr)
+    return n
+
+
+class TestBatchedReductions:
+    """PR-3 tentpole: (R, N) layouts dispatch as ONE pallas launch and are
+    bit-identical to the reference for ints (floats to tolerance)."""
+
+    LENS = jnp.array([130, 64, 17, 0], jnp.int32)
+
+    def _int_batch(self):
+        data = jax.random.randint(jax.random.PRNGKey(7), (4, 130), 0, 1000)
+        return batched_pair(data, self.LENS)
+
+    def test_batched_section_sum_bit_identical(self):
+        ref, pal = self._int_batch()
+        want = [int(np.asarray(ref.data)[i, :l].sum())
+                for i, l in enumerate(self.LENS)]
+        np.testing.assert_array_equal(np.asarray(ref.section_sum()), want)
+        np.testing.assert_array_equal(np.asarray(pal.section_sum()), want)
+
+    @pytest.mark.parametrize("mode", ["max", "min"])
+    def test_batched_global_limit_bit_identical(self, mode):
+        ref, pal = self._int_batch()
+        np.testing.assert_array_equal(np.asarray(ref.global_limit(mode)),
+                                      np.asarray(pal.global_limit(mode)))
+
+    def test_batched_histogram_bit_identical_and_tiled(self):
+        """Histogram correct for N larger than one VMEM section: drive the
+        kernel with a section far smaller than the row."""
+        ref, pal = self._int_batch()
+        edges = jnp.array([0, 250, 500, 1000])
+        r, p = ref.histogram(edges), pal.histogram(edges)
+        assert r.shape == p.shape == (4, 3)
+        np.testing.assert_array_equal(np.asarray(r), np.asarray(p))
+        # same data through an explicitly multi-section kernel grid
+        x = jnp.where(ref._live(), ref.data, edges[-1])
+        tiled = cpm_kernels.histogram(x, edges, 32, interpret=True)
+        np.testing.assert_array_equal(np.asarray(tiled), np.asarray(r))
+
+    def test_batched_float_reductions_tolerance(self):
+        data = jax.random.normal(jax.random.PRNGKey(8), (3, 200))
+        lens = jnp.array([200, 150, 9], jnp.int32)
+        ref, pal = batched_pair(data, lens)
+        np.testing.assert_allclose(np.asarray(ref.section_sum()),
+                                   np.asarray(pal.section_sum()), rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(ref.super_sum()),
+                                   np.asarray(pal.super_sum()), rtol=1e-5)
+        for mode in ("max", "min"):          # limits are order-free: exact
+            np.testing.assert_array_equal(np.asarray(ref.global_limit(mode)),
+                                          np.asarray(pal.global_limit(mode)))
+            np.testing.assert_array_equal(np.asarray(ref.super_limit(mode)),
+                                          np.asarray(pal.super_limit(mode)))
+
+    @pytest.mark.parametrize("op,call", [
+        ("section_sum", lambda a: a.section_sum()),
+        ("global_limit", lambda a: a.global_limit("max")),
+        ("histogram", lambda a: a.histogram(jnp.array([0, 500, 1000]))),
+        ("super_sum", lambda a: a.super_sum()),
+        ("super_limit", lambda a: a.super_limit("min")),
+    ])
+    def test_single_pallas_call_no_vmap_over_launch(self, op, call):
+        _, pal = self._int_batch()
+        assert count_pallas_calls(call, pal) == 1, \
+            f"batched {op} must lower to exactly one pallas_call"
+
+    def test_deep_batch_shape(self):
+        data = jax.random.randint(jax.random.PRNGKey(9), (2, 3, 40), 0, 50)
+        lens = jnp.array([[40, 12, 0], [7, 40, 33]], jnp.int32)
+        ref, pal = batched_pair(data, lens)
+        assert ref.section_sum().shape == pal.section_sum().shape == (2, 3)
+        np.testing.assert_array_equal(np.asarray(ref.section_sum()),
+                                      np.asarray(pal.section_sum()))
+        np.testing.assert_array_equal(np.asarray(ref.histogram(jnp.array([0, 25, 50]))),
+                                      np.asarray(pal.histogram(jnp.array([0, 25, 50]))))
+
+    def test_batched_find_all_respects_max_out(self):
+        """PR-3 satellite regression: enumerate_matches must slice the
+        address axis, not the batch axis."""
+        data = jnp.tile(jnp.array([[1, 2, 1, 2, 1, 2, 0, 0]]), (3, 1))
+        arr = cpm_array(data, jnp.array([8, 8, 2], jnp.int32))
+        idx, valid = arr.find_all(jnp.array([1, 2]), max_out=2)
+        assert idx.shape == valid.shape == (3, 2)
+        np.testing.assert_array_equal(np.asarray(idx), [[0, 2], [0, 2], [0, 8]])
+        np.testing.assert_array_equal(np.asarray(valid),
+                                      [[True, True], [True, True],
+                                       [True, False]])
+
+
+# ---------------------------------------------------------------------------
+# §8 super ops: log-depth combine equals the two-phase result
+# ---------------------------------------------------------------------------
+
+def measured_scan_trips(fn, *args) -> int:
+    closed = jax.make_jaxpr(fn)(*args)
+    total = 0
+
+    def walk(jaxpr):
+        nonlocal total
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "scan":
+                total += int(eqn.params["length"])
+            for v in eqn.params.values():
+                if hasattr(v, "jaxpr"):
+                    walk(v.jaxpr)
+
+    walk(closed.jaxpr)
+    return total
+
+
+class TestSuperOps:
+    @pytest.mark.parametrize("n,used", [(64, 50), (130, 130), (96, 17)])
+    def test_super_equals_two_phase(self, n, used):
+        data = int_data(n, n, 0, 1000)
+        for backend_arr in pair(data, used):
+            np.testing.assert_array_equal(
+                np.asarray(backend_arr.super_sum()),
+                np.asarray(backend_arr.section_sum()))
+            for mode in ("max", "min"):
+                np.testing.assert_array_equal(
+                    np.asarray(backend_arr.super_limit(mode)),
+                    np.asarray(backend_arr.global_limit(mode)))
+
+    def test_super_cross_backend_bit_identical(self):
+        ref, pal = pair(int_data(11, 130, 0, 1 << 16), 100)
+        np.testing.assert_array_equal(np.asarray(ref.super_sum()),
+                                      np.asarray(pal.super_sum()))
+        for mode in ("max", "min"):
+            np.testing.assert_array_equal(np.asarray(ref.super_limit(mode)),
+                                          np.asarray(pal.super_limit(mode)))
+
+    def test_registered_with_log_bound(self):
+        for name in ("super_sum", "super_limit"):
+            spec = cpm.OP_TABLE[name]
+            assert spec.paper == "§8"
+            assert set(spec.backends) == {"reference", "pallas", "mesh"}
+            for n in (64, 1000, 4096, 1 << 20):
+                steps = cpm.op_steps(name, n=n)      # bound-checked
+                assert steps <= 2 * int(np.ceil(np.log2(n))) + 1
+        # the √N -> log N upgrade is real at scale
+        assert (cpm.op_steps("super_sum", n=1 << 20)
+                < cpm.op_steps("section_sum", n=1 << 20) // 10)
+
+    @pytest.mark.parametrize("n", [64, 1000, 4096])
+    def test_reference_lowering_trip_count_matches_table(self, n):
+        """The scan trip count of the lowered jaxpr IS the registered
+        concurrent-step formula (phase-1 levels + phase-2 levels)."""
+        arr = cpm_array(int_data(1, n), n, backend="reference")
+        got = measured_scan_trips(lambda a: a.super_sum(), arr)
+        assert got == cpm.op_steps("super_sum", n=n)
+        got = measured_scan_trips(lambda a: a.super_limit(), arr)
+        assert got == cpm.op_steps("super_limit", n=n)
+
+
+# ---------------------------------------------------------------------------
 # satellite: wrapping-tail consistency (kernel vs reference, tails included)
 # ---------------------------------------------------------------------------
 
@@ -312,7 +488,8 @@ class TestOpTable:
             for fam in cpm.FAMILIES:
                 assert any(cpm.OP_TABLE[o].family == fam for o in ops), \
                     f"{name} backend covers no {fam!r} op"
-        assert {"section_sum", "global_limit"} <= set(cpm.ops_for_backend("mesh"))
+        assert {"section_sum", "global_limit",
+                "super_sum", "super_limit"} <= set(cpm.ops_for_backend("mesh"))
 
 
 # ---------------------------------------------------------------------------
@@ -333,11 +510,29 @@ for used in (13, 7):
     ref = cpm.cpm_array(data, used, backend="reference")
     np.testing.assert_array_equal(np.asarray(mesh.section_sum()),
                                   np.asarray(ref.section_sum()))
+    np.testing.assert_array_equal(np.asarray(mesh.super_sum()),
+                                  np.asarray(ref.section_sum()))
     for mode in ("max", "min"):
         np.testing.assert_array_equal(np.asarray(mesh.global_limit(mode)),
                                       np.asarray(ref.global_limit(mode)))
+        np.testing.assert_array_equal(np.asarray(mesh.super_limit(mode)),
+                                      np.asarray(ref.global_limit(mode)))
     np.testing.assert_array_equal(np.asarray(mesh.compare(4, "lt")),
                                   np.asarray(ref.compare(4, "lt")))
+
+# batched (R, N) rows reduce in one collective, per-row lengths respected
+bdata = jnp.arange(26, dtype=jnp.int32).reshape(2, 13)
+lens = jnp.asarray([13, 5], jnp.int32)
+bmesh = cpm.CPMArray(bdata, lens, backend="mesh")
+bref = cpm.CPMArray(bdata, lens, backend="reference")
+for op in ("section_sum", "super_sum"):
+    np.testing.assert_array_equal(np.asarray(getattr(bmesh, op)()),
+                                  np.asarray(getattr(bref, op)()))
+for mode in ("max", "min"):
+    np.testing.assert_array_equal(np.asarray(bmesh.global_limit(mode)),
+                                  np.asarray(bref.global_limit(mode)))
+np.testing.assert_array_equal(np.asarray(bmesh.compare(4, "lt")),
+                              np.asarray(bref.compare(4, "lt")))
 print("MESH_BACKEND_OK")
 """
 

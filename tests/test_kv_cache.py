@@ -147,3 +147,51 @@ class TestBroadcastLens:
             np.asarray(out["tail"][0]["attn"]["len"]), [6, 6, 6])
         # K/V untouched
         assert out["tail"][0]["attn"]["k"].shape == (3, KVH, SLOTS, DH)
+
+    def test_idempotent(self):
+        """PR-3 regression: a second call must not stack another batch axis
+        onto every len leaf (scalar -> (B,) -> (B, B))."""
+        tree = {"attn": {"k": jnp.zeros((3, KVH, SLOTS, DH)),
+                         "v": jnp.zeros((3, KVH, SLOTS, DH)),
+                         "len": jnp.asarray(6, jnp.int32)}}
+        once = kv_cache.broadcast_lens(tree, 3)
+        assert once["attn"]["len"].shape == (3,)
+        twice = kv_cache.broadcast_lens(once, 3)
+        assert twice["attn"]["len"].shape == (3,)
+        np.testing.assert_array_equal(np.asarray(twice["attn"]["len"]),
+                                      np.asarray(once["attn"]["len"]))
+        # per-row divergence survives the redundant call untouched
+        diverged = kv_cache.truncate(once, jnp.asarray([2, 6, 4], jnp.int32))
+        again = kv_cache.broadcast_lens(diverged, 3)
+        np.testing.assert_array_equal(np.asarray(again["attn"]["len"]),
+                                      [2, 6, 4])
+
+    def test_idempotent_rep_stacked(self):
+        tree = {"attn": {"k": jnp.zeros((2, 3, KVH, SLOTS, DH)),
+                         "v": jnp.zeros((2, 3, KVH, SLOTS, DH)),
+                         "len": jnp.full((2,), 6, jnp.int32)}}
+        once = kv_cache.broadcast_lens(tree, 3)
+        twice = kv_cache.broadcast_lens(once, 3)
+        assert twice["attn"]["len"].shape == (2, 3)
+
+    def test_rep_count_equal_to_batch_still_broadcasts(self):
+        """The ambiguous case: a fresh rep-stacked (R,) leaf with R == batch
+        must still get its batch axis (the sibling k leaf disambiguates) —
+        granite-style rep-stacked blocks hit this whenever R == B."""
+        b = 2
+        tree = {"attn": {"k": jnp.zeros((b, b, KVH, SLOTS, DH)),
+                         "v": jnp.zeros((b, b, KVH, SLOTS, DH)),
+                         "len": jnp.full((b,), 6, jnp.int32)}}
+        once = kv_cache.broadcast_lens(tree, b)
+        assert once["attn"]["len"].shape == (b, b)
+        twice = kv_cache.broadcast_lens(once, b)
+        assert twice["attn"]["len"].shape == (b, b)
+
+    def test_recurrent_node_uses_C_sibling(self):
+        tree = {"xlstm": {"C": jnp.zeros((3, 4, 8, 8)),
+                          "n": jnp.zeros((3, 4, 8)),
+                          "len": jnp.asarray(5, jnp.int32)}}
+        once = kv_cache.broadcast_lens(tree, 3)
+        assert once["xlstm"]["len"].shape == (3,)
+        twice = kv_cache.broadcast_lens(once, 3)
+        assert twice["xlstm"]["len"].shape == (3,)
