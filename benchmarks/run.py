@@ -20,9 +20,13 @@ column) and reports wall-clock us_per_call of the TPU-adapted JAX lowering.
 Step counts come from the op table (``repro.cpm.optable``) — the single
 source of truth the `CPMArray` surface registers each op in — and the
 ``cpm_ops`` scenario cross-checks them against trip counts *measured* from
-the lowered jaxprs.  Output: ``name,us_per_call,derived`` CSV.
+the lowered jaxprs; ``program_fusion`` does the same for whole recorded
+instruction streams (`repro.cpm.program`) and asserts the fused-pipeline
+pallas_call-count reduction.  Output: ``name,us_per_call,derived`` CSV.
 
-Usage: ``python benchmarks/run.py [scenario ...]`` (default: all).
+Usage: ``python benchmarks/run.py [scenario ...] [--json [PATH]]``
+(default: all scenarios; bare ``--json`` writes one
+``BENCH_<scenario>.json`` per scenario at the repo root).
 """
 
 import sys
@@ -315,6 +319,109 @@ for op, call in [("section_sum", lambda a: a.section_sum()),
     run_subbench(script, "CPM_")
 
 
+# -- program_fusion: recorded instruction streams vs eager dispatch (PR 4) ---
+
+def bench_program_fusion():
+    """The `repro.cpm.program` subsystem: a recorded elementwise/local
+    pipeline must lower to strictly fewer pallas_calls than eager per-op
+    dispatch (ONE per fused group), stay bit-identical to eager reference
+    execution, and the op-table cycle model must equal the jaxpr-measured
+    trip counts program-wide."""
+    from repro.cpm import CPMArray, record, schedule
+    from repro.cpm.program import (count_pallas_calls, program_steps,
+                                   scan_structured_steps, scan_trip_count)
+    from repro.serve import program_paths
+
+    n = 4096
+    data = jax.random.randint(jax.random.PRNGKey(0), (n,), 0, 16)
+    vals = jnp.array([7, 8])
+    dev = cpm_array(data, n - 7)
+    with record() as prog:
+        d = dev.shift(2, n // 2, 3)
+        d = d.insert(4, vals)
+        d.compare(8, "ge")
+        d.activate(0, n - 1, 2)
+        d.stencil((1.0, 2.0, 1.0))
+    plan = schedule(prog)
+
+    def run_fused(arr):
+        out, outs = plan.run(arr, backend="pallas", interpret=True)
+        return out.data, [o for o in outs if o is not None]
+
+    def run_eager(arr):
+        d2 = arr.shift(2, n // 2, 3).insert(4, vals)
+        return d2.data, [d2.compare(8, "ge"), d2.activate(0, n - 1, 2),
+                         d2.stencil((1.0, 2.0, 1.0))]
+
+    pal = cpm_array(data, n - 7, backend="pallas", interpret=True)
+    fused_calls = count_pallas_calls(run_fused, pal)
+    eager_calls = count_pallas_calls(run_eager, pal)
+    assert fused_calls == plan.fused_group_count == 1, fused_calls
+    assert fused_calls < eager_calls, (fused_calls, eager_calls)
+    row(f"PF_pipeline_pallas_calls_N{n}", 0.0,
+        f"fused={fused_calls};eager={eager_calls};"
+        f"groups={len(plan.groups)}")
+
+    # bit-identity: fused pallas vs eager reference
+    got = run_fused(cpm_array(data, n - 7))
+    want = run_eager(cpm_array(data, n - 7, backend="reference"))
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    for g, w in zip(got[1], want[1]):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+    us_fused = timeit(jax.jit(run_fused), pal, reps=5)
+    us_eager = timeit(jax.jit(run_eager), pal, reps=5)
+    row(f"PF_pipeline_fused_N{n}", us_fused,
+        f"speedup_vs_eager={us_eager / us_fused:.2f}x")
+    row(f"PF_pipeline_eager_N{n}", us_eager,
+        f"pallas_calls={eager_calls}")
+
+    # predicted (op-table sum) vs measured (jaxpr scan trips) cycle counts
+    with record() as sprog:
+        dev.substring_match(data[100:108])
+        dev.template_match(data[7:15].astype(jnp.float32))
+        dev.super_sum()
+        dev.compare(8, "lt")
+    splan = schedule(sprog)
+    measured = scan_trip_count(
+        lambda a: splan.run(a, backend="reference")[1],
+        cpm_array(data, n - 7))
+    predicted = scan_structured_steps(sprog, n)
+    assert measured == predicted, (measured, predicted)
+    row(f"PF_cycles_N{n}", 0.0,
+        f"scan_predicted={predicted};scan_measured={measured};"
+        f"total_predicted={program_steps(sprog, n)}")
+
+    # the serving hot path: draft-commit as one fused launch
+    b, cap, k = 8, 288, 4
+    buf = jax.random.randint(jax.random.PRNGKey(1), (b, cap), 0, 1000)
+    used = jnp.full((b,), 200, jnp.int32) + jnp.arange(b, dtype=jnp.int32)
+    preds = jax.random.randint(jax.random.PRNGKey(2), (b, k), 0, 1000)
+    emit = jnp.arange(b, dtype=jnp.int32) % (k + 1)
+    calls = count_pallas_calls(
+        lambda *a: program_paths.commit_tokens(*a, backend="pallas",
+                                               interpret=True),
+        buf, used, preds, emit)
+    assert calls == 1, calls
+    rows_idx = jnp.arange(b)
+
+    def legacy_scatter(buf, used, preds, emit):
+        tidx = jnp.arange(k)[None]
+        widx = jnp.where(tidx < emit[:, None], used[:, None] + tidx, cap)
+        return buf.at[rows_idx[:, None], widx].set(preds, mode="drop")
+
+    new_buf, new_used = program_paths.commit_tokens(buf, used, preds, emit)
+    leg = np.asarray(legacy_scatter(buf, used, preds, emit))
+    for r in range(b):                     # identical within the live region
+        np.testing.assert_array_equal(np.asarray(new_buf)[r, :int(new_used[r])],
+                                      leg[r, :int(new_used[r])])
+    us_prog = timeit(jax.jit(lambda *a: program_paths.commit_tokens(*a)[0]),
+                     buf, used, preds, emit)
+    us_leg = timeit(jax.jit(legacy_scatter), buf, used, preds, emit)
+    row(f"PF_commit_program_b{b}", us_prog,
+        f"pallas_calls=1;legacy_scatter_us={us_leg:.1f}")
+
+
 # -- LM system benches -------------------------------------------------------
 
 def bench_moe_routing():
@@ -404,6 +511,7 @@ SCENARIOS = {
     "line_detect": bench_line_detect,
     "collectives": bench_collectives,
     "cpm_ops": bench_cpm_ops,
+    "program_fusion": bench_program_fusion,
     "moe_routing": bench_moe_routing,
     "lm_smoke": bench_lm_smoke,
     "engine_decode": bench_engine_decode,
@@ -412,26 +520,45 @@ SCENARIOS = {
 
 def main(argv=None) -> None:
     args = list(argv if argv is not None else sys.argv[1:])
-    json_path = None
-    if "--json" in args:                       # --json PATH: machine-readable
-        i = args.index("--json")               # copy of the CSV rows (CI
-        if i + 1 >= len(args):                 # uploads it as an artifact)
-            raise SystemExit("--json requires a PATH operand")
-        json_path = args[i + 1]
-        del args[i:i + 2]
-    names = args or list(SCENARIOS)
+    json_flag, json_path = False, None
+    if "--json" in args:                       # --json [PATH]: machine-
+        i = args.index("--json")               # readable copy of the CSV
+        json_flag = True                       # rows (the bench trajectory
+        nxt = args[i + 1] if i + 1 < len(args) else None   # artifact)
+        # a PATH operand must look like one (*.json or contain a path
+        # separator) — a typo'd scenario name must NOT silently become an
+        # output file while every scenario runs
+        if nxt is not None and (nxt.endswith(".json") or "/" in nxt):
+            json_path = nxt                    # explicit single output file
+            del args[i:i + 2]
+        else:                                  # default: one
+            del args[i]                        # BENCH_<scenario>.json per
+    names = args or list(SCENARIOS)            # scenario at the repo root
     unknown = [s for s in names if s not in SCENARIOS]
     if unknown:
         raise SystemExit(f"unknown scenario(s) {unknown}; have {list(SCENARIOS)}")
     print("name,us_per_call,derived")
+    spans = {}
     for s in names:
+        start = len(ROWS)
         SCENARIOS[s]()
-    if json_path:
+        spans[s] = (start, len(ROWS))
+    if json_flag:
         import json
-        with open(json_path, "w") as fh:
-            json.dump([{"name": n, "us_per_call": us, "derived": d}
-                       for n, us, d in ROWS], fh, indent=1)
-        print(f"wrote {len(ROWS)} rows to {json_path}", file=sys.stderr)
+        import os
+
+        def dump(path, rows):
+            with open(path, "w") as fh:
+                json.dump([{"name": n, "us_per_call": us, "derived": d}
+                           for n, us, d in rows], fh, indent=1)
+            print(f"wrote {len(rows)} rows to {path}", file=sys.stderr)
+
+        if json_path:
+            dump(json_path, ROWS)
+        else:
+            root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+            for s, (a, b) in spans.items():
+                dump(os.path.join(root, f"BENCH_{s}.json"), ROWS[a:b])
 
 
 if __name__ == "__main__":

@@ -14,18 +14,26 @@ Public API:
     masked window tails) and the converters between them.
   * ``reference`` — the pure-`jnp` op modules (formerly ``repro.core``).
   * ``collectives`` — the shard_map embodiment used by the mesh backend.
+  * ``program`` — instruction streams as first-class values:
+    :func:`record` traces ``CPMArray`` method calls into a
+    :class:`CPMProgram`, :func:`schedule` partitions the stream into fusion
+    groups, and each fused group runs as ONE Pallas mega-kernel on the
+    pallas backend (reference replays unfused, mesh maps over shards).
 """
 
-from . import backends, collectives, optable, reference, semantics
+from . import backends, collectives, optable, program, reference, semantics
 from .array import CPMArray, cpm_array
 from .backends import Backend, get_backend
-from .optable import FAMILIES, OP_TABLE, op_steps, ops_for_backend
+from .optable import FAMILIES, OP_TABLE, fusable_ops, op_steps, ops_for_backend
+from .program import CPMProgram, FusionPlan, record, schedule
 from .semantics import ends_to_starts, mask_window_tail, starts_to_ends, window_valid
 
 __all__ = [
     "CPMArray", "cpm_array",
     "Backend", "get_backend", "backends",
-    "OP_TABLE", "op_steps", "ops_for_backend", "FAMILIES", "optable",
+    "OP_TABLE", "op_steps", "ops_for_backend", "fusable_ops", "FAMILIES",
+    "optable",
+    "CPMProgram", "FusionPlan", "record", "schedule", "program",
     "ends_to_starts", "starts_to_ends", "window_valid", "mask_window_tail",
     "semantics", "reference", "collectives",
 ]

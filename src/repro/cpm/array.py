@@ -30,6 +30,13 @@ dispatches as ONE backend call — one Pallas launch over a
 still works (the pytree registration carries ``data`` and ``used_len``
 together); the in-place move ops expect a scalar ``used_len`` per call —
 vmap over the array for per-row lengths.
+
+Every op method is also a *recordable* instruction: inside
+``with cpm.record() as prog:`` the call is appended to a
+:class:`~repro.cpm.program.CPMProgram` (and still returns its real value),
+so a method-call pipeline becomes an instruction stream the fusing
+scheduler can lower to single-launch Pallas mega-kernels — see
+``repro.cpm.program``.
 """
 
 from __future__ import annotations
@@ -42,6 +49,7 @@ import jax.numpy as jnp
 
 from . import backends, semantics
 from .optable import OP_TABLE, op_steps
+from .program.ir import recordable
 from .reference import movable, pe_array
 
 
@@ -89,16 +97,19 @@ class CPMArray:
         return addr < (ul[..., None] if ul.ndim else ul)
 
     # -- family: activate (Rule 4) -----------------------------------------
+    @recordable("activate")
     def activate(self, start, end, carry=1) -> jax.Array:
         """General-decoder activation mask over the PE address axis."""
         return self._b("activate").activate(self.n, start, end, carry)
 
     # -- family: move (§4) ---------------------------------------------------
+    @recordable("shift")
     def shift(self, start, end, shift: int = 1, fill=None) -> "CPMArray":
         """Concurrent range move; ``used_len`` is unchanged."""
         data = self._b("shift").shift_range(self.data, start, end, shift, fill)
         return self._with(data=data)
 
+    @recordable("insert")
     def insert(self, pos, values) -> "CPMArray":
         """Insert ``values`` at ``pos``: range shift + broadcast write
         (~2 concurrent steps).  ``used_len`` grows (clipped to ``n``)."""
@@ -110,6 +121,7 @@ class CPMArray:
         return self._with(data=data,
                           used_len=jnp.minimum(self.used_len + k, self.n))
 
+    @recordable("delete")
     def delete(self, pos, k: int, fill=0) -> "CPMArray":
         """Delete ``k`` items at ``pos``: the tail shifts left, vacated slots
         take ``fill``, ``used_len`` shrinks."""
@@ -120,6 +132,7 @@ class CPMArray:
         return self._with(data=data,
                           used_len=jnp.maximum(self.used_len - k, 0))
 
+    @recordable("truncate")
     def truncate(self, new_len) -> "CPMArray":
         """Range delete at the tail: O(1), lengths only (entries stay put;
         the used-region mask excludes them)."""
@@ -127,6 +140,7 @@ class CPMArray:
         return self._with(used_len=jnp.minimum(self.used_len, new_len))
 
     # -- family: search (§5) -------------------------------------------------
+    @recordable("substring_match")
     def substring_match(self, needle, where: str = "start") -> jax.Array:
         """Match an M-item needle everywhere in the used region (~M steps).
 
@@ -143,12 +157,14 @@ class CPMArray:
             raise ValueError(f"where must be 'start' or 'end', got {where!r}")
         return semantics.ends_to_starts(ends, needle.shape[-1])
 
+    @recordable("find_all")
     def find_all(self, needle, max_out: int):
         """Start addresses of every occurrence (ascending) via Rule 6."""
         starts = self.substring_match(needle, where="start")
         return pe_array.enumerate_matches(starts, max_out)
 
     # -- family: compare (§6) ------------------------------------------------
+    @recordable("compare")
     def compare(self, datum, op: str = "eq", mask=None) -> jax.Array:
         """One concurrent compare against a broadcast datum, tail masked."""
         if mask is not None:                   # bit-field compare: int domain
@@ -160,10 +176,12 @@ class CPMArray:
         got = self._b("compare").compare(x, d, op)
         return got & self._live()
 
+    @recordable("count")
     def count(self, datum, op: str = "eq", mask=None) -> jax.Array:
         """Rule-6 parallel count of matching PEs."""
         return pe_array.count_matches(self.compare(datum, op, mask))
 
+    @recordable("histogram")
     def histogram(self, edges) -> jax.Array:
         """Per-row M-bin histogram of the used region (~M compare+count
         steps).  Batched ``(*batch, n)`` layouts dispatch as ONE backend
@@ -181,6 +199,7 @@ class CPMArray:
         return jnp.where(self._live(), self.data,
                          jnp.asarray(fill, self.dtype))
 
+    @recordable("section_sum")
     def section_sum(self, section: int | None = None) -> jax.Array:
         """Two-phase per-row sum of the used region (~2·sqrt(N) steps).
 
@@ -190,6 +209,7 @@ class CPMArray:
         """
         return self._b("section_sum").section_sum(self._masked(0), section)
 
+    @recordable("global_limit")
     def global_limit(self, mode: str = "max",
                      section: int | None = None) -> jax.Array:
         """Two-phase per-row max/min of the used region (§7.5); batched
@@ -198,12 +218,14 @@ class CPMArray:
         return self._b("global_limit").global_limit(self._masked(fill),
                                                     mode, section)
 
+    @recordable("super_sum")
     def super_sum(self, section: int | None = None) -> jax.Array:
         """§8 super-connected per-row sum: log-depth trees in both phases,
         ~2·log2(n)+1 concurrent steps instead of ~2·sqrt(n)+1.  Same value
         as :meth:`section_sum` (bit-identical for integer dtypes)."""
         return self._b("super_sum").super_sum(self._masked(0), section)
 
+    @recordable("super_limit")
     def super_limit(self, mode: str = "max",
                     section: int | None = None) -> jax.Array:
         """§8 super-connected per-row max/min (log-depth phase 1 + 2)."""
@@ -211,6 +233,7 @@ class CPMArray:
         return self._b("super_limit").super_limit(self._masked(fill),
                                                   mode, section)
 
+    @recordable("sort")
     def sort(self, steps: int | None = None, fill=0) -> "CPMArray":
         """Ascending sort of the used prefix; tail slots take ``fill``.
 
@@ -225,6 +248,7 @@ class CPMArray:
         data = jnp.where(self._live(), out, jnp.asarray(fill, self.dtype))
         return self._with(data=data)
 
+    @recordable("template_match")
     def template_match(self, template, mask_tail: bool = True) -> jax.Array:
         """SAD of an M-item template at every start address (~M steps).
 
@@ -240,6 +264,7 @@ class CPMArray:
                                              self.used_len)
         return out
 
+    @recordable("stencil")
     def stencil(self, taps, wrap: bool = False) -> jax.Array:
         """§7.3 tap-algebra stencil (~M steps).
 
@@ -252,6 +277,21 @@ class CPMArray:
             return self._b("stencil").stencil(self.data, taps, wrap=True)
         x = jnp.where(self._live(), self.data, jnp.asarray(0, self.dtype))
         return self._b("stencil").stencil(x, taps, wrap=False)
+
+    @recordable("compact")
+    def compact(self, keep, fill=0) -> "CPMArray":
+        """Stable §4.2 pack: flagged items move to the front, order kept.
+
+        ``keep`` flags select survivors inside the used region (dead-slot
+        flags are ignored); vacated tail slots take ``fill`` and
+        ``used_len`` becomes the survivor count.  The paper moves each
+        object by a range shift; the TPU-native realization is one stable
+        cumsum-gather (~log N concurrent steps) on the reference backend.
+        """
+        keep = jnp.asarray(keep, bool) & self._live()
+        data, new_len = movable.compact(self.data, keep,
+                                        jnp.asarray(fill, self.dtype))
+        return self._with(data=data, used_len=new_len)
 
     # -- introspection -------------------------------------------------------
     def steps_report(self, *, needle_len: int = 8, bins: int = 8,

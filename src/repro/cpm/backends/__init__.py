@@ -55,6 +55,14 @@ class Backend(Protocol):
     def template_match(self, data, template): ...
     def stencil(self, x, taps, wrap: bool = False): ...
 
+    def fused_stream(self, x, used_len, instrs, operands):
+        """Execute a fused instruction group (``repro.cpm.program``) in one
+        launch.  Optional capability: only backends that can keep the row
+        resident across instructions implement it (pallas); the scheduler
+        falls back to per-op replay elsewhere."""
+        raise NotImplementedError(
+            f"backend {self.name!r} has no fused-stream realization")
+
 
 class _TableBacked:
     """supports() read off the op table (single source of truth)."""
@@ -113,6 +121,17 @@ def _residency(data) -> str:
         return jax.default_backend()
 
 
+def auto_backend_name(data) -> str:
+    """The ``backend="auto"`` policy, defined once: Pallas when the array
+    lives on a TPU and the row is long enough to amortize a kernel launch,
+    reference otherwise.  Shared by per-op ``resolve`` and the program
+    executor (``repro.cpm.program.executors``) so eager dispatch and plan
+    execution can never pick different backends for the same array."""
+    if _residency(data) == "tpu" and data.shape[-1] >= PALLAS_MIN_N:
+        return "pallas"
+    return "reference"
+
+
 def resolve(requested: str, op: str, data, *, interpret=None) -> Backend:
     """Pick the backend for one op call.
 
@@ -123,7 +142,7 @@ def resolve(requested: str, op: str, data, *, interpret=None) -> Backend:
     the backend was forced.
     """
     if requested == "auto":
-        if (_residency(data) == "tpu" and data.shape[-1] >= PALLAS_MIN_N
+        if (auto_backend_name(data) == "pallas"
                 and "pallas" in OP_TABLE[op].backends):
             # honor an explicit interpret hint (debugging); default compiled
             return get_backend("pallas",

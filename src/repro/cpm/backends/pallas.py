@@ -90,3 +90,10 @@ class PallasBackend(_TableBacked):
         x2, un = _rows(x)
         return un(K.stencil(x2, tuple(float(t) for t in taps), wrap=wrap,
                             interpret=self.interpret))
+
+    def fused_stream(self, x, used_len, instrs, operands):
+        """One ``pallas_call`` for a whole fused instruction group: the row
+        block and its §4.2 length register stay resident in VMEM across
+        every instruction (see ``cpm_kernels.fused_stream``)."""
+        return K.fused_stream(x, used_len, instrs, operands,
+                              interpret=self.interpret)

@@ -63,6 +63,11 @@ class OpSpec:
     steps: Callable[..., int]         # concurrent-step formula (registered once)
     bound: Callable[..., int]         # the paper's claimed ceiling
     backends: tuple[str, ...]         # which backends implement it
+    #: elementwise/local ops whose kernel body reads only the resident VMEM
+    #: block (plus a bounded neighbor window) — the fusing scheduler may run
+    #: a run of these as ONE Pallas mega-kernel.  Reductions and sorts read
+    #: or reorder the whole row and are fusion-group boundaries.
+    fusable: bool = False
 
     def check(self, **sizes) -> int:
         """Evaluate the formula and assert it obeys the paper bound."""
@@ -80,20 +85,34 @@ _RP = ("reference", "pallas")
 OP_TABLE: dict[str, OpSpec] = {spec.name: spec for spec in [
     # -- activate (Rule 4) --------------------------------------------------
     OpSpec("activate", "activate", "§3.3 R4",
-           steps=lambda **_: 1, bound=lambda **_: 1, backends=_RP),
+           steps=lambda **_: 1, bound=lambda **_: 1, backends=_RP,
+           fusable=True),
     # -- move (§4) ----------------------------------------------------------
     OpSpec("shift", "move", "§4.1",
-           steps=lambda **_: 1, bound=lambda **_: 1, backends=_RP),
+           steps=lambda **_: 1, bound=lambda **_: 1, backends=_RP,
+           fusable=True),
     OpSpec("insert", "move", "§4.2",       # range shift + broadcast write
-           steps=lambda **_: 2, bound=lambda **_: 2, backends=_RP),
+           steps=lambda **_: 2, bound=lambda **_: 2, backends=_RP,
+           fusable=True),
     OpSpec("delete", "move", "§4.2",
-           steps=lambda **_: 2, bound=lambda **_: 2, backends=_RP),
+           steps=lambda **_: 2, bound=lambda **_: 2, backends=_RP,
+           fusable=True),
+    OpSpec("truncate", "move", "§4.2",     # range delete at the tail: the
+           steps=lambda **_: 1,            # used-length register updates,
+           bound=lambda **_: 1,            # entries stay put (O(1))
+           backends=_RPM, fusable=True),
+    OpSpec("compact", "move", "§4.2",      # stable pack of kept items: the
+           steps=lambda n, **_: _clog2(n),     # TPU-native cumsum-gather is
+           bound=lambda n, **_: _clog2(n) + 1, # log-depth (paper: per-object
+           backends=("reference",)),           # range moves)
     # -- search (§5) --------------------------------------------------------
     OpSpec("substring_match", "search", "§5.1",
-           steps=lambda m, **_: m, bound=lambda m, **_: m, backends=_RP),
+           steps=lambda m, **_: m, bound=lambda m, **_: m, backends=_RP,
+           fusable=True),
     # -- compare (§6) -------------------------------------------------------
     OpSpec("compare", "compare", "§6.1",
-           steps=lambda **_: 1, bound=lambda **_: 1, backends=_RPM),
+           steps=lambda **_: 1, bound=lambda **_: 1, backends=_RPM,
+           fusable=True),
     OpSpec("histogram", "compare", "§6.3", # one compare+count per section edge
            steps=lambda m, **_: m + 1, bound=lambda m, **_: m + 1,
            backends=_RP),
@@ -117,9 +136,11 @@ OP_TABLE: dict[str, OpSpec] = {spec.name: spec for spec in [
            bound=lambda n, **_: 2 * math.ceil(math.sqrt(max(1, n))) + 1,
            backends=("reference",)),
     OpSpec("template_match", "compute", "§7.6",    # ~M vectorized; paper ~M^2
-           steps=lambda m, **_: m, bound=lambda m, **_: m * m, backends=_RP),
+           steps=lambda m, **_: m, bound=lambda m, **_: m * m, backends=_RP,
+           fusable=True),
     OpSpec("stencil", "compute", "§7.3",
-           steps=lambda m, **_: m, bound=lambda m, **_: m, backends=_RP),
+           steps=lambda m, **_: m, bound=lambda m, **_: m, backends=_RP,
+           fusable=True),
 ]}
 
 FAMILIES = ("activate", "move", "search", "compare", "compute")
@@ -132,3 +153,8 @@ def op_steps(name: str, **sizes) -> int:
 
 def ops_for_backend(backend: str) -> list[str]:
     return [s.name for s in OP_TABLE.values() if backend in s.backends]
+
+
+def fusable_ops() -> frozenset[str]:
+    """Ops the fusing scheduler may place inside one mega-kernel group."""
+    return frozenset(s.name for s in OP_TABLE.values() if s.fusable)

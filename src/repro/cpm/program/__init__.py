@@ -1,0 +1,50 @@
+"""repro.cpm.program — instruction streams as first-class values.
+
+The paper's host does not call the memory one op at a time: it broadcasts an
+*instruction stream* and the memory executes it internally (§3–§4), which is
+what removes the per-op bus round-trip.  This package gives the repo the same
+shape:
+
+  * :class:`~repro.cpm.program.ir.CPMProgram` — a linear IR over one memory
+    device whose instructions are `OP_TABLE` entries plus recorded operands.
+    Build one explicitly (:meth:`CPMProgram.append`) or record it from
+    ordinary ``CPMArray`` method calls::
+
+        with cpm.record() as prog:
+            dev.compare(threshold, "ge")
+            dev = dev.insert(pos, values)
+
+  * :func:`~repro.cpm.program.scheduler.schedule` — the fusing scheduler:
+    partitions the stream into :class:`FusionGroup`\\ s.  Maximal runs of
+    elementwise/local ops (``fusable=True`` in the op table: activate,
+    shift/insert/delete/truncate, compare, substring/template match, stencil)
+    become ONE fused Pallas mega-kernel that keeps the section resident in
+    VMEM across instructions; reductions (§7 two-phase, §8 super ops), sort
+    and Rule-6 drains are group boundaries.
+
+  * :mod:`~repro.cpm.program.executors` — per-backend execution:
+    ``reference`` replays each instruction unfused (the oracle), ``pallas``
+    launches one ``fused_stream`` kernel per fused group, ``mesh`` maps
+    group instructions over shards via the mesh backend's collectives.
+    All three are differential-tested bit-identical to eager dispatch.
+
+  * the static cycle-cost model — :meth:`CPMProgram.steps_report` /
+    :func:`~repro.cpm.program.scheduler.program_steps` sum the
+    ``OP_TABLE`` step formulas over a whole program;
+    ``scan_structured_steps`` is asserted against jaxpr-measured trip
+    counts of the reference lowering (``benchmarks/run.py program_fusion``).
+"""
+
+from .ir import CPMProgram, Instruction, record
+from .scheduler import (FusionGroup, FusionPlan, instruction_steps,
+                        program_steps, scan_structured_steps, schedule)
+from .executors import apply_instruction, run_plan
+from .introspect import count_pallas_calls, scan_trip_count
+
+__all__ = [
+    "CPMProgram", "Instruction", "record",
+    "FusionGroup", "FusionPlan", "schedule",
+    "instruction_steps", "program_steps", "scan_structured_steps",
+    "apply_instruction", "run_plan",
+    "count_pallas_calls", "scan_trip_count",
+]

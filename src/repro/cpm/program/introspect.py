@@ -1,0 +1,54 @@
+"""Jaxpr-walk introspection behind the fusion and step-count invariants.
+
+The subsystem's contracts are stated in lowered-jaxpr terms — "one
+``pallas_call`` per fused group", "scan trip counts equal the registered
+concurrent-step formulas" — so the walker that measures them lives here,
+once, and the tests, benchmarks and examples all import it.  The walk
+descends into sub-jaxprs held directly in eqn params (scan/while bodies)
+and into sequences of them (e.g. ``lax.cond`` branch tuples).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def _walk(jaxpr, visit) -> None:
+    for eqn in jaxpr.eqns:
+        visit(eqn)
+        for v in eqn.params.values():
+            if hasattr(v, "jaxpr"):
+                _walk(v.jaxpr, visit)
+            elif isinstance(v, (tuple, list)):
+                for b in v:
+                    if hasattr(b, "jaxpr"):
+                        _walk(b.jaxpr, visit)
+
+
+def count_pallas_calls(fn, *args) -> int:
+    """Number of ``pallas_call`` eqns in ``fn``'s jaxpr — the launch count
+    the fused-group invariant is asserted against."""
+    n = 0
+
+    def visit(eqn):
+        nonlocal n
+        if eqn.primitive.name == "pallas_call":
+            n += 1
+
+    _walk(jax.make_jaxpr(fn)(*args).jaxpr, visit)
+    return n
+
+
+def scan_trip_count(fn, *args) -> int:
+    """Total ``lax.scan`` trip count of ``fn``'s lowering — the *measured*
+    concurrent-step structure (each trip is one broadcast instruction
+    cycle), compared against the op-table formulas."""
+    total = 0
+
+    def visit(eqn):
+        nonlocal total
+        if eqn.primitive.name == "scan":
+            total += int(eqn.params["length"])
+
+    _walk(jax.make_jaxpr(fn)(*args).jaxpr, visit)
+    return total

@@ -1,0 +1,140 @@
+"""The fusing scheduler and the whole-program cycle-cost model.
+
+``schedule`` partitions an instruction stream into :class:`FusionGroup`\\ s
+with one rule, read off the op table's single source of truth
+(``OpSpec.fusable``): maximal runs of elementwise/local ops that share the
+device buffer fuse into one group — on the pallas backend each fused group
+is ONE ``fused_stream`` mega-kernel launch that keeps the section resident
+in VMEM across instructions.  Everything else (two-phase/§8 reductions,
+histogram, sort, Rule-6 drains) is a ``boundary`` group of one instruction,
+executed by ordinary per-op dispatch.
+
+The cost model sums the ``OP_TABLE`` concurrent-step formulas per
+instruction (operand sizes — needle/template/tap lengths, bin counts — are
+read from the recorded operands).  ``scan_structured_steps`` restricts the
+sum to ops whose *reference lowering* is a literal ``lax.scan``; the
+benchmarks and tests assert it equals the jaxpr-measured trip count of the
+unfused replay, exactly as PR 3 did per op.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+from ..optable import fusable_ops, op_steps
+from .ir import DERIVED_METHODS as _DERIVED
+from .ir import CPMProgram, Instruction
+
+#: methods whose reference lowering is a literal scan over concurrent steps
+_SCAN_STRUCTURED = ("substring_match", "find_all", "template_match",
+                    "super_sum", "super_limit")
+
+
+def _instr_m(instr: Instruction) -> int:
+    """The op-specific size M, read from the recorded operand shapes."""
+    ops = instr.operands
+    if instr.op in ("substring_match", "find_all"):
+        return int(jnp.shape(jnp.asarray(ops["needle"]))[-1])
+    if instr.op == "histogram":
+        return int(jnp.shape(jnp.asarray(ops["edges"]))[-1]) - 1
+    if instr.op == "template_match":
+        return int(jnp.shape(jnp.asarray(ops["template"]))[-1])
+    if instr.op == "stencil":
+        return len(ops["taps"])
+    return 0
+
+
+def instruction_steps(instr: Instruction, n: int,
+                      section: int | None = None) -> int:
+    """Concurrent-step count of one instruction at device size ``n``
+    (bound-checked against the paper's ceiling by ``op_steps``)."""
+    if instr.op == "sort" and instr.operands.get("steps") is not None:
+        return int(instr.operands["steps"])   # bounded local exchange phase
+    table_op = _DERIVED.get(instr.op, instr.op)
+    extra = 1 if instr.op in _DERIVED else 0  # the Rule-6 count/drain step
+    sec = instr.operands.get("section") or section
+    return op_steps(table_op, n=n, m=_instr_m(instr), section=sec) + extra
+
+
+def program_steps(prog: CPMProgram, n: int,
+                  section: int | None = None) -> int:
+    """Total predicted concurrent cycles of the whole stream."""
+    return sum(instruction_steps(i, n, section=section) for i in prog)
+
+
+def scan_structured_steps(prog: CPMProgram, n: int) -> int:
+    """Predicted cycles of the scan-lowered instructions only — the part a
+    jaxpr walk of the *reference* replay measures as scan trip counts."""
+    return sum(instruction_steps(i, n) - (1 if i.op in _DERIVED else 0)
+               for i in prog if i.op in _SCAN_STRUCTURED)
+
+
+# ---------------------------------------------------------------------------
+# fusion groups
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class FusionGroup:
+    kind: str                         # "fused" | "boundary"
+    indices: tuple[int, ...]          # instruction positions in the program
+    instructions: tuple[Instruction, ...]
+
+    def __repr__(self):
+        body = "; ".join(i.op for i in self.instructions)
+        return f"<{self.kind} [{body}]>"
+
+
+@dataclass(frozen=True)
+class FusionPlan:
+    program: CPMProgram
+    groups: tuple[FusionGroup, ...]
+
+    @property
+    def fused_group_count(self) -> int:
+        return sum(g.kind == "fused" for g in self.groups)
+
+    def predicted_steps(self, n: int, section: int | None = None) -> int:
+        return program_steps(self.program, n, section=section)
+
+    def describe(self) -> str:
+        lines = [f"CPMProgram: {len(self.program)} instructions -> "
+                 f"{len(self.groups)} groups "
+                 f"({self.fused_group_count} fused)"]
+        for g in self.groups:
+            tag = ("1 mega-kernel launch" if g.kind == "fused"
+                   else "per-op dispatch")
+            lines.append(f"  {g.kind:8s} {list(g.indices)} "
+                         f"[{' -> '.join(i.op for i in g.instructions)}]  "
+                         f"({tag})")
+        return "\n".join(lines)
+
+    def run(self, array, backend: str | None = None,
+            interpret: bool | None = None):
+        from . import executors
+        return executors.run_plan(self, array, backend=backend,
+                                  interpret=interpret)
+
+
+def schedule(prog: CPMProgram) -> FusionPlan:
+    """Greedy linear partition: maximal fusable runs, reductions as walls."""
+    fus = fusable_ops()
+    groups: list[FusionGroup] = []
+    run: list[int] = []
+
+    def flush():
+        if run:
+            groups.append(FusionGroup(
+                "fused", tuple(run),
+                tuple(prog.instructions[i] for i in run)))
+            run.clear()
+
+    for i, ins in enumerate(prog.instructions):
+        if ins.op in fus:
+            run.append(i)
+        else:
+            flush()
+            groups.append(FusionGroup("boundary", (i,), (ins,)))
+    flush()
+    return FusionPlan(prog, tuple(groups))

@@ -52,11 +52,16 @@ from jax.experimental.pallas import tpu as pltpu
 # §3.3 Rule 4 — the general decoder
 # ---------------------------------------------------------------------------
 
+def _activate_vals(idx, start, end, carry):
+    """Rule-4 general-decoder predicate — the one value-level body shared
+    by the standalone kernel and the fused instruction stream."""
+    carry = jnp.maximum(carry, 1)
+    return (idx >= start) & (idx <= end) & ((idx - start) % carry == 0)
+
+
 def _activate_kernel(p_ref, o_ref, *, n: int):
-    start, end = p_ref[0, 0], p_ref[0, 1]
-    carry = jnp.maximum(p_ref[0, 2], 1)
     idx = jax.lax.broadcasted_iota(jnp.int32, (1, n), 1)
-    mask = (idx >= start) & (idx <= end) & ((idx - start) % carry == 0)
+    mask = _activate_vals(idx, p_ref[0, 0], p_ref[0, 1], p_ref[0, 2])
     o_ref[...] = mask.astype(o_ref.dtype)
 
 
@@ -80,11 +85,9 @@ def activate(n: int, start, end, carry=1, *, interpret: bool = True) -> jax.Arra
 # §4.1 — concurrent range move
 # ---------------------------------------------------------------------------
 
-def _shift_range_kernel(x_ref, p_ref, f_ref, o_ref, *, n: int, shift: int,
-                        has_fill: bool):
-    x = x_ref[...]
-    start, end = p_ref[0, 0], p_ref[0, 1]
-    idx = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+def _shift_vals(x, idx, start, end, shift: int, n: int, fill=None):
+    """§4.1 range move of a resident block — the one value-level body shared
+    by the standalone kernel and the fused instruction stream."""
     src_mask = (idx >= start) & (idx <= end)
     moved = jnp.roll(x, shift, axis=-1)
     dst_mask = jnp.roll(src_mask, shift, axis=-1)
@@ -93,9 +96,17 @@ def _shift_range_kernel(x_ref, p_ref, f_ref, o_ref, *, n: int, shift: int,
     elif shift < 0:
         dst_mask = dst_mask & (idx < n + shift)
     out = jnp.where(dst_mask, moved, x)
-    if has_fill:
-        out = jnp.where(src_mask & ~dst_mask, f_ref[0, 0], out)
-    o_ref[...] = out
+    if fill is not None:
+        out = jnp.where(src_mask & ~dst_mask, fill, out)
+    return out
+
+
+def _shift_range_kernel(x_ref, p_ref, f_ref, o_ref, *, n: int, shift: int,
+                        has_fill: bool):
+    x = x_ref[...]
+    idx = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    o_ref[...] = _shift_vals(x, idx, p_ref[0, 0], p_ref[0, 1], shift, n,
+                             f_ref[0, 0] if has_fill else None)
 
 
 @functools.partial(jax.jit, static_argnames=("shift", "interpret"))
@@ -443,14 +454,19 @@ def super_limit(x: jax.Array, section: int = 1024, mode: str = "max", *,
 # §7.6 template match (row-wise sliding SAD)
 # ---------------------------------------------------------------------------
 
-def _template_kernel(x_ref, t_ref, o_ref, *, m: int):
-    x = x_ref[...].astype(jnp.float32)
-
+def _sad_vals(x_f32, t_row, m: int):
+    """§7.6 sliding-SAD accumulation on a resident float32 block (shared by
+    the standalone kernel and the fused instruction stream); ``t_row`` is a
+    (1, M) template ref/array."""
     def body(j, acc):
-        shifted = jnp.roll(x, -j, axis=-1)
-        return acc + jnp.abs(shifted - t_ref[0, j].astype(jnp.float32))
+        shifted = jnp.roll(x_f32, -j, axis=-1)
+        return acc + jnp.abs(shifted - t_row[0, j].astype(jnp.float32))
 
-    o_ref[...] = jax.lax.fori_loop(0, m, body, jnp.zeros_like(x))
+    return jax.lax.fori_loop(0, m, body, jnp.zeros_like(x_f32))
+
+
+def _template_kernel(x_ref, t_ref, o_ref, *, m: int):
+    o_ref[...] = _sad_vals(x_ref[...].astype(jnp.float32), t_ref, m)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -474,17 +490,24 @@ def template_match(data: jax.Array, template: jax.Array, *,
 # §5 substring match (row-wise, match-end semantics)
 # ---------------------------------------------------------------------------
 
-def _substring_kernel(x_ref, nee_ref, o_ref, *, m: int, n: int):
-    x = x_ref[...]
-    first = jax.lax.broadcasted_iota(jnp.int32, (1, n), 1) == 0
+def _substring_ends_vals(x, nee_row, m: int, idx):
+    """§5 match-END carry chain on a resident block (shared by the
+    standalone kernel and the fused instruction stream); ``nee_row`` is a
+    (1, M) needle ref/array.  Returns int32 0/1 flags."""
+    first = idx == 0
 
     def body(i, state):
-        hit = (x == nee_ref[0, i]).astype(jnp.int32)
+        hit = (x == nee_row[0, i]).astype(jnp.int32)
         shifted = jnp.where(first, 0, jnp.roll(state, 1, axis=-1))
         return jnp.where(i == 0, hit, hit * shifted)
 
-    init = jnp.zeros((1, n), jnp.int32)
-    o_ref[...] = jax.lax.fori_loop(0, m, body, init).astype(o_ref.dtype)
+    return jax.lax.fori_loop(0, m, body, jnp.zeros(x.shape, jnp.int32))
+
+
+def _substring_kernel(x_ref, nee_ref, o_ref, *, m: int, n: int):
+    idx = jax.lax.broadcasted_iota(jnp.int32, (1, n), 1)
+    o_ref[...] = _substring_ends_vals(x_ref[...], nee_ref, m,
+                                      idx).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -512,8 +535,13 @@ def _stencil_kernel(x_ref, o_ref, *, taps: tuple[float, ...], wrap: bool):
     x = x_ref[...].astype(jnp.float32)
     n = x.shape[-1]
     idx = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
-    c = len(taps) // 2
+    o_ref[...] = _stencil_vals(x, idx, taps, wrap, n)
+
+
+def _stencil_vals(x, idx, taps: tuple[float, ...], wrap: bool, n: int):
+    """§7.3 tap accumulation on a resident float32 block (shared body)."""
     acc = jnp.zeros_like(x)
+    c = len(taps) // 2
     for k, w in enumerate(taps):        # unrolled ~M shift-mul-add cycles
         if w == 0:
             continue
@@ -524,7 +552,7 @@ def _stencil_kernel(x_ref, o_ref, *, taps: tuple[float, ...], wrap: bool):
             elif k - c < 0:
                 shifted = jnp.where(idx < n + (k - c), shifted, 0.0)
         acc = acc + w * shifted
-    o_ref[...] = acc
+    return acc
 
 
 @functools.partial(jax.jit, static_argnames=("taps", "wrap", "interpret"))
@@ -545,3 +573,151 @@ def stencil(x: jax.Array, taps: tuple[float, ...], *, wrap: bool = True,
         out_shape=jax.ShapeDtypeStruct((r, n), jnp.float32),
         interpret=interpret,
     )(x)
+
+
+# ---------------------------------------------------------------------------
+# fused instruction streams — one launch for a whole §3–§7 program group
+# ---------------------------------------------------------------------------
+
+#: producer ops and their kernel output dtypes (cast to bool by the caller)
+FUSED_PRODUCERS = {
+    "activate": jnp.int8,
+    "compare": jnp.int8,
+    "substring_match": jnp.int8,
+    "template_match": jnp.float32,
+    "stencil": jnp.float32,
+}
+
+_FUSED_TRANSFORMS = ("shift", "insert", "delete", "truncate")
+
+
+def _fused_apply(op: str, statics, x, ul, refs, idx, n: int):
+    """Execute one broadcast instruction on the resident (1, N) block.
+
+    ``x`` is the live buffer block, ``ul`` the §4.2 used-length register —
+    both stay in VMEM across the whole group.  Returns ``(x, ul, produced)``
+    with ``produced`` None for buffer transforms.  Each branch mirrors the
+    corresponding eager lowering exactly (same op order, same dtypes), so
+    the fused stream is bit-identical to per-op dispatch.
+    """
+    s = dict(statics)
+    live = idx < ul
+    if op == "activate":
+        p = refs[0][...]
+        mask = _activate_vals(idx, p[0, 0], p[0, 1], p[0, 2])
+        return x, ul, mask.astype(jnp.int8)
+    if op == "shift":
+        se = refs[0][...]
+        fill = refs[1][0, 0] if s["has_fill"] else None
+        return (_shift_vals(x, idx, se[0, 0], se[0, 1], s["shift"], n, fill),
+                ul, None)
+    if op == "insert":
+        pos, v, k = refs[0][0, 0], refs[1], s["k"]
+        x = _shift_vals(x, idx, pos, ul - 1, k, n)
+        for j in range(k):              # §4.2 broadcast write, unrolled
+            x = jnp.where(idx == pos + j, v[0, j], x)
+        return x, jnp.minimum(ul + k, n), None
+    if op == "delete":
+        pos, fill, k = refs[0][0, 0], refs[1][0, 0], s["k"]
+        x = _shift_vals(x, idx, pos + k, ul - 1, -k, n)
+        x = jnp.where((idx >= ul - k) & (idx < ul), fill, x)
+        return x, jnp.maximum(ul - k, 0), None
+    if op == "truncate":
+        return x, jnp.minimum(ul, refs[0][0, 0]), None
+    if op == "compare":
+        d = refs[0][0, 0]
+        if s["has_mask"]:
+            m = refs[1][0, 0]
+            a, b = x & m, d & m
+        else:
+            a, b = x.astype(jnp.dtype(s["ct"])), d
+        return x, ul, (_CMP[s["op"]](a, b) & live).astype(jnp.int8)
+    if op == "substring_match":
+        m = s["m"]
+        ends = _substring_ends_vals(x, refs[0], m, idx)
+        flags = (ends > 0) & live
+        if s["where"] == "start":
+            flags = jnp.roll(flags, -(m - 1), axis=-1) & (idx <= n - m)
+        return x, ul, flags.astype(jnp.int8)
+    if op == "template_match":
+        m = s["m"]
+        sad = _sad_vals(x.astype(jnp.float32), refs[0], m)
+        if s["mask_tail"]:
+            sad = jnp.where(idx + m <= ul, sad, jnp.inf)
+        return x, ul, sad
+    if op == "stencil":
+        base = x if s["wrap"] else jnp.where(live, x, jnp.zeros((), x.dtype))
+        return x, ul, _stencil_vals(base.astype(jnp.float32), idx,
+                                    s["taps"], s["wrap"], n)
+    raise NotImplementedError(f"fused instruction {op!r}")
+
+
+@functools.partial(jax.jit, static_argnames=("instrs", "interpret"))
+def fused_stream(x: jax.Array, used_len: jax.Array, instrs, operands, *,
+                 interpret: bool = True):
+    """Execute a fused instruction group in ONE kernel launch.
+
+    ``x``: (R, N) device rows; ``used_len``: (R,) §4.2 length registers.
+    ``instrs``: static tuple of ``(op, statics, n_operands)`` descriptors
+    in stream order (``n_operands`` is emitted by the one lowering in
+    ``repro.cpm.program.executors``, so the ref routing below cannot drift
+    from it); ``operands``: the matching dynamic operand arrays, each
+    ``(R, k)`` per-row or ``(1, k)`` broadcast.
+
+    The row block and its length register load into VMEM once; every
+    instruction reads/writes them there — the Pallas realization of the
+    paper's "broadcast the stream, execute in memory" (§3–§4).  Returns
+    ``(rows, used_lens, producer_outputs)``.
+    """
+    r, n = x.shape
+    counts = [nops for _, _, nops in instrs]
+    assert len(operands) == sum(counts), (len(operands), counts)
+    prod_dts = [FUSED_PRODUCERS[op] for op, _, _ in instrs
+                if op in FUSED_PRODUCERS]
+
+    def kernel(*refs):
+        x_ref, ul_ref = refs[0], refs[1]
+        pos = 2
+        op_refs = []
+        for c in counts:
+            op_refs.append(refs[pos:pos + c])
+            pos += c
+        o_x, o_ul = refs[pos], refs[pos + 1]
+        prod_refs = refs[pos + 2:]
+
+        xv = x_ref[...]
+        ul = ul_ref[0, 0]
+        idx = jax.lax.broadcasted_iota(jnp.int32, (1, n), 1)
+        pi = 0
+        for (op, statics, _), orefs in zip(instrs, op_refs):
+            xv, ul, out = _fused_apply(op, statics, xv, ul, orefs, idx, n)
+            if out is not None:
+                prod_refs[pi][...] = out
+                pi += 1
+        o_x[...] = xv
+        o_ul[...] = jnp.asarray(ul, jnp.int32).reshape(1, 1)
+
+    def _spec(rows, k):
+        if rows == 1 and r != 1:
+            return pl.BlockSpec((1, k), lambda i: (0, 0))
+        return pl.BlockSpec((1, k), lambda i: (i, 0))
+
+    in_specs = [pl.BlockSpec((1, n), lambda i: (i, 0)),
+                pl.BlockSpec((1, 1), lambda i: (i, 0))]
+    in_specs += [_spec(*a.shape) for a in operands]
+    out_specs = ([pl.BlockSpec((1, n), lambda i: (i, 0)),
+                  pl.BlockSpec((1, 1), lambda i: (i, 0))]
+                 + [pl.BlockSpec((1, n), lambda i: (i, 0))
+                    for _ in prod_dts])
+    out_shape = ([jax.ShapeDtypeStruct((r, n), x.dtype),
+                  jax.ShapeDtypeStruct((r, 1), jnp.int32)]
+                 + [jax.ShapeDtypeStruct((r, n), dt) for dt in prod_dts])
+    out = pl.pallas_call(
+        kernel,
+        grid=(r,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(x, used_len.reshape(r, 1), *operands)
+    return out[0], out[1][:, 0], list(out[2:])

@@ -1,6 +1,6 @@
-from . import engine, kv_cache, reference, sampling
+from . import engine, kv_cache, program_paths, reference, sampling
 from .engine import Engine, GenConfig
 from .reference import ReferenceEngine
 
-__all__ = ["engine", "kv_cache", "reference", "sampling",
+__all__ = ["engine", "kv_cache", "program_paths", "reference", "sampling",
            "Engine", "GenConfig", "ReferenceEngine"]

@@ -46,7 +46,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.cpm.reference import searchable
 from repro.models import lm
-from . import kv_cache, sampling
+from . import kv_cache, program_paths, sampling
 
 
 @dataclasses.dataclass
@@ -67,11 +67,18 @@ class Engine:
     """Batched scan engine (static batch, fixed shapes, one program/call)."""
 
     def __init__(self, cfg: ModelConfig, params, max_len: int = 512,
-                 jit: bool = True):
+                 jit: bool = True, cpm_backend: str = "reference",
+                 cpm_interpret: bool | None = None):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
         self._jit = jit
+        # backend for the CPM commit path (token-buffer splice):
+        # "reference" keeps the one-scatter XLA lowering; "pallas" commits
+        # each round through the recorded program as ONE fused_stream
+        # mega-kernel launch (see _build_commit)
+        self.cpm_backend = cpm_backend
+        self.cpm_interpret = cpm_interpret
 
         def maybe_jit(fn, **kw):
             return jax.jit(fn, **kw) if jit else fn
@@ -218,13 +225,23 @@ class Engine:
         return jax.jit(run) if self._jit else run
 
     def _build_commit(self, s: int, gen: GenConfig):
-        """Acceptance, rollback, and output-buffer commit for one round."""
+        """Acceptance, rollback, and output-buffer commit for one round.
+
+        The paper-side sequence — draft verify (§5 carry chain) -> KV
+        rollback (§4.2 truncate) -> token splice (§4.2 insert) — commits
+        through a CPM program (``serve.program_paths``) on the pallas/mesh
+        backends: the insert+truncate pair on the token buffer is one
+        fusion group, so a commit round on pallas is a single mega-kernel
+        launch instead of per-op dispatch.  On the default reference
+        backend the same splice stays a one-scatter XLA op (no launches to
+        fuse, and the scatter touches only draft_len slots).  Both paths
+        are token-identical within the returned live region
+        (``tests/test_program.py`` asserts engine-output equality).
+        """
         draft_len, max_new = gen.ngram_spec, gen.max_new_tokens
         cfg = self.cfg
 
         def run(buf, n_new, caches, snaps, draft, logits, pos):
-            b, cap = buf.shape
-            rows = jnp.arange(b)
             preds = sampling.greedy(logits)              # (B, T) greedy
             n_acc = searchable.verify_draft(draft, preds)         # (B,)
             n_emit = jnp.minimum(n_acc + 1, draft_len)   # always >= 1
@@ -234,14 +251,28 @@ class Engine:
             new_pos = pos + n_emit
             caches = kv_cache.truncate(caches, new_pos)
             # commit emitted tokens (= preds over the kept prefix) at
-            # per-row offsets; rows past their budget write nothing
+            # per-row offsets; rows past their budget write nothing that
+            # the returned live region can see
             remaining = jnp.maximum(max_new - n_new, 0)
             emit_n = jnp.minimum(n_emit, remaining)
-            tidx = jnp.arange(draft_len)[None]
-            widx = s + n_new[:, None] + tidx
-            widx = jnp.where(tidx < emit_n[:, None], widx, cap)
-            buf = buf.at[rows[:, None], widx].set(preds, mode="drop")
-            n_new = n_new + emit_n
+            if self.cpm_backend == "reference":
+                # XLA-native realization of the same §4.2 splice: one
+                # scatter touching draft_len slots.  The recorded program
+                # rolls whole rows — equivalent within the live region but
+                # ~10x the vector work (bench PF_commit_program_b8), and
+                # its fusion win only exists where launches cost something.
+                b, cap = buf.shape
+                rows = jnp.arange(b)
+                tidx = jnp.arange(draft_len)[None]
+                widx = jnp.where(tidx < emit_n[:, None],
+                                 s + n_new[:, None] + tidx, cap)
+                buf = buf.at[rows[:, None], widx].set(preds, mode="drop")
+                n_new = n_new + emit_n
+            else:
+                buf, new_used = program_paths.commit_tokens(
+                    buf, s + n_new, preds, emit_n,
+                    backend=self.cpm_backend, interpret=self.cpm_interpret)
+                n_new = new_used - s
             acc = jnp.sum(jnp.minimum(n_acc, emit_n))
             # proposed, like accepted, counts only draft tokens within the
             # budget, so acceptance_rate reflects returned tokens

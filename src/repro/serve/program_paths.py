@@ -1,0 +1,73 @@
+"""Serving hot paths expressed as recorded CPM programs.
+
+The speculative-decode commit is the engine's per-round device-side
+sequence (paper ops in parentheses):
+
+  1. ``verify_draft``  — the §5 searchable carry chain over draft vs
+     teacher-forced predictions (``repro.cpm.reference.searchable``),
+     producing each row's accepted prefix length;
+  2. ``truncate``      — the §4.2 range delete that rolls the KV cache
+     back to the accepted length (``kv_cache.truncate``, lengths only);
+  3. ``insert``        — the §4.2 range insert that commits the accepted
+     tokens into the output buffer at each row's live end.
+
+Steps 2–3 on the *token buffer* are expressed here as a two-instruction
+``CPMProgram`` (``insert`` then ``truncate`` — append the whole round's
+predictions, then roll back to the accepted prefix; the §4.2 length
+register makes the rollback free).  The fusing scheduler lowers the pair
+to ONE ``fused_stream`` mega-kernel on the pallas backend, so a commit
+round is a single launch instead of per-op dispatch — the instruction-
+stream discipline applied to a real serving path.
+
+Token-identity with the legacy scatter commit is enforced by
+``tests/test_engine_equiv.py`` (engine vs step-by-step oracle) and
+``tests/test_program.py`` (fused vs eager reference, bit-identical).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.cpm import CPMArray, CPMProgram
+from repro.cpm.program import schedule
+
+
+def record_commit_program(buf, used, preds, emit_n,
+                          backend: str = "reference",
+                          interpret: bool | None = None):
+    """Build (but do not run) the commit stream for one verify round.
+
+    Returns ``(device, plan)``: the token-buffer device and the scheduled
+    fusion plan of ``insert(used, preds) -> truncate(used + emit_n)``.
+    The stream is built explicitly — it is exactly what
+    ``with cpm.record(): dev.insert(used, preds).truncate(used + emit_n)``
+    would trace, but the hot path must not pay the tracer's eager
+    reference execution on every non-jit call.
+    """
+    used = jnp.asarray(used, jnp.int32)
+    dev = CPMArray(jnp.asarray(buf), used, backend=backend,
+                   interpret=interpret)
+    prog = CPMProgram() \
+        .append("insert", pos=used, values=preds) \
+        .append("truncate", new_len=used + emit_n)
+    return dev, schedule(prog)
+
+
+def commit_tokens(buf, used, preds, emit_n, backend: str = "reference",
+                  interpret: bool | None = None):
+    """Commit one speculative round into the token buffer.
+
+    ``buf``: (B, cap) output tokens; ``used``: (B,) live lengths (prompt +
+    already-emitted); ``preds``: (B, draft_len) this round's teacher-forced
+    predictions; ``emit_n``: (B,) budget-clipped accepted counts.
+
+    Appends all ``draft_len`` predictions at each row's live end and rolls
+    the length register back to ``used + emit_n`` — physically identical
+    (within the returned live region) to the legacy per-element scatter,
+    but expressed as a broadcast instruction stream: one fused kernel
+    launch on the pallas backend.  Returns ``(new_buf, new_used)``.
+    """
+    dev, plan = record_commit_program(buf, used, preds, emit_n,
+                                      backend=backend, interpret=interpret)
+    out, _ = plan.run(dev, backend=backend, interpret=interpret)
+    return out.data, out.used_len

@@ -20,7 +20,7 @@ from functools import partial
 from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from repro.core import collectives
+from repro.cpm import collectives
 
 mesh = jax.make_mesh((2, 4), ("pod", "data"))
 x = jnp.arange(32, dtype=jnp.float32).reshape(8, 4)

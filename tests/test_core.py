@@ -1,4 +1,7 @@
-"""Unit + property tests for repro.core — the CPM operator library."""
+"""Unit + property tests for the CPM operator library (`repro.cpm.reference`).
+
+Migrated off the deprecated ``repro.core`` path (PR 4); the legacy shim itself
+is covered on purpose in ``tests/test_core_shim.py``."""
 
 import jax
 import jax.numpy as jnp
@@ -6,8 +9,8 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro import core
-from repro.core import computable, movable, pe_array, searchable
+from repro.cpm.reference import (comparable, computable, movable,
+                                 pe_array, searchable)
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -18,11 +21,11 @@ jax.config.update("jax_platform_name", "cpu")
 
 class TestGeneralDecoder:
     def test_basic_range(self):
-        m = core.activation_mask(16, 3, 9, 1)
+        m = pe_array.activation_mask(16, 3, 9, 1)
         np.testing.assert_array_equal(np.where(m)[0], np.arange(3, 10))
 
     def test_carry(self):
-        m = core.activation_mask(32, 4, 20, 4)
+        m = pe_array.activation_mask(32, 4, 20, 4)
         np.testing.assert_array_equal(np.where(m)[0], [4, 8, 12, 16, 20])
 
     @given(st.integers(0, 63), st.integers(0, 63), st.integers(1, 16))
@@ -30,7 +33,7 @@ class TestGeneralDecoder:
     def test_fused_equals_three_stage(self, start, end, carry):
         """The paper's carry-pattern -> shift -> all-line decomposition must
         equal the fused O(1) predicate."""
-        fused = np.asarray(core.activation_mask(64, start, end, carry))
+        fused = np.asarray(pe_array.activation_mask(64, start, end, carry))
         staged = np.asarray(pe_array.general_decoder(64, start, end, carry))
         np.testing.assert_array_equal(fused, staged)
 
@@ -43,16 +46,16 @@ class TestGeneralDecoder:
 class TestRule6:
     def test_counter_and_priority(self):
         match = jnp.array([False, True, False, True, True])
-        assert int(core.count_matches(match)) == 3
-        assert int(core.first_match(match)) == 1
-        idx, valid = core.enumerate_matches(match, 4)
+        assert int(pe_array.count_matches(match)) == 3
+        assert int(pe_array.first_match(match)) == 1
+        idx, valid = pe_array.enumerate_matches(match, 4)
         np.testing.assert_array_equal(np.asarray(idx), [1, 3, 4, 5])
         np.testing.assert_array_equal(np.asarray(valid), [True, True, True, False])
 
     def test_no_match(self):
         match = jnp.zeros(7, dtype=bool)
-        assert int(core.first_match(match)) == 7
-        assert not bool(core.any_match(match))
+        assert int(pe_array.first_match(match)) == 7
+        assert not bool(pe_array.any_match(match))
 
     def test_enumerate_matches_batched_slices_address_axis(self):
         """PR-3 regression: ``[:max_out]`` used to slice the *batch* axis,
@@ -60,7 +63,7 @@ class TestRule6:
         match = jnp.array([[True, False, True, False, True],
                            [False, False, False, True, False],
                            [False, False, False, False, False]])
-        idx, valid = core.enumerate_matches(match, 2)
+        idx, valid = pe_array.enumerate_matches(match, 2)
         assert idx.shape == valid.shape == (3, 2)
         np.testing.assert_array_equal(np.asarray(idx),
                                       [[0, 2], [3, 5], [5, 5]])
@@ -143,13 +146,13 @@ class TestSearchable:
     def test_substring_ends(self):
         hay = jnp.array(list(b"abracadabra"), dtype=jnp.int32)
         needle = jnp.array(list(b"abra"), dtype=jnp.int32)
-        ends = np.where(np.asarray(core.substring_match(hay, needle)))[0]
+        ends = np.where(np.asarray(searchable.substring_match(hay, needle)))[0]
         np.testing.assert_array_equal(ends, [3, 10])
 
     def test_find_all_starts(self):
         hay = jnp.array(list(b"aaaa"), dtype=jnp.int32)
         needle = jnp.array(list(b"aa"), dtype=jnp.int32)
-        starts, valid = core.find_all(hay, needle, 4)
+        starts, valid = searchable.find_all(hay, needle, 4)
         np.testing.assert_array_equal(np.asarray(starts)[np.asarray(valid)], [0, 1, 2])
 
     @given(st.text(alphabet="ab", min_size=1, max_size=40),
@@ -160,7 +163,7 @@ class TestSearchable:
             return
         hay = jnp.array([ord(c) for c in hay_s], dtype=jnp.int32)
         nee = jnp.array([ord(c) for c in nee_s], dtype=jnp.int32)
-        ends = set(np.where(np.asarray(core.substring_match(hay, nee)))[0])
+        ends = set(np.where(np.asarray(searchable.substring_match(hay, nee)))[0])
         expect = {i + len(nee_s) - 1 for i in range(len(hay_s) - len(nee_s) + 1)
                   if hay_s[i : i + len(nee_s)] == nee_s}
         assert ends == expect
@@ -174,11 +177,11 @@ class TestSearchable:
     def test_verify_draft(self):
         draft = jnp.array([5, 6, 7, 8])
         target = jnp.array([5, 6, 9, 8])
-        assert int(core.verify_draft(draft, target)) == 2
+        assert int(searchable.verify_draft(draft, target)) == 2
 
     def test_ngram_lookup(self):
         ctx = jnp.array([1, 2, 3, 9, 1, 2, 3], dtype=jnp.int32)
-        starts, valid = core.ngram_lookup(ctx, jnp.array([1, 2, 3], dtype=jnp.int32))
+        starts, valid = searchable.ngram_lookup(ctx, jnp.array([1, 2, 3], dtype=jnp.int32))
         got = np.asarray(starts)[np.asarray(valid)]
         np.testing.assert_array_equal(got, [3])  # continuation after first occurrence
 
@@ -190,12 +193,12 @@ class TestSearchable:
 class TestComparable:
     def test_compare_ops(self):
         x = jnp.array([1, 5, 3, 5])
-        assert int(core.count_matches(core.compare(x, 5, "eq"))) == 2
-        assert int(core.count_matches(core.compare(x, 4, "lt"))) == 2
+        assert int(pe_array.count_matches(comparable.compare(x, 5, "eq"))) == 2
+        assert int(pe_array.count_matches(comparable.compare(x, 4, "lt"))) == 2
 
     def test_lex_compare(self):
         words = jnp.array([[1, 9], [2, 0], [1, 2], [2, 1]])  # MSW first
-        lt = np.asarray(core.lex_compare_lt(words, jnp.array([2, 1])))
+        lt = np.asarray(comparable.lex_compare_lt(words, jnp.array([2, 1])))
         np.testing.assert_array_equal(lt, [True, True, True, False])
 
     @given(st.lists(st.integers(0, 255), min_size=1, max_size=32))
@@ -203,19 +206,19 @@ class TestComparable:
     def test_histogram_matches_numpy(self, vals):
         x = jnp.array(vals)
         edges = jnp.array([0, 64, 128, 192, 256])
-        h = np.asarray(core.histogram(x, edges))
+        h = np.asarray(comparable.histogram(x, edges))
         np.testing.assert_array_equal(h, np.histogram(vals, bins=np.asarray(edges))[0])
 
     def test_quantile_threshold_topk(self):
         x = jnp.linspace(0.0, 1.0, 100)
-        t = core.quantile_threshold(x, 10, 0.0, 1.0)
+        t = comparable.quantile_threshold(x, 10, 0.0, 1.0)
         assert int((x > t).sum()) in (9, 10)
 
     @given(st.integers(1, 8), st.integers(0, 6))
     @settings(max_examples=30, deadline=None)
     def test_topk_mask(self, k, seed):
         x = jax.random.normal(jax.random.PRNGKey(seed), (3, 12))
-        m = core.topk_mask(x, k)
+        m = comparable.topk_mask(x, k)
         assert np.all(np.asarray(m.sum(-1)) == k)
         # masked-in values must all be >= every masked-out value
         lo = np.where(np.asarray(m), np.asarray(x), np.inf).min(-1)
@@ -233,7 +236,7 @@ class TestComputable:
     @settings(max_examples=30, deadline=None)
     def test_section_sum(self, vals):
         x = jnp.array(vals, dtype=jnp.float32)
-        np.testing.assert_allclose(float(core.section_sum(x)),
+        np.testing.assert_allclose(float(computable.section_sum(x)),
                                    np.sum(np.asarray(x, dtype=np.float64)),
                                    rtol=1e-4, atol=1e-3)
 
@@ -243,12 +246,12 @@ class TestComputable:
 
     def test_section_limit(self):
         x = jnp.array([3.0, -7.0, 11.0, 0.5])
-        assert float(core.section_limit(x, mode="max")) == 11.0
-        assert float(core.section_limit(x, mode="min")) == -7.0
+        assert float(computable.section_limit(x, mode="max")) == 11.0
+        assert float(computable.section_limit(x, mode="min")) == -7.0
 
     def test_section_sum_2d(self):
         x = jnp.arange(48, dtype=jnp.float32).reshape(6, 8)
-        np.testing.assert_allclose(float(core.section_sum_2d(x)), x.sum())
+        np.testing.assert_allclose(float(computable.section_sum_2d(x)), x.sum())
 
     def test_stencil_algebra_eq_7_10(self):
         """(1 2 1) == (1 1 0) # (0 1 1)."""
@@ -285,32 +288,32 @@ class TestComputable:
     @settings(max_examples=20, deadline=None)
     def test_hybrid_sort(self, vals):
         x = jnp.array(vals, dtype=jnp.float32)
-        out = np.asarray(core.hybrid_sort(x))
+        out = np.asarray(computable.hybrid_sort(x))
         np.testing.assert_allclose(out, np.sort(vals), rtol=1e-6)
 
     def test_count_disorder(self):
-        assert int(core.count_disorder(jnp.array([1, 2, 3]))) == 0
-        assert int(core.count_disorder(jnp.array([3, 2, 1]))) == 2
+        assert int(computable.count_disorder(jnp.array([1, 2, 3]))) == 0
+        assert int(computable.count_disorder(jnp.array([3, 2, 1]))) == 2
 
     def test_detect_defects_peak_valley(self):
         x = jnp.array([1.0, 2, 9, 3, 4])     # 9 is a peak
-        d = core.detect_defects(x)
+        d = computable.detect_defects(x)
         assert bool(d["peak"][2])
         x = jnp.array([5.0, 6, 1, 7, 8])     # 1 is a valley
-        d = core.detect_defects(x)
+        d = computable.detect_defects(x)
         assert bool(d["valley"][2])
 
     def test_template_match_1d(self):
         data = jnp.array([9.0, 1, 2, 3, 9, 9, 1, 2, 3, 9])
         t = jnp.array([1.0, 2, 3])
-        sad = np.asarray(core.template_match_1d(data, t))
+        sad = np.asarray(computable.template_match_1d(data, t))
         assert sad[1] == 0 and sad[6] == 0
         assert np.all(sad[[0, 2, 3, 4, 5]] > 0)
 
     def test_template_match_2d(self):
         img = jnp.zeros((8, 8)).at[2:4, 3:5].set(jnp.array([[1.0, 2], [3, 4]]))
         t = jnp.array([[1.0, 2], [3, 4]])
-        sad = np.asarray(core.template_match_2d(img, t))
+        sad = np.asarray(computable.template_match_2d(img, t))
         assert sad[2, 3] == 0
         assert np.count_nonzero(sad == 0) == 1
 

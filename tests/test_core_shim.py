@@ -1,0 +1,57 @@
+"""The deprecated ``repro.core`` import path — covered on purpose.
+
+The unit suites migrated to ``repro.cpm.reference`` (PR 4), so the legacy
+shim would otherwise keep working (or silently break) by accident.  This
+test pins the contract: importing ``repro.core`` warns ``DeprecationWarning``
+once, re-exports the very same function objects the new path serves, and the
+subpackage aliases (``repro.core.movable`` etc.) resolve to the new modules.
+
+Run in a subprocess so a ``repro.core`` import cached by another test file
+cannot swallow the import-time warning.
+"""
+
+import os
+import subprocess
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SCRIPT = r"""
+import warnings
+
+with warnings.catch_warnings(record=True) as caught:
+    warnings.simplefilter("always")
+    import repro.core as core
+
+assert any(issubclass(w.category, DeprecationWarning) for w in caught), \
+    "repro.core import must warn DeprecationWarning"
+assert any("repro.cpm" in str(w.message) for w in caught), \
+    "the warning must point at the replacement path"
+
+import repro.cpm.reference as ref
+from repro.cpm import collectives
+
+# the shim re-exports the SAME objects, not parallel copies
+assert core.substring_match is ref.searchable.substring_match
+assert core.activation_mask is ref.pe_array.activation_mask
+assert core.shift_range is ref.movable.shift_range
+assert core.histogram is ref.comparable.histogram
+assert core.section_sum is ref.computable.section_sum
+assert core.ring_allreduce is collectives.ring_allreduce
+assert core.movable is ref.movable
+assert core.collectives is collectives
+
+# and every name promised in __all__ resolves
+for name in core.__all__:
+    assert getattr(core, name, None) is not None, name
+print("SHIM_OK")
+"""
+
+
+def test_legacy_core_shim_warns_and_aliases():
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO_ROOT, "src"),
+               JAX_PLATFORMS="cpu")
+    r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
+                       text=True, cwd=REPO_ROOT, env=env, timeout=300)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "SHIM_OK" in r.stdout

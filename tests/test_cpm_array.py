@@ -20,6 +20,7 @@ import pytest
 
 import repro.cpm as cpm
 from repro.cpm import CPMArray, cpm_array
+from repro.cpm.program import count_pallas_calls, scan_trip_count
 from repro.cpm.reference import computable
 from repro.kernels import cpm_kernels
 
@@ -148,23 +149,6 @@ def batched_pair(data, lens):
             CPMArray(data, lens, backend="pallas", interpret=True))
 
 
-def count_pallas_calls(fn, *args) -> int:
-    closed = jax.make_jaxpr(fn)(*args)
-    n = 0
-
-    def walk(jaxpr):
-        nonlocal n
-        for eqn in jaxpr.eqns:
-            if eqn.primitive.name == "pallas_call":
-                n += 1
-            for v in eqn.params.values():
-                if hasattr(v, "jaxpr"):
-                    walk(v.jaxpr)
-
-    walk(closed.jaxpr)
-    return n
-
-
 class TestBatchedReductions:
     """PR-3 tentpole: (R, N) layouts dispatch as ONE pallas launch and are
     bit-identical to the reference for ints (floats to tolerance)."""
@@ -254,23 +238,6 @@ class TestBatchedReductions:
 # §8 super ops: log-depth combine equals the two-phase result
 # ---------------------------------------------------------------------------
 
-def measured_scan_trips(fn, *args) -> int:
-    closed = jax.make_jaxpr(fn)(*args)
-    total = 0
-
-    def walk(jaxpr):
-        nonlocal total
-        for eqn in jaxpr.eqns:
-            if eqn.primitive.name == "scan":
-                total += int(eqn.params["length"])
-            for v in eqn.params.values():
-                if hasattr(v, "jaxpr"):
-                    walk(v.jaxpr)
-
-    walk(closed.jaxpr)
-    return total
-
-
 class TestSuperOps:
     @pytest.mark.parametrize("n,used", [(64, 50), (130, 130), (96, 17)])
     def test_super_equals_two_phase(self, n, used):
@@ -309,9 +276,9 @@ class TestSuperOps:
         """The scan trip count of the lowered jaxpr IS the registered
         concurrent-step formula (phase-1 levels + phase-2 levels)."""
         arr = cpm_array(int_data(1, n), n, backend="reference")
-        got = measured_scan_trips(lambda a: a.super_sum(), arr)
+        got = scan_trip_count(lambda a: a.super_sum(), arr)
         assert got == cpm.op_steps("super_sum", n=n)
-        got = measured_scan_trips(lambda a: a.super_limit(), arr)
+        got = scan_trip_count(lambda a: a.super_limit(), arr)
         assert got == cpm.op_steps("super_limit", n=n)
 
 

@@ -1,0 +1,505 @@
+"""`repro.cpm.program` — instruction streams, fusion, per-backend executors.
+
+Covers the PR-4 acceptance criteria: recording is transparent (eager-equal
+results), the fusing scheduler partitions at reduction boundaries, a
+recorded 4+-op elementwise/local pipeline lowers to strictly fewer
+``pallas_call``s than eager dispatch (ONE per fused group, jaxpr-walk
+asserted) while staying bit-identical to eager reference execution, the
+whole-program cycle-cost model matches jaxpr-measured scan trips, and the
+serving commit path (`serve.program_paths`) fuses to a single launch.
+"""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.cpm as cpm
+from repro.cpm import CPMArray, cpm_array, record, schedule
+from repro.cpm.program import (apply_instruction, count_pallas_calls,
+                               program_steps, scan_structured_steps,
+                               scan_trip_count)
+from repro.serve import program_paths
+
+jax.config.update("jax_platform_name", "cpu")
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def int_data(seed, n, lo=0, hi=9):
+    return jax.random.randint(jax.random.PRNGKey(seed), (n,), lo, hi)
+
+
+# ---------------------------------------------------------------------------
+# recording: transparent tracing of CPMArray method calls
+# ---------------------------------------------------------------------------
+
+class TestRecording:
+    def test_records_stream_and_returns_eager_values(self):
+        data = int_data(0, 48)
+        dev = cpm_array(data, 40)
+        with record() as prog:
+            d2 = dev.insert(3, jnp.array([90, 91]))
+            flags = d2.compare(4, "lt")
+            total = d2.section_sum()
+        assert [i.op for i in prog] == ["insert", "compare", "section_sum"]
+        ref = cpm_array(data, 40, backend="reference")
+        e2 = ref.insert(3, jnp.array([90, 91]))
+        np.testing.assert_array_equal(np.asarray(d2.data), np.asarray(e2.data))
+        np.testing.assert_array_equal(np.asarray(flags),
+                                      np.asarray(e2.compare(4, "lt")))
+        assert int(total) == int(e2.section_sum())
+
+    def test_nested_method_calls_record_once(self):
+        """count() calls compare() internally — only the outer call is an
+        instruction (the device sees one broadcast op)."""
+        dev = cpm_array(int_data(1, 32), 32)
+        with record() as prog:
+            dev.count(4, "lt")
+            dev.find_all(jnp.array([1, 2]), max_out=4)
+        assert [i.op for i in prog] == ["count", "find_all"]
+
+    def test_device_identity_restored_on_results(self):
+        dev = cpm_array(jnp.arange(16), 10, backend="pallas", interpret=True)
+        with record() as prog:
+            out = dev.insert(2, jnp.array([5]))
+        assert out.backend == "pallas" and out.interpret is True
+        assert len(prog) == 1
+
+    def test_record_does_not_nest(self):
+        with record():
+            with pytest.raises(RuntimeError):
+                with record():
+                    pass
+
+    def test_non_linear_recording_raises(self):
+        """Replay is strictly linear, so recording a call on a stale
+        receiver (not the stream head) must raise, not silently replay
+        against the wrong device state."""
+        dev = cpm_array(jnp.arange(8), 8)
+        with record():
+            dev.insert(0, jnp.array([99, 98]))     # head moves past `dev`
+            with pytest.raises(RuntimeError, match="non-linear"):
+                dev.compare(5, "lt")
+
+    def test_linear_producers_share_the_head(self):
+        """Producers do not advance the head: many reads off one state —
+        the example's filter/match pattern — stay recordable."""
+        dev = cpm_array(jnp.arange(8), 8)
+        with record() as prog:
+            dev.compare(5, "lt")
+            dev.template_match(jnp.array([1.0, 2.0]))
+            d2 = dev.truncate(6)
+            d2.section_sum()
+        assert len(prog) == 4
+
+    def test_no_recording_outside_context(self):
+        dev = cpm_array(jnp.arange(8), 8)
+        with record() as prog:
+            pass
+        dev.compare(3, "lt")                   # after the block: not traced
+        assert len(prog) == 0
+
+    def test_explicit_builder(self):
+        prog = cpm.CPMProgram()
+        prog.append("shift", start=1, end=5, shift=2, fill=None) \
+            .append("section_sum", section=None)
+        plan = schedule(prog)
+        assert [g.kind for g in plan.groups] == ["fused", "boundary"]
+        arr = cpm_array(jnp.arange(12), 9)
+        final, outs = plan.run(arr, backend="reference")
+        want = cpm_array(jnp.arange(12), 9, backend="reference").shift(1, 5, 2)
+        np.testing.assert_array_equal(np.asarray(final.data),
+                                      np.asarray(want.data))
+        assert int(outs[1]) == int(want.section_sum())
+
+
+# ---------------------------------------------------------------------------
+# scheduling: fusable runs vs reduction boundaries, from the op table
+# ---------------------------------------------------------------------------
+
+class TestScheduler:
+    def test_reductions_are_boundaries(self):
+        dev = cpm_array(int_data(2, 64), 50)
+        with record() as prog:
+            d = dev.shift(2, 20, 1)
+            d.compare(3, "ge")
+            d.section_sum()                    # wall
+            d.activate(0, 30, 2)
+            d.stencil((1.0, 2.0, 1.0))
+            d.super_sum()                      # wall
+            d.sort()                           # wall (whole-row reorder)
+        plan = schedule(prog)
+        assert [g.kind for g in plan.groups] == [
+            "fused", "boundary", "fused", "boundary", "boundary"]
+        assert plan.fused_group_count == 2
+        assert [i.op for i in plan.groups[2].instructions] == [
+            "activate", "stencil"]
+
+    def test_fusable_set_reads_op_table(self):
+        fus = cpm.fusable_ops()
+        assert {"activate", "shift", "insert", "delete", "truncate",
+                "compare", "substring_match", "template_match",
+                "stencil"} <= fus
+        for op in ("section_sum", "global_limit", "super_sum", "super_limit",
+                   "sort", "histogram", "compact"):
+            assert op not in fus
+
+    def test_describe_names_groups(self):
+        with record() as prog:
+            cpm_array(jnp.arange(8), 8).compare(3, "lt")
+        text = schedule(prog).describe()
+        assert "fused" in text and "compare" in text
+
+
+# ---------------------------------------------------------------------------
+# acceptance: a recorded 4+-op pipeline fuses to ONE pallas_call
+# ---------------------------------------------------------------------------
+
+def _pipeline_program(dev):
+    with record() as prog:
+        d = dev.shift(2, 30, 3)
+        d = d.insert(4, jnp.array([7, 8]))
+        d.compare(20, "ge")
+        d.activate(0, 40, 2)
+        d.stencil((1.0, 2.0, 1.0))
+    return prog
+
+
+def _pipeline_eager(arr):
+    d = arr.shift(2, 30, 3).insert(4, jnp.array([7, 8]))
+    return (d.data, d.used_len, d.compare(20, "ge"), d.activate(0, 40, 2),
+            d.stencil((1.0, 2.0, 1.0)))
+
+
+class TestFusedPipeline:
+    N, USED = 64, 50
+
+    def _record(self):
+        return _pipeline_program(cpm_array(int_data(3, self.N), self.USED))
+
+    def test_strictly_fewer_pallas_calls_than_eager(self):
+        plan = schedule(self._record())
+        arr = cpm_array(int_data(3, self.N), self.USED, backend="pallas",
+                        interpret=True)
+        fused = count_pallas_calls(
+            lambda a: plan.run(a, backend="pallas", interpret=True), arr)
+        eager = count_pallas_calls(_pipeline_eager, arr)
+        assert fused == plan.fused_group_count == 1
+        assert eager == 5                      # one launch per dispatched op
+        assert fused < eager
+
+    def test_bit_identical_to_eager_reference(self):
+        plan = schedule(self._record())
+        data = int_data(3, self.N)
+        final, outs = plan.run(cpm_array(data, self.USED), backend="pallas",
+                               interpret=True)
+        e_data, e_ul, *e_outs = _pipeline_eager(
+            cpm_array(data, self.USED, backend="reference"))
+        np.testing.assert_array_equal(np.asarray(final.data),
+                                      np.asarray(e_data))
+        assert int(final.used_len) == int(e_ul)
+        got = [o for o in outs if o is not None]
+        for g, e in zip(got, e_outs):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(e))
+
+    def test_single_pallas_call_per_fused_group(self):
+        """The CI fusion-smoke invariant: #pallas_calls == #fused groups +
+        #pallas-dispatched boundary ops."""
+        dev = cpm_array(int_data(4, 128), 100)
+        with record() as prog:
+            d = dev.shift(1, 60, 2)
+            d.compare(5, "lt")
+            d.section_sum()                    # boundary: its own kernel
+            d.template_match(jnp.arange(4))
+        plan = schedule(prog)
+        assert plan.fused_group_count == 2
+        arr = cpm_array(int_data(4, 128), 100)
+        calls = count_pallas_calls(
+            lambda a: plan.run(a, backend="pallas", interpret=True), arr)
+        assert calls == 3                      # 2 fused groups + section_sum
+
+    def test_every_fusable_op_matches_eager(self):
+        """Per-op differential through the mega-kernel (group of one)."""
+        n, used = 96, 70
+        data = int_data(5, n)
+        needle = data[10:13]
+        cases = {
+            "activate": lambda d: d.activate(3, 80, 4),
+            "shift": lambda d: d.shift(5, 60, -2, fill=-1),
+            "insert": lambda d: d.insert(7, jnp.array([41, 42, 43])),
+            "delete": lambda d: d.delete(9, 3, fill=-7),
+            "truncate": lambda d: d.truncate(33),
+            "compare": lambda d: d.compare(4, "ge"),
+            "compare_float": lambda d: d.compare(3.5, "lt"),
+            "compare_mask": lambda d: d.compare(2, "eq", mask=3),
+            "substring_start": lambda d: d.substring_match(needle),
+            "substring_end": lambda d: d.substring_match(needle, where="end"),
+            "template": lambda d: d.template_match(jnp.asarray(
+                data[4:8], jnp.float32)),
+            "stencil": lambda d: d.stencil((1.0, 2.0, 1.0)),
+            "stencil_wrap": lambda d: d.stencil((0.5, 1.0, 0.5), wrap=True),
+        }
+        for name, call in cases.items():
+            with record() as prog:
+                got_rec = call(cpm_array(data, used))
+            plan = schedule(prog)
+            assert plan.groups[0].kind == "fused", name
+            final, outs = plan.run(cpm_array(data, used), backend="pallas",
+                                   interpret=True)
+            want = call(cpm_array(data, used, backend="reference"))
+            got = final if isinstance(want, CPMArray) else outs[0]
+            if isinstance(want, CPMArray):
+                np.testing.assert_array_equal(np.asarray(got.data),
+                                              np.asarray(want.data), err_msg=name)
+                np.testing.assert_array_equal(np.asarray(got.used_len),
+                                              np.asarray(want.used_len),
+                                              err_msg=name)
+            else:
+                np.testing.assert_array_equal(np.asarray(got),
+                                              np.asarray(want), err_msg=name)
+            # recording itself returned the eager value
+            rec = got_rec.data if isinstance(got_rec, CPMArray) else got_rec
+            wnt = want.data if isinstance(want, CPMArray) else want
+            np.testing.assert_array_equal(np.asarray(rec), np.asarray(wnt),
+                                          err_msg=name)
+
+    def test_batched_per_row_operands_fused(self):
+        """The serving-commit shape: (B, cap) buffer, per-row positions."""
+        buf = jnp.arange(40, dtype=jnp.int32).reshape(4, 10)
+        used = jnp.array([5, 6, 7, 8], jnp.int32)
+        preds = jnp.arange(400, 412, dtype=jnp.int32).reshape(4, 3)
+        emit = jnp.array([1, 0, 3, 2], jnp.int32)
+        dev = CPMArray(buf, used)
+        with record() as prog:
+            dev.insert(used, preds).truncate(used + emit)
+        plan = schedule(prog)
+        assert plan.fused_group_count == len(plan.groups) == 1
+        ref, _ = plan.run(CPMArray(buf, used), backend="reference")
+        pal, _ = plan.run(CPMArray(buf, used), backend="pallas",
+                          interpret=True)
+        np.testing.assert_array_equal(np.asarray(ref.data),
+                                      np.asarray(pal.data))
+        np.testing.assert_array_equal(np.asarray(ref.used_len),
+                                      np.asarray(pal.used_len))
+        np.testing.assert_array_equal(np.asarray(ref.used_len),
+                                      np.asarray(used + emit))
+        assert count_pallas_calls(
+            lambda a: plan.run(a, backend="pallas", interpret=True)[0].data,
+            CPMArray(buf, used)) == 1
+
+    def test_jit_trace_time_recording(self):
+        @jax.jit
+        def traced(arr, vals):
+            with record() as p:
+                arr.insert(3, vals).truncate(10)
+            out, _ = schedule(p).run(arr, backend="pallas", interpret=True)
+            return out.data, out.used_len
+
+        d, ul = traced(cpm_array(jnp.arange(16), 8), jnp.array([70, 71]))
+        want = cpm_array(jnp.arange(16), 8, backend="reference") \
+            .insert(3, jnp.array([70, 71])).truncate(10)
+        np.testing.assert_array_equal(np.asarray(d), np.asarray(want.data))
+        assert int(ul) == int(want.used_len)
+
+
+# ---------------------------------------------------------------------------
+# executors: reference oracle, mesh mapping, boundary fallbacks
+# ---------------------------------------------------------------------------
+
+class TestExecutors:
+    def test_reference_run_equals_recorded_eager(self):
+        data = int_data(6, 80)
+        dev = cpm_array(data, 64)
+        with record() as prog:
+            d = dev.delete(5, 4)
+            rec_flags = d.compare(3, "lt")
+            rec_sum = d.super_sum()
+        final, outs = schedule(prog).run(cpm_array(data, 64),
+                                         backend="reference")
+        np.testing.assert_array_equal(np.asarray(final.data),
+                                      np.asarray(d.data))
+        np.testing.assert_array_equal(np.asarray(outs[1]),
+                                      np.asarray(rec_flags))
+        assert int(outs[2]) == int(rec_sum)
+
+    def test_mesh_executor_matches_reference(self):
+        """Mesh maps table-supported ops over shards, falls back to
+        reference for the rest — same values either way (1-device mesh)."""
+        data = int_data(7, 64)
+        dev = cpm_array(data, 48)
+        with record() as prog:
+            dev.compare(4, "lt")
+            dev.section_sum()
+            dev.histogram(jnp.array([0, 3, 6, 9]))   # mesh-unsupported
+            dev.super_limit("max")
+        plan = schedule(prog)
+        _, ref = plan.run(cpm_array(data, 48), backend="reference")
+        _, mesh = plan.run(cpm_array(data, 48), backend="mesh")
+        for r, m in zip(ref, mesh):
+            np.testing.assert_array_equal(np.asarray(r), np.asarray(m))
+
+    def test_boundary_ops_run_on_pallas_where_supported(self):
+        data = int_data(8, 64)
+        dev = cpm_array(data, 64)
+        with record() as prog:
+            dev.histogram(jnp.array([0, 3, 6, 9]))
+            dev.sort()
+        plan = schedule(prog)
+        arr = cpm_array(data, 64)
+        _, outs = plan.run(arr, backend="pallas", interpret=True)
+        _, ref = plan.run(arr, backend="reference")
+        np.testing.assert_array_equal(np.asarray(outs[0]),
+                                      np.asarray(ref[0]))
+
+    def test_compact_boundary_reference_only(self):
+        data = jnp.array([5, 1, 8, 2, 9, 3, 0, 0])
+        dev = cpm_array(data, 6)
+        with record() as prog:
+            flags = dev.compare(4, "ge")
+            dev.compact(flags, fill=-1)
+        plan = schedule(prog)
+        assert [g.kind for g in plan.groups] == ["fused", "boundary"]
+        for backend in ("reference", "pallas"):
+            final, _ = plan.run(cpm_array(data, 6), backend=backend,
+                                interpret=True)
+            np.testing.assert_array_equal(np.asarray(final.data)[:3],
+                                          [5, 8, 9])
+            assert int(final.used_len) == 3
+
+    def test_apply_instruction_falls_back_when_unsupported(self):
+        from repro.cpm.program.ir import Instruction
+        arr = cpm_array(jnp.arange(8.0), 8)
+        out = apply_instruction(arr, Instruction("sort", {"steps": None,
+                                                          "fill": 0}),
+                                backend="mesh")   # mesh has no sort: reference
+        np.testing.assert_array_equal(np.asarray(out.data),
+                                      np.sort(np.arange(8.0)))
+
+
+# ---------------------------------------------------------------------------
+# the whole-program cycle-cost model vs jaxpr-measured trips
+# ---------------------------------------------------------------------------
+
+class TestCostModel:
+    def test_steps_report_extends_to_programs(self):
+        n = 4096
+        dev = cpm_array(jnp.zeros(n, jnp.int32))
+        with record() as prog:
+            d = dev.insert(3, jnp.array([1, 2]))
+            d.substring_match(jnp.arange(8))
+            d.histogram(jnp.linspace(0, 9, 9).astype(jnp.int32))
+            d.section_sum()
+        report = prog.steps_report(n)
+        assert report["0:insert"] == 2
+        assert report["1:substring_match"] == 8
+        assert report["2:histogram"] == 9      # M + 1 with M = 8 bins
+        assert report["3:section_sum"] == cpm.op_steps("section_sum", n=n)
+        assert report["total"] == sum(v for k, v in report.items()
+                                      if k != "total")
+        assert program_steps(prog, n) == report["total"]
+
+    @pytest.mark.parametrize("n", [64, 1000, 4096])
+    def test_scan_structured_matches_measured_trips(self, n):
+        """The registered formulas ARE the reference lowering's trip counts
+        (scan-structured ops), program-wide — PR-3's per-op assertion
+        lifted to whole programs."""
+        data = int_data(9, n)
+        dev = cpm_array(data, n - 3)
+        with record() as prog:
+            dev.substring_match(data[:5])
+            dev.template_match(jnp.asarray(data[2:9], jnp.float32))
+            dev.super_sum()
+            dev.compare(3, "lt")               # loop-free: contributes 0
+            dev.super_limit("min")
+        plan = schedule(prog)
+        measured = scan_trip_count(
+            lambda a: plan.run(a, backend="reference")[1],
+            cpm_array(data, n - 3))
+        assert measured == scan_structured_steps(prog, n)
+
+    def test_predicted_steps_obey_paper_bounds(self):
+        with record() as prog:
+            cpm_array(jnp.zeros(4096)).super_sum()
+        # op_steps inside is bound-checked; a violating section raises
+        assert program_steps(prog, 4096) <= 2 * int(np.log2(4096)) + 1
+        import repro.cpm.program.scheduler as S
+        bad = cpm.CPMProgram().append("section_sum", section=4096)
+        with pytest.raises(AssertionError):
+            S.program_steps(bad, 4096)
+
+
+# ---------------------------------------------------------------------------
+# the serving hot path: verify -> truncate -> insert as one fused launch
+# ---------------------------------------------------------------------------
+
+class TestServingPathFusion:
+    """CI fusion-smoke target: the recorded serving-path program under
+    interpret=True — fused group count + single-launch invariant."""
+
+    def _round(self):
+        buf = jnp.zeros((4, 12), jnp.int32).at[:, :6].set(
+            jnp.arange(24).reshape(4, 6))
+        used = jnp.array([6, 6, 6, 6], jnp.int32)
+        preds = jnp.arange(100, 112, dtype=jnp.int32).reshape(4, 3)
+        emit = jnp.array([3, 1, 2, 0], jnp.int32)
+        return buf, used, preds, emit
+
+    def test_commit_program_is_one_fused_group(self):
+        buf, used, preds, emit = self._round()
+        _, plan = program_paths.record_commit_program(buf, used, preds, emit)
+        assert len(plan.groups) == 1
+        assert plan.groups[0].kind == "fused"
+        assert [i.op for i in plan.program] == ["insert", "truncate"]
+
+    def test_commit_single_pallas_launch(self):
+        buf, used, preds, emit = self._round()
+
+        def run(buf, used, preds, emit):
+            return program_paths.commit_tokens(buf, used, preds, emit,
+                                               backend="pallas",
+                                               interpret=True)
+
+        assert count_pallas_calls(run, buf, used, preds, emit) == 1
+
+    def test_commit_backends_bit_identical(self):
+        buf, used, preds, emit = self._round()
+        rb, ru = program_paths.commit_tokens(buf, used, preds, emit,
+                                             backend="reference")
+        pb, pu = program_paths.commit_tokens(buf, used, preds, emit,
+                                             backend="pallas",
+                                             interpret=True)
+        np.testing.assert_array_equal(np.asarray(rb), np.asarray(pb))
+        np.testing.assert_array_equal(np.asarray(ru), np.asarray(pu))
+        np.testing.assert_array_equal(np.asarray(ru), np.asarray(used + emit))
+        # accepted prefixes are the predictions, live region only
+        for r in range(4):
+            np.testing.assert_array_equal(
+                np.asarray(rb)[r, 6:6 + int(emit[r])],
+                np.asarray(preds)[r, :int(emit[r])])
+
+    def test_engine_spec_decode_matches_with_pallas_commit(self):
+        """The engine produces identical tokens whether the commit program
+        runs on the reference or the pallas (interpret) backend."""
+        from repro.configs import all_configs
+        from repro.models import lm
+        from repro.serve import Engine, GenConfig
+
+        cfg = all_configs()["granite-8b"].smoke()
+        params = lm.init_params(cfg, jax.random.PRNGKey(0))
+        period = jnp.arange(5, dtype=jnp.int32) + 3
+        batch = {"tokens": jnp.tile(period[None], (2, 4))}
+        gen = GenConfig(max_new_tokens=8, ngram_spec=3)
+        outs = {}
+        for backend in ("reference", "pallas"):
+            eng = Engine(cfg, params, max_len=64, cpm_backend=backend,
+                         cpm_interpret=True if backend == "pallas" else None)
+            toks, stats = eng.generate(batch, gen)
+            outs[backend] = (np.asarray(toks), stats)
+        np.testing.assert_array_equal(outs["reference"][0],
+                                      outs["pallas"][0])
+        assert outs["reference"][1] == outs["pallas"][1]
