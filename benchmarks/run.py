@@ -458,6 +458,122 @@ def bench_lm_smoke():
     row("LM_decode_step_smoke_b8", us, f"tok_per_s={8 / (us / 1e6):.0f}")
 
 
+def bench_serve_pool():
+    """Continuous batching (paged CPM session pool) vs the static-batch
+    engine under a Poisson arrival trace.
+
+    Requests have heterogeneous budgets, so a static batch pins every
+    row's pages until its slowest row finishes; the pool retires finished
+    rows mid-flight and admits waiting sessions into the freed pages.  At
+    >= 2x request oversubscription the pool must win on BOTH occupancy
+    and tokens/s (asserted — the PR-5 acceptance criterion), while
+    staying token-identical to solo generation (asserted on one session).
+    """
+    import dataclasses
+
+    from repro.configs import all_configs
+    from repro.models import lm
+    from repro.serve import Engine, GenConfig
+
+    # bigger-than-smoke model: the decode step must cost enough that slot
+    # occupancy (not host dispatch) decides throughput, as it does at
+    # production scale
+    cfg = dataclasses.replace(all_configs()["granite-8b"].smoke(),
+                              d_model=256, n_layers=4, d_ff=512,
+                              head_dim=64)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    slots, s, n_req, chunk = 4, 12, 12, 4
+    # heterogeneous budgets: every static batch contains one straggler that
+    # pins the batch's pages ~14x longer than its short rows need
+    budgets = [58 if i % 4 == 0 else 4 for i in range(n_req)]
+    total_tokens = sum(budgets)
+    rng = np.random.RandomState(0)
+    arrive = np.cumsum(rng.poisson(0.5, n_req))          # ~2 arrivals/step
+    arrive[0] = 0
+    prompts = [jax.random.randint(jax.random.PRNGKey(100 + i), (s,), 0,
+                                  cfg.vocab_size) for i in range(n_req)]
+    engine = Engine(cfg, params, max_len=s + max(budgets) + 1)
+
+    def run_static():
+        """Batches of ``slots`` in arrival order, each run to completion at
+        the batch's max budget (the fixed-batch engine's only option)."""
+        emitted = steps = 0
+        for i in range(0, n_req, slots):
+            bp = jnp.stack(prompts[i:i + slots])
+            mx = max(budgets[i:i + slots])
+            out, _ = engine.generate({"tokens": bp},
+                                     GenConfig(max_new_tokens=mx))
+            jax.block_until_ready(out)     # the dispatch is async; a
+            # decode-step occupancy accounting (prefill emits each row's
+            # first token, so a batch decodes mx - 1 steps)
+            emitted += sum(b - 1 for b in budgets[i:i + slots])
+            steps += mx - 1
+        return emitted, steps
+
+    def run_pool():
+        pool = engine.session_pool(slots=slots, chunk=chunk)
+        i = 0
+        peak_backlog = 0
+        while i < n_req or not pool.table.all_done():
+            while i < n_req and (arrive[i] <= pool.decode_steps
+                                 or pool.table.all_done()):
+                pool.submit(prompts[i], budgets[i])
+                i += 1
+            outstanding = (pool.table.waiting_count()
+                           + pool.table.active_count())
+            peak_backlog = max(peak_backlog, outstanding)
+            pool.step()
+        return pool, peak_backlog
+
+    # warm every compile path (prefill shapes, scan, pool step, commits)
+    run_static()
+    warm_pool, _ = run_pool()
+
+    # token identity spot-check: pooled output == solo static generation
+    solo, _ = engine.generate({"tokens": prompts[1][None]},
+                              GenConfig(max_new_tokens=budgets[1]))
+    np.testing.assert_array_equal(warm_pool.table.get(1).tokens,
+                                  np.asarray(solo[0]))
+
+    # wall-clock comparison; one retry absorbs a noisy-neighbor hiccup on
+    # shared CI runners (the occupancy comparison below is deterministic
+    # step-count math and needs none)
+    for attempt in range(2):
+        t0 = time.perf_counter()
+        emitted, static_steps = run_static()
+        static_s = time.perf_counter() - t0
+        static_tps = total_tokens / static_s
+        static_occ = emitted / (static_steps * slots)
+
+        t0 = time.perf_counter()
+        pool, peak_backlog = run_pool()
+        pool_s = time.perf_counter() - t0
+        pool_tps = total_tokens / pool_s
+        stats = pool.stats()
+        oversub = peak_backlog / slots
+        if pool_tps > static_tps:
+            break
+        print(f"# serve_pool attempt {attempt}: pool {pool_tps:.1f} <= "
+              f"static {static_tps:.1f} tok/s, retrying", file=sys.stderr)
+
+    assert stats["emitted"] == total_tokens, (stats, total_tokens)
+    assert oversub >= 2.0, f"trace reached only {oversub:.1f}x oversub"
+    assert stats["occupancy"] > static_occ, (stats["occupancy"], static_occ)
+    assert pool_tps > static_tps, (pool_tps, static_tps)
+
+    row(f"SP_static_batch_s{slots}", static_s * 1e6,
+        f"tok_per_s={static_tps:.1f};occupancy={static_occ:.2f};"
+        f"decode_steps={static_steps}")
+    row(f"SP_pool_s{slots}", pool_s * 1e6,
+        f"tok_per_s={pool_tps:.1f};occupancy={stats['occupancy']:.2f};"
+        f"decode_steps={stats['decode_steps']};oversub={oversub:.1f}x")
+    row(f"SP_pool_speedup_s{slots}", 0.0,
+        f"tps_ratio={pool_tps / static_tps:.2f}x;"
+        f"occ_ratio={stats['occupancy'] / static_occ:.2f}x;"
+        f"bank_launches={stats['bank_launches']};"
+        f"streams_packed={stats['streams_packed']}")
+
+
 def bench_engine_decode():
     """Serving-engine scenarios: scan-decode throughput and batched
     speculative decoding (tokens/sec + draft acceptance rate)."""
@@ -515,6 +631,7 @@ SCENARIOS = {
     "moe_routing": bench_moe_routing,
     "lm_smoke": bench_lm_smoke,
     "engine_decode": bench_engine_decode,
+    "serve_pool": bench_serve_pool,
 }
 
 

@@ -1,0 +1,66 @@
+"""Continuous batching end-to-end: submit -> step -> drain.
+
+A stream of requests with wildly different lengths hits a pool of four
+KV/token pages (two CPM banks).  The pool admits sessions into free pages
+mid-flight, decodes every live page in one compiled chunk per step
+(committing tokens through the MASIM-packed ``insert -> truncate`` bank
+streams), retires finished sessions, and hands their pages straight to the
+backlog — occupancy stays high where a static batch would idle behind its
+slowest row.  The demo prints a per-step occupancy strip, then verifies
+every drained output is token-identical to generating that session alone.
+
+    PYTHONPATH=src python examples/serve_continuous.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import all_configs
+from repro.models import lm
+from repro.serve import Engine, GenConfig
+
+
+def main():
+    cfg = all_configs()["granite-8b"].smoke()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    engine = Engine(cfg, params, max_len=64)
+
+    lens = [8, 12, 10, 8, 16, 9, 11, 8]
+    budgets = [4, 18, 3, 12, 2, 9, 5, 14]
+    prompts = [jax.random.randint(jax.random.PRNGKey(10 + i), (s,), 0,
+                                  cfg.vocab_size)
+               for i, s in enumerate(lens)]
+
+    pool = engine.session_pool(slots=4, n_banks=2)
+    sids = [pool.submit(p, b) for p, b in zip(prompts, budgets)]
+    print(f"{len(sids)} sessions over {pool.slots} pages "
+          f"({pool.n_banks} banks) — "
+          f"{pool.table.waiting_count()} waiting\n")
+
+    print("step  occupancy           active  waiting  emitted")
+    while not pool.table.all_done():
+        st = pool.step()
+        strip = "".join("#" if pool.live[i] else "." for i in
+                        range(pool.slots))
+        print(f"{st['decode_steps']:4d}  [{strip}] "
+              f"{st['occupancy']:.2f}      {st['active']:6d}  "
+              f"{st['waiting']:7d}  {st['emitted']:7d}")
+
+    outs = pool.drain()
+    stats = pool.stats()
+    print(f"\ndrained: {stats['emitted']} tokens in "
+          f"{stats['decode_steps']} decode steps, "
+          f"occupancy {stats['occupancy']:.2f}, "
+          f"{stats['streams_packed']} session streams packed into "
+          f"{stats['bank_launches']} bank launches")
+
+    for sid, p, b in zip(sids, prompts, budgets):
+        solo, _ = engine.generate({"tokens": p[None]},
+                                  GenConfig(max_new_tokens=b))
+        np.testing.assert_array_equal(outs[sid], np.asarray(solo[0]))
+    print("every session token-identical to its solo static generation")
+
+
+if __name__ == "__main__":
+    main()

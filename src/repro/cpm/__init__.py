@@ -19,9 +19,14 @@ Public API:
     :class:`CPMProgram`, :func:`schedule` partitions the stream into fusion
     groups, and each fused group runs as ONE Pallas mega-kernel on the
     pallas backend (reference replays unfused, mesh maps over shards).
+  * ``pool`` — paged multi-tenant banks: fixed-shape page arrays
+    (``CPMBank``), the self-managing page-table allocator whose free-list/
+    victim search is itself CPM compare/limit ops (``SlotAllocator``), and
+    the MASIM-style ``MultiBankScheduler`` packing per-session streams
+    into one batched fused launch per bank.
 """
 
-from . import backends, collectives, optable, program, reference, semantics
+from . import backends, collectives, optable, pool, program, reference, semantics
 from .array import CPMArray, cpm_array
 from .backends import Backend, get_backend
 from .optable import FAMILIES, OP_TABLE, fusable_ops, op_steps, ops_for_backend

@@ -54,6 +54,7 @@ class Backend(Protocol):
     def sort(self, x, steps=None): ...
     def template_match(self, data, template): ...
     def stencil(self, x, taps, wrap: bool = False): ...
+    def compact(self, x, keep, fill=0): ...              # (out, new_len)
 
     def fused_stream(self, x, used_len, instrs, operands):
         """Execute a fused instruction group (``repro.cpm.program``) in one

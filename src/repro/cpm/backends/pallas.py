@@ -91,6 +91,14 @@ class PallasBackend(_TableBacked):
         return un(K.stencil(x2, tuple(float(t) for t in taps), wrap=wrap,
                             interpret=self.interpret))
 
+    def compact(self, x, keep, fill=0):
+        lead = x.shape[:-1]
+        x2, un = _rows(x)
+        k2 = jnp.broadcast_to(keep, x.shape).reshape(x2.shape)
+        out, new_len = K.compact(x2, k2, fill, interpret=self.interpret)
+        return un(out), (new_len.reshape(lead) if lead
+                         else new_len.reshape(()))
+
     def fused_stream(self, x, used_len, instrs, operands):
         """One ``pallas_call`` for a whole fused instruction group: the row
         block and its §4.2 length register stay resident in VMEM across

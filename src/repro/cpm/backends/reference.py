@@ -58,3 +58,6 @@ class ReferenceBackend(_TableBacked):
 
     def stencil(self, x, taps, wrap=False):
         return R.computable.stencil_1d(x, taps, wrap=wrap)
+
+    def compact(self, x, keep, fill=0):
+        return R.movable.compact(x, keep, fill)

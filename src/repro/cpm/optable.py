@@ -104,7 +104,7 @@ OP_TABLE: dict[str, OpSpec] = {spec.name: spec for spec in [
     OpSpec("compact", "move", "§4.2",      # stable pack of kept items: the
            steps=lambda n, **_: _clog2(n),     # TPU-native cumsum-gather is
            bound=lambda n, **_: _clog2(n) + 1, # log-depth (paper: per-object
-           backends=("reference",)),           # range moves)
+           backends=_RP),                      # range moves)
     # -- search (§5) --------------------------------------------------------
     OpSpec("substring_match", "search", "§5.1",
            steps=lambda m, **_: m, bound=lambda m, **_: m, backends=_RP,

@@ -1,0 +1,26 @@
+"""repro.cpm.pool — paged multi-tenant CPM banks.
+
+The pool layer turns single devices into a *facility*: fixed-shape banks of
+pages (:class:`CPMBank`), a page-table allocator whose free-list and victim
+searches are themselves CPM ops on a metadata device
+(:class:`SlotAllocator` — the memory managing the memory, §4.2 +
+arXiv:2203.00662), and a MASIM-style scheduler
+(:class:`MultiBankScheduler`, arXiv:2412.02218) that packs per-session
+instruction streams into ONE batched fused launch per bank.  Host-side
+session lifecycle lives in :class:`SessionTable`.
+
+The serving integration — continuous batching over pooled KV pages — is
+``repro.serve.session_pool``, built on these four pieces.
+"""
+
+from .allocator import FREE, USED, OracleAllocator, SlotAllocator
+from .bank import CPMBank
+from .scheduler import MultiBankScheduler
+from .sessions import ACTIVE, DONE, WAITING, Session, SessionTable
+
+__all__ = [
+    "CPMBank",
+    "SlotAllocator", "OracleAllocator", "FREE", "USED",
+    "MultiBankScheduler",
+    "SessionTable", "Session", "WAITING", "ACTIVE", "DONE",
+]

@@ -1,0 +1,169 @@
+"""The self-managing page-table allocator: CPM bookkeeping for CPM banks.
+
+The paper's §4.2 pitch is a memory that manages itself; the associative-
+processor literature (arXiv:2203.00662) pushes the same idea one level up —
+use the memory's *own* content-addressable ops for its bookkeeping.  This
+allocator does exactly that: slot metadata (state code, last-use tick) lives
+in ``CPMArray`` devices, and every query is a paper op —
+
+  * free-slot lookup   = §6.1 broadcast ``compare(FREE)`` + Rule-6
+                         priority-encoder drain (``enumerate_matches``);
+  * LRU victim lookup  = §7.5 ``global_limit("min")`` over the masked tick
+                         file, then one more compare to address the holder;
+  * occupancy counters = §6 compare + Rule-6 ``count``;
+  * reclamation        = §4.2 ``compact`` packing the used slot ids.
+
+Writes (alloc/free/touch) are single-address broadcast writes — activate one
+slot, write one word — mutated through ``.at[slot].set`` on the metadata
+buffers.  The host only ever sees slot *numbers*; the search work happens in
+the memory.  A pure-Python oracle with identical semantics lives in
+:class:`OracleAllocator` for the property-test suite.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..array import CPMArray
+from ..reference import pe_array
+
+FREE = 0
+USED = 1
+
+_NO_TICK = jnp.iinfo(jnp.int32).max
+
+
+class SlotAllocator:
+    """Page-table allocator over ``n_slots`` pages of one pool.
+
+    ``backend``/``interpret`` route the metadata queries like any other
+    ``CPMArray`` (reference by default; pallas for kernel-resident
+    metadata).  All methods are host-synchronous by design — allocation is
+    admission control, a host decision — but each decision costs O(1)
+    concurrent CPM steps, not a host-side scan over slots.
+    """
+
+    def __init__(self, n_slots: int, backend: str = "reference",
+                 interpret: bool | None = None):
+        if n_slots <= 0:
+            raise ValueError(f"n_slots must be positive, got {n_slots}")
+        self.n_slots = n_slots
+        self._backend = backend
+        self._interpret = interpret
+        self._state = jnp.full((n_slots,), FREE, jnp.int32)
+        self._tick = jnp.zeros((n_slots,), jnp.int32)
+        self._clock = 0
+
+    # -- CPMArray views of the metadata file --------------------------------
+    def _dev(self, data) -> CPMArray:
+        return CPMArray(data, jnp.asarray(self.n_slots, jnp.int32),
+                        self._backend, self._interpret)
+
+    # -- queries (all CPM ops) ----------------------------------------------
+    def free_count(self) -> int:
+        return int(self._dev(self._state).count(FREE))
+
+    def used_count(self) -> int:
+        return int(self._dev(self._state).count(USED))
+
+    def is_free(self, slot: int) -> bool:
+        self._check(slot)
+        return int(self._state[slot]) == FREE
+
+    def alloc(self) -> int | None:
+        """Claim the lowest free page, or ``None`` when the pool is full.
+
+        One §6.1 broadcast compare asserts every free slot's match line
+        concurrently; the Rule-6 drain materializes the lowest address."""
+        flags = self._dev(self._state).compare(FREE)
+        addrs, valid = pe_array.enumerate_matches(flags, max_out=1)
+        if not bool(valid[0]):
+            return None
+        slot = int(addrs[0])
+        self._state = self._state.at[slot].set(USED)
+        self.touch(slot)
+        return slot
+
+    def victim(self) -> int | None:
+        """The least-recently-used *used* page (LRU eviction candidate).
+
+        §7.5 ``global_limit("min")`` over the tick file (free slots masked
+        to the identity), then one compare to address the minimum's
+        holder.  ``None`` when nothing is allocated."""
+        used = self._dev(self._state).compare(USED)
+        if not bool(pe_array.any_match(used)):
+            return None
+        masked = jnp.where(used, self._tick, _NO_TICK)
+        oldest = self._dev(masked).global_limit("min")
+        hits = self._dev(masked).compare(oldest)
+        addrs, _ = pe_array.enumerate_matches(hits & used, max_out=1)
+        return int(addrs[0])
+
+    def used_slots(self) -> list[int]:
+        """Used page ids packed to the front — the §4.2 ``compact`` of the
+        slot-id file under the used flags (the reclamation/packing query
+        the serving pool gathers live rows with)."""
+        used = self._dev(self._state).compare(USED)
+        ids = self._dev(jnp.arange(self.n_slots, dtype=jnp.int32))
+        packed = ids.compact(used, fill=-1)
+        k = int(packed.used_len)
+        return [int(v) for v in np.asarray(packed.data[:k])]
+
+    # -- transitions (single-address broadcast writes) ----------------------
+    def free(self, slot: int) -> None:
+        self._check(slot)
+        if int(self._state[slot]) != USED:
+            raise ValueError(f"double free of slot {slot}")
+        self._state = self._state.at[slot].set(FREE)
+
+    def touch(self, slot: int) -> None:
+        """Stamp ``slot`` as most recently used (LRU bookkeeping)."""
+        self._check(slot)
+        self._clock += 1
+        self._tick = self._tick.at[slot].set(self._clock)
+
+    def _check(self, slot: int) -> None:
+        if not 0 <= slot < self.n_slots:
+            raise IndexError(f"slot {slot} out of range [0, {self.n_slots})")
+
+    # -- test hooks ---------------------------------------------------------
+    def state_vector(self) -> np.ndarray:
+        return np.asarray(self._state)
+
+
+class OracleAllocator:
+    """Naive host-side allocator with identical semantics — the property
+    tests' differential oracle (no CPM ops, just Python)."""
+
+    def __init__(self, n_slots: int):
+        self.n_slots = n_slots
+        self.used: dict[int, int] = {}          # slot -> last-use tick
+        self._clock = 0
+
+    def alloc(self) -> int | None:
+        for s in range(self.n_slots):
+            if s not in self.used:
+                self._clock += 1
+                self.used[s] = self._clock
+                return s
+        return None
+
+    def free(self, slot: int) -> None:
+        del self.used[slot]
+
+    def touch(self, slot: int) -> None:
+        self._clock += 1
+        self.used[slot] = self._clock
+
+    def victim(self) -> int | None:
+        if not self.used:
+            return None
+        oldest = min(self.used.values())
+        return min(s for s, t in self.used.items() if t == oldest)
+
+    def free_count(self) -> int:
+        return self.n_slots - len(self.used)
+
+    def used_slots(self) -> list[int]:
+        return sorted(self.used)

@@ -1,0 +1,113 @@
+"""`CPMBank` — one fixed-shape array of CPM pages.
+
+A bank is the pool's unit of physical residency: a batched ``(slots, width)``
+:class:`~repro.cpm.array.CPMArray` whose rows are *pages* handed out by the
+allocator and whose per-row ``used_len`` registers are the §4.2 "memory
+managing itself" length state.  The bank owns the buffers; callers get
+transient ``CPMArray`` views (:meth:`device`) to run programs against and
+write the result back with :meth:`update` — the bank never copies rows to
+run an instruction stream, only to move pages in or out.
+
+Page movement is the one place rows do travel, and it goes through the
+paged-row kernels (`repro.kernels.cpm_kernels.gather_rows` /
+``scatter_rows``) on the pallas backend — dynamic page indices ride in
+scalar-prefetch so each page is ONE (1, width) DMA — with a plain jnp
+take/scatter realization on reference, differential-tested identical.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..array import CPMArray
+
+
+class CPMBank:
+    """A ``(slots, width)`` bank of pages with per-page length registers."""
+
+    def __init__(self, slots: int, width: int, dtype=jnp.int32,
+                 backend: str = "reference", interpret: bool | None = None):
+        if slots <= 0 or width <= 0:
+            raise ValueError(f"bank needs slots>0, width>0; got "
+                             f"({slots}, {width})")
+        self.slots = slots
+        self.width = width
+        self.backend = backend
+        self.interpret = interpret
+        self.data = jnp.zeros((slots, width), dtype)
+        self.lens = jnp.zeros((slots,), jnp.int32)
+
+    @property
+    def dtype(self):
+        return self.data.dtype
+
+    # -- CPMArray views -----------------------------------------------------
+    def device(self) -> CPMArray:
+        """The bank as a batched CPM device (for program execution)."""
+        return CPMArray(self.data, self.lens, self.backend, self.interpret)
+
+    def update(self, arr: CPMArray) -> None:
+        """Adopt the state a program run left behind."""
+        if arr.data.shape != (self.slots, self.width):
+            raise ValueError(f"bank is {(self.slots, self.width)}, "
+                             f"got {arr.data.shape}")
+        self.data = arr.data
+        self.lens = jnp.broadcast_to(jnp.asarray(arr.used_len, jnp.int32),
+                                     (self.slots,))
+
+    # -- single-page access ---------------------------------------------------
+    def write_row(self, slot: int, values, length=None) -> None:
+        """Place a page: ``values`` (padded to ``width``) becomes row
+        ``slot``, its length register becomes ``length`` (default: the
+        value count).  The whole row is replaced — stale content from the
+        page's previous tenant cannot leak past the new ``used_len``."""
+        values = jnp.asarray(values, self.dtype).reshape(-1)
+        k = values.shape[0]
+        if k > self.width:
+            raise ValueError(f"row of {k} items exceeds bank width "
+                             f"{self.width}")
+        row = jnp.zeros((self.width,), self.dtype).at[:k].set(values)
+        self.scatter(jnp.asarray([slot], jnp.int32), row[None],
+                     jnp.asarray([k if length is None else length],
+                                 jnp.int32))
+
+    def read_row(self, slot: int) -> tuple[np.ndarray, int]:
+        """One page out (host copy): ``(row (width,), used length)``."""
+        row = np.asarray(self.gather(jnp.asarray([slot], jnp.int32))[0])
+        return row, int(self.lens[slot])
+
+    def clear_row(self, slot: int) -> None:
+        self.write_row(slot, jnp.zeros((0,), self.dtype), 0)
+
+    # -- paged movement -------------------------------------------------------
+    def _pallas_interpret(self) -> bool:
+        """The canonical interpret-default policy, resolved once by
+        ``PallasBackend`` (compiled on TPU, interpreter elsewhere)."""
+        from .. import backends
+        return backends.get_backend("pallas",
+                                    interpret=self.interpret).interpret
+
+    def gather(self, idx) -> jax.Array:
+        """Rows at ``idx`` (K,) -> (K, width), via the scalar-prefetch DMA
+        kernel on pallas, jnp take on reference."""
+        idx = jnp.asarray(idx, jnp.int32)
+        if self.backend == "pallas":
+            from repro.kernels import cpm_kernels as K
+            return K.gather_rows(self.data, idx,
+                                 interpret=self._pallas_interpret())
+        return jnp.take(self.data, idx, axis=0)
+
+    def scatter(self, idx, rows, lens) -> None:
+        """Write ``rows`` (K, width) into pages ``idx`` (K unique slots) and
+        set their length registers to ``lens`` (K,)."""
+        idx = jnp.asarray(idx, jnp.int32)
+        rows = jnp.asarray(rows, self.dtype)
+        if self.backend == "pallas":
+            from repro.kernels import cpm_kernels as K
+            self.data = K.scatter_rows(self.data, idx, rows,
+                                       interpret=self._pallas_interpret())
+        else:
+            self.data = self.data.at[idx].set(rows)
+        self.lens = self.lens.at[idx].set(jnp.asarray(lens, jnp.int32))

@@ -1,0 +1,255 @@
+"""The MASIM-style multi-bank stream packer.
+
+MASIM (arXiv:2412.02218) treats scheduling work across multiple in-memory
+SIMD arrays as its own subsystem: requests target individual arrays, the
+scheduler batches them so each array executes ONE broadcast stream.  Here
+the arrays are :class:`~repro.cpm.pool.bank.CPMBank`\\ s and the requests are
+per-session instruction streams (PR 4's ``CPMProgram`` ops with per-slot
+operands): :meth:`MultiBankScheduler.submit` queues one session's stream
+against its (bank, slot) placement, and :meth:`flush` packs every queued
+stream of a bank into one *batched* ``CPMProgram`` over the bank's
+``(slots, width)`` device — per-slot operands scattered into per-row operand
+arrays, idle rows given identity operands — and executes it once per bank.
+On the pallas backend a fusable template (e.g. the serving commit's
+``insert -> truncate``) is therefore ONE ``fused_stream`` mega-kernel launch
+per bank per flush, regardless of how many sessions committed.
+
+Streams packed into one flush must share a *template* — the same op
+sequence with the same static operands (SPMD across slots, exactly MASIM's
+same-kernel batching constraint); mixed templates raise.  Idle-row identity
+operands exist for ``insert`` (append at the row's own tail — writes land
+beyond ``used_len``), ``truncate`` (keep the row's current length) and
+``shift`` (empty range); templates whose trailing ``truncate`` restores
+idle rows' lengths (as the commit template does) leave non-participating
+pages bit-untouched within their live region.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..array import CPMArray
+from ..program import CPMProgram, schedule
+from .bank import CPMBank
+
+#: operand names treated as dynamic (per-slot) per op; everything else in an
+#: instruction is static and must agree across the packed streams
+_DYNAMIC: dict[str, dict[str, int]] = {
+    "insert": {"pos": 0, "values": 1},
+    "truncate": {"new_len": 0},
+    "shift": {"start": 0, "end": 0},
+    "compare": {"datum": 0},
+    "delete": {"pos": 0},
+}
+
+#: ops with a per-row identity default for rows that did not submit
+_HAS_IDENTITY = frozenset({"insert", "truncate", "shift"})
+
+
+@dataclasses.dataclass(frozen=True)
+class _Pending:
+    slot: int
+    ops: tuple[tuple[str, dict[str, Any]], ...]
+
+    def template(self):
+        """(op, sorted static operand items) per instruction — the SPMD
+        signature two streams must share to pack into one launch.  Static
+        operands must be hashable primitives (per-slot values belong in the
+        op's dynamic operands, ``_DYNAMIC``)."""
+        sig = []
+        for op, operands in self.ops:
+            dyn = _DYNAMIC.get(op, {})
+            statics = []
+            for k, v in operands.items():
+                if k in dyn:
+                    continue
+                if not isinstance(v, (int, float, str, bool, type(None),
+                                      tuple)):
+                    raise TypeError(
+                        f"{op}.{k}: static operands must be primitives, "
+                        f"got {type(v).__name__} (per-slot values go in "
+                        f"the dynamic operands: {sorted(dyn)})")
+                statics.append((k, v))
+            sig.append((op, tuple(sorted(statics))))
+        return tuple(sig)
+
+
+class MultiBankScheduler:
+    """Packs per-session streams into one batched launch per bank."""
+
+    def __init__(self, banks: list[CPMBank]):
+        self.banks = banks
+        self._queues: list[list[_Pending]] = [[] for _ in banks]
+        self._jitted: dict = {}
+        self.flushes = 0
+        self.streams_packed = 0
+        self.bank_launches = 0
+
+    def submit(self, bank: int, slot: int, ops) -> None:
+        """Queue one session's instruction stream for ``(bank, slot)``.
+
+        ``ops``: sequence of ``(op_name, operand_dict)``; per-slot operand
+        values may be traced/device scalars or ``(k,)`` vectors."""
+        b = self.banks[bank]
+        if not 0 <= slot < b.slots:
+            raise IndexError(f"slot {slot} out of range for bank {bank} "
+                             f"({b.slots} slots)")
+        self._queues[bank].append(
+            _Pending(slot, tuple((op, dict(d)) for op, d in ops)))
+
+    def pending(self) -> int:
+        return sum(len(q) for q in self._queues)
+
+    def flush(self) -> dict:
+        """Execute every queued stream: one batched program run per bank.
+
+        Returns ``{"banks": touched, "streams": packed}``; bank state is
+        updated in place."""
+        touched = streams = 0
+        for bank_id, queue in enumerate(self._queues):
+            if not queue:
+                continue
+            self._run_bank(bank_id, queue)
+            touched += 1
+            streams += len(queue)
+            queue.clear()
+        self.flushes += 1
+        self.streams_packed += streams
+        self.bank_launches += touched
+        return {"banks": touched, "streams": streams}
+
+    # -- one bank: scatter operands, run once -------------------------------
+    def _run_bank(self, bank_id: int, queue: list[_Pending]) -> None:
+        bank = self.banks[bank_id]
+        template = queue[0].template()
+        for p in queue[1:]:
+            if p.template() != template:
+                raise ValueError(
+                    f"bank {bank_id}: streams with different templates "
+                    f"cannot pack into one launch ({p.template()} vs "
+                    f"{template}); flush between template changes")
+        slots_seen = set()
+        for p in queue:
+            if p.slot in slots_seen:
+                raise ValueError(f"bank {bank_id}: two streams target slot "
+                                 f"{p.slot} in one flush")
+            slots_seen.add(p.slot)
+
+        idx = jnp.asarray([p.slot for p in queue], jnp.int32)
+        full = len(queue) == bank.slots
+        dyn_ops: list[dict[str, jax.Array]] = []
+        for i, (op, _) in enumerate(template):
+            dyn_names = _DYNAMIC.get(op, {})
+            batched: dict[str, jax.Array] = {}
+            for name, rank in dyn_names.items():
+                vals = [p.ops[i][1].get(name) for p in queue]
+                if all(v is None for v in vals):
+                    continue
+                if any(v is None for v in vals):
+                    raise ValueError(
+                        f"bank {bank_id}: {op}.{name} is bound by only "
+                        f"some of the packed streams; every stream in a "
+                        f"flush must supply the same dynamic operands")
+                shape = (-1,) if rank else ()
+                stacked = jnp.stack([jnp.asarray(v).reshape(shape)
+                                     for v in vals])      # (K,) or (K, k)
+                if full:                 # every row participates: the
+                    base = jnp.zeros(    # scatter below covers all rows,
+                        (bank.slots,) + stacked.shape[1:],   # base values
+                        stacked.dtype)                       # never read
+                else:
+                    base = self._identity_operand(bank, op, name, stacked)
+                batched[name] = base.at[idx].set(stacked.astype(base.dtype))
+            dyn_ops.append(batched)
+
+        run = self._compiled(bank_id, template,
+                             tuple(tuple(sorted(d)) for d in dyn_ops))
+        data, lens = run(bank.data, bank.lens, dyn_ops)
+        bank.update(CPMArray(data, lens, bank.backend, bank.interpret))
+
+    def _identity_operand(self, bank: CPMBank, op: str, name: str,
+                          stacked) -> jax.Array:
+        """Per-row default that makes ``op`` a no-op within idle rows' live
+        regions (see module docstring)."""
+        if op not in _HAS_IDENTITY:
+            raise ValueError(
+                f"op {op!r} has no idle-row identity operand; submit a "
+                f"stream for every slot of the bank or split the flush")
+        r = bank.slots
+        if op == "insert":
+            if name == "pos":
+                return bank.lens                    # append into dead space
+            return jnp.zeros((r, stacked.shape[-1]), bank.dtype)  # values
+        if op == "truncate":
+            return bank.lens                        # keep current length
+        # shift: empty [1, 0] range moves nothing
+        if name == "start":
+            return jnp.ones((r,), jnp.int32)
+        return jnp.zeros((r,), jnp.int32)
+
+    def compiled_commit(self, bank_id: int, k: int):
+        """The serving hot path's packing, pre-collapsed: every row of the
+        bank runs the same ``insert(k tokens) -> truncate`` stream, so the
+        per-session operand scatter reduces to stacked vectors and the
+        whole flush to one pure function —
+
+            ``(data, lens, toks (slots, k), emit (slots,)) -> (data, lens)``
+
+        — appending each row's ``k`` chunk tokens at its tail and rolling
+        the length register back to ``lens + emit`` (rows with ``emit 0``
+        are bit-untouched in their live region; overshoot tokens beyond a
+        row's budget land past ``used_len`` and are never visible).  Built
+        on the same ``CPMProgram`` + fusing scheduler as :meth:`flush`
+        (ONE fused mega-kernel launch per call on a pallas bank), but with
+        no per-call Python packing, so a compiled serving step can inline
+        it.  Not jitted here — callers embed it in their own programs."""
+        bank = self.banks[bank_id]
+        return packed_commit(bank.backend, bank.interpret, bank.slots, k)
+
+    def _compiled(self, bank_id: int, template, dyn_sig):
+        """One jitted executor per (bank, template, operand-name signature):
+        rebuilds the batched program from traced operands and runs the PR-4
+        fusing scheduler against the bank device inside the jit."""
+        bank = self.banks[bank_id]
+        key = (bank_id, template, dyn_sig)
+        if key not in self._jitted:
+            ops = [op for op, _ in template]
+            stat_items = [dict(s) for _, s in template]
+
+            def run(data, lens, dyn):
+                dev = CPMArray(data, lens, bank.backend, bank.interpret)
+                prog = CPMProgram()
+                for op, st, dy in zip(ops, stat_items, dyn):
+                    prog.append(op, **st, **dy)
+                out, _ = schedule(prog).run(dev, backend=bank.backend,
+                                            interpret=bank.interpret)
+                return out.data, jnp.broadcast_to(
+                    jnp.asarray(out.used_len, jnp.int32), (bank.slots,))
+
+            self._jitted[key] = jax.jit(run)
+        return self._jitted[key]
+
+
+@functools.lru_cache(maxsize=None)
+def packed_commit(backend: str, interpret: bool | None, slots: int, k: int):
+    """Pure packed-commit builder (see
+    :meth:`MultiBankScheduler.compiled_commit`).  Parameterized by bank
+    *shape and routing* only — the returned closure holds no bank or
+    scheduler objects, so long-lived caches (an engine's compiled-program
+    table) that embed it never pin a discarded pool's device buffers."""
+    def run(data, lens, toks, emit):
+        dev = CPMArray(data, lens, backend, interpret)
+        prog = (CPMProgram()
+                .append("insert", pos=lens, values=toks)
+                .append("truncate", new_len=lens + emit))
+        out, _ = schedule(prog).run(dev, backend=backend,
+                                    interpret=interpret)
+        return out.data, jnp.broadcast_to(
+            jnp.asarray(out.used_len, jnp.int32), (slots,))
+
+    return run

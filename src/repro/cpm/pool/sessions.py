@@ -1,0 +1,107 @@
+"""Host-side session registry for the pool: lifecycle, placement, FIFO.
+
+Sessions are the pool's unit of admission: a prompt plus a token budget,
+moving ``WAITING -> ACTIVE -> DONE``.  The table is deliberately plain
+Python — placement decisions are host decisions — while everything the
+sessions *own* (token pages, KV rows, slot metadata) lives device-side in
+the banks and the allocator.  The table never touches device memory.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+WAITING = "waiting"
+ACTIVE = "active"
+DONE = "done"
+
+
+@dataclasses.dataclass
+class Session:
+    sid: int
+    prompt: Any                        # (s,) int32 tokens (device or host)
+    prompt_len: int
+    budget: int                        # max new tokens (incl. the prefill one)
+    phase: str = WAITING
+    bank: int = -1                     # placement, valid while ACTIVE
+    slot: int = -1                     # global slot id
+    emitted: int = 0
+    tokens: Any = None                 # final (s + emitted,) output when DONE
+
+    @property
+    def finished(self) -> bool:
+        return self.emitted >= self.budget
+
+
+class SessionTable:
+    """FIFO admission queue + slot-indexed lookup of active sessions."""
+
+    def __init__(self):
+        self._sessions: dict[int, Session] = {}
+        self._queue: list[int] = []               # WAITING, arrival order
+        self._by_slot: dict[int, int] = {}        # global slot -> sid
+        self._next = 0
+
+    def __len__(self):
+        return len(self._sessions)
+
+    def add(self, prompt, prompt_len: int, budget: int) -> Session:
+        s = Session(self._next, prompt, prompt_len, budget)
+        self._next += 1
+        self._sessions[s.sid] = s
+        self._queue.append(s.sid)
+        return s
+
+    def get(self, sid: int) -> Session:
+        return self._sessions[sid]
+
+    def next_waiting(self) -> Session | None:
+        return self._sessions[self._queue[0]] if self._queue else None
+
+    def activate(self, sid: int, bank: int, slot: int) -> Session:
+        s = self._sessions[sid]
+        assert s.phase == WAITING and self._queue[0] == sid, \
+            f"session {sid} is not the queue head"
+        self._queue.pop(0)
+        s.phase, s.bank, s.slot = ACTIVE, bank, slot
+        self._by_slot[slot] = sid
+        return s
+
+    def at_slot(self, slot: int) -> Session | None:
+        sid = self._by_slot.get(slot)
+        return self._sessions[sid] if sid is not None else None
+
+    def finish(self, sid: int, tokens) -> Session:
+        s = self._sessions[sid]
+        if s.phase == ACTIVE:
+            del self._by_slot[s.slot]
+        elif s.phase == WAITING:                  # zero-budget fast path
+            self._queue.remove(sid)
+        s.phase, s.tokens = DONE, tokens
+        return s
+
+    def active(self) -> list[Session]:
+        return [self._sessions[sid] for sid in sorted(self._by_slot.values())]
+
+    def waiting_count(self) -> int:
+        return len(self._queue)
+
+    def active_count(self) -> int:
+        return len(self._by_slot)
+
+    def all_done(self) -> bool:
+        return not self._queue and not self._by_slot
+
+    def outputs(self) -> dict[int, Any]:
+        """Non-destructive view of every DONE session's tokens."""
+        return {sid: s.tokens for sid, s in self._sessions.items()
+                if s.phase == DONE}
+
+    def collect_finished(self) -> dict[int, Any]:
+        """Outputs of sessions finished since the last collection; the
+        collected sessions are evicted from the table, so a long-running
+        service's memory stays bounded and a later collection never
+        re-delivers an old result."""
+        done = [sid for sid, s in self._sessions.items() if s.phase == DONE]
+        return {sid: self._sessions.pop(sid).tokens for sid in done}

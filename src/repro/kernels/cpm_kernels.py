@@ -31,6 +31,15 @@ Kernels:
                           (``wrap=False`` zero-pads the row ends instead of
                           wrapping, matching the canonical `repro.cpm`
                           semantics).
+  * ``compact``         — §4.2 stable pack of flagged items: a log-depth
+                          Hillis-Steele cumsum over the keep flags followed
+                          by a log-depth per-lane lower-bound gather —
+                          ~2·log2(N) concurrent steps, bit-identical to the
+                          reference argsort pack.
+  * ``gather_rows`` / ``scatter_rows`` — paged-row movement for the bank
+                          pool (`repro.cpm.pool`): dynamic row indices ride
+                          in scalar-prefetch so each grid step DMAs exactly
+                          one (1, N) page between HBM rows and VMEM.
 
 All take ``interpret=`` so the CPU container executes the kernel bodies for
 validation; on TPU pass interpret=False.  These kernels are the ``pallas``
@@ -573,6 +582,128 @@ def stencil(x: jax.Array, taps: tuple[float, ...], *, wrap: bool = True,
         out_shape=jax.ShapeDtypeStruct((r, n), jnp.float32),
         interpret=interpret,
     )(x)
+
+
+# ---------------------------------------------------------------------------
+# §4.2 compact (stable pack, log-depth cumsum-gather)
+# ---------------------------------------------------------------------------
+
+def _compact_kernel(x_ref, k_ref, f_ref, o_ref, l_ref, *, n: int):
+    x = x_ref[...]                                   # (1, n) row
+    keep = k_ref[...]                                # (1, n) int32 0/1 flags
+    idx = jax.lax.broadcasted_iota(jnp.int32, (1, n), 1)
+    # phase 1: inclusive cumsum of the keep flags — a Hillis-Steele doubling
+    # tree, ceil(log2(n)) concurrent shift+add cycles (the paper's per-object
+    # range moves collapsed into one log-depth rank computation)
+    c = keep
+    levels = (n - 1).bit_length() if n > 1 else 0
+    for b in range(levels):
+        stride = 1 << b
+        sh = jnp.roll(c, stride, axis=-1)
+        c = c + jnp.where(idx >= stride, sh, 0)
+    new_len = c[:, n - 1:]                           # (1, 1) survivor count
+    # phase 2: src[i] = first j with c[j] >= i+1 (c is monotone, and c
+    # increments exactly at kept lanes) — a vectorized lower-bound search,
+    # one take_along_axis probe per bit, ~log2(n) more concurrent cycles
+    t = idx + 1
+    pos = jnp.zeros((1, n), jnp.int32)
+    for b in reversed(range(n.bit_length())):
+        npos = pos + (1 << b)
+        cv = jnp.take_along_axis(c, jnp.clip(npos - 1, 0, n - 1), axis=1)
+        pos = jnp.where((npos <= n) & (cv < t), npos, pos)
+    gathered = jnp.take_along_axis(x, jnp.clip(pos, 0, n - 1), axis=1)
+    o_ref[...] = jnp.where(t <= new_len, gathered, f_ref[0, 0])
+    l_ref[...] = new_len
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def compact(x: jax.Array, keep: jax.Array, fill=0, *,
+            interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    """Stable §4.2 pack of every (R, N) row: kept lanes move to the front
+    (order preserved), vacated lanes take ``fill``.  Returns
+    ``(compacted (R, N), new_len (R,))``.  ~2·log2(N) concurrent steps —
+    bit-identical to ``reference.movable.compact``."""
+    r, n = x.shape
+    fill_arr = jnp.asarray(fill, x.dtype).reshape(1, 1)
+    out, nl = pl.pallas_call(
+        functools.partial(_compact_kernel, n=n),
+        grid=(r,),
+        in_specs=[pl.BlockSpec((1, n), lambda i: (i, 0)),
+                  pl.BlockSpec((1, n), lambda i: (i, 0)),
+                  pl.BlockSpec((1, 1), lambda i: (0, 0))],
+        out_specs=[pl.BlockSpec((1, n), lambda i: (i, 0)),
+                   pl.BlockSpec((1, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((r, n), x.dtype),
+                   jax.ShapeDtypeStruct((r, 1), jnp.int32)],
+        interpret=interpret,
+    )(x, keep.astype(jnp.int32), fill_arr)
+    return out, nl[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# paged-row movement (repro.cpm.pool banks)
+# ---------------------------------------------------------------------------
+
+def _copy_row_kernel(idx_ref, x_ref, o_ref):
+    del idx_ref                                      # consumed by index_map
+    o_ref[...] = x_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_rows(x: jax.Array, idx: jax.Array, *,
+                interpret: bool = True) -> jax.Array:
+    """(R, N) bank x (K,) page indices -> (K, N) gathered rows.
+
+    The index vector rides in scalar-prefetch, so each grid step's BlockSpec
+    resolves to the dynamic source row before the body runs — one (1, N)
+    page DMA per output row, the paged-KV access pattern."""
+    k = idx.shape[0]
+    n = x.shape[-1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(k,),
+        in_specs=[pl.BlockSpec((1, n), lambda i, iref: (iref[i], 0))],
+        out_specs=pl.BlockSpec((1, n), lambda i, iref: (i, 0)))
+    return pl.pallas_call(
+        _copy_row_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((k, n), x.dtype),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), x)
+
+
+def _scatter_row_kernel(inv_ref, d_ref, s_ref, o_ref):
+    i = pl.program_id(0)
+    o_ref[...] = jnp.where(inv_ref[i] >= 0, s_ref[...], d_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def scatter_rows(dst: jax.Array, idx: jax.Array, src: jax.Array, *,
+                 interpret: bool = True) -> jax.Array:
+    """Write ``src`` (K, N) rows into ``dst`` (R, N) at row indices ``idx``
+    (K unique pages); untouched rows keep their content.
+
+    Lowered as a gather over destination rows (the inverse page map rides in
+    scalar-prefetch): row r reads ``src[inv[r]]`` when some page maps there
+    and its own ``dst`` block otherwise — every output block is written
+    exactly once, no aliasing or read-modify-write hazard."""
+    r, n = dst.shape
+    k = idx.shape[0]
+    inv = jnp.full((r,), -1, jnp.int32).at[idx].set(
+        jnp.arange(k, dtype=jnp.int32))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(r,),
+        in_specs=[pl.BlockSpec((1, n), lambda i, iref: (i, 0)),
+                  pl.BlockSpec((1, n),
+                               lambda i, iref: (jnp.maximum(iref[i], 0), 0))],
+        out_specs=pl.BlockSpec((1, n), lambda i, iref: (i, 0)))
+    return pl.pallas_call(
+        _scatter_row_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((r, n), dst.dtype),
+        interpret=interpret,
+    )(inv, dst, src)
 
 
 # ---------------------------------------------------------------------------

@@ -1,6 +1,8 @@
-from . import engine, kv_cache, program_paths, reference, sampling
+from . import engine, kv_cache, program_paths, reference, sampling, session_pool
 from .engine import Engine, GenConfig
 from .reference import ReferenceEngine
+from .session_pool import SessionPool
 
 __all__ = ["engine", "kv_cache", "program_paths", "reference", "sampling",
-           "Engine", "GenConfig", "ReferenceEngine"]
+           "session_pool", "Engine", "GenConfig", "ReferenceEngine",
+           "SessionPool"]

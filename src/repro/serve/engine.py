@@ -33,6 +33,14 @@ Sampling truncation via content-comparable thresholds (sampling.py);
 KV management via content-movable ops (kv_cache.py).  The old
 step-by-step path lives on as the differential-test oracle in
 ``reference.py``.
+
+Beyond the static ``generate`` batch, the engine serves a *stream* of
+requests through the paged session pool (``session_pool.py``):
+``submit``/``step``/``drain`` admit sessions into free KV/token pages
+mid-flight, decode one batched step across every live page, and retire
+finished sessions so their pages go straight back to the allocator —
+continuous batching, token-identical (greedy) to per-session static
+generation.
 """
 
 from __future__ import annotations
@@ -89,6 +97,7 @@ class Engine:
         self._decode_multi = maybe_jit(functools.partial(lm.decode_multi,
                                                          cfg=cfg))
         self._programs: dict = {}
+        self._pool = None              # default continuous-batching pool
 
     # -- public API --------------------------------------------------------
 
@@ -177,9 +186,8 @@ class Engine:
         n_new = jnp.ones((b,), jnp.int32)
         stats = {"accepted": 0, "proposed": 0, "rounds": 0, "emitted": b}
 
-        draft_prog = self._program(("draft", s), gen, self._build_draft,
-                                   s, gen)
-        commit_prog = self._program(("commit", s), gen, self._build_commit,
+        draft_prog = self._program("draft", gen, self._build_draft, s, gen)
+        commit_prog = self._program("commit", gen, self._build_commit,
                                     s, gen)
         while int(jnp.min(n_new)) < max_new:             # one sync per round
             seq, draft = draft_prog(buf, n_new)
@@ -281,10 +289,72 @@ class Engine:
 
         return jax.jit(run) if self._jit else run
 
+    # -- continuous batching (paged session pool) --------------------------
+
+    def session_pool(self, slots: int = 8, n_banks: int = 1, gen=None,
+                     **kw):
+        """A fresh continuous-batching pool over this engine's weights:
+        ``slots`` KV/token pages split across ``n_banks`` CPM banks (see
+        ``repro.serve.session_pool``).  Compiled programs are shared
+        through this engine's cache, so pools are cheap to recreate."""
+        from .session_pool import SessionPool
+        return SessionPool(self, slots=slots, n_banks=n_banks, gen=gen,
+                           **kw)
+
+    def submit(self, tokens, max_new_tokens: int | None = None, **pool_kw):
+        """Queue one request on the engine's default session pool (created
+        on first use; ``pool_kw`` configures that first creation).
+        Returns the session id — ``step()``/``drain()`` advance it."""
+        if getattr(self, "_pool", None) is None:
+            self._pool = self.session_pool(**pool_kw)
+        elif pool_kw:
+            raise ValueError("default pool already exists; use "
+                             "session_pool() for a differently-shaped one")
+        return self._pool.submit(tokens, max_new_tokens)
+
+    def step(self):
+        """One continuous-batching step on the default pool: admit waiting
+        sessions into free pages, decode one token per live page, retire
+        finished sessions.  Returns the pool's stats snapshot."""
+        if getattr(self, "_pool", None) is None:
+            raise RuntimeError("no sessions submitted")
+        return self._pool.step()
+
+    def drain(self):
+        """Run the default pool to completion; returns
+        ``{session_id: (prompt + generated,) tokens}``."""
+        if getattr(self, "_pool", None) is None:
+            raise RuntimeError("no sessions submitted")
+        out = self._pool.drain()
+        return out
+
     # -- compiled-program cache -------------------------------------------
 
     def _program(self, name, gen: GenConfig, builder, *args):
-        key = (name, gen._key())
+        """Compiled-program cache.
+
+        Builders close over *static* shape parameters (prompt length, pool
+        row count) that ``jax.jit`` cannot recover by retracing, so the
+        cache key must cover them: it is ``(name, GenConfig key, static
+        builder args)``.  Keying on the name alone collided as soon as the
+        session pool drove varying shapes through one engine — two pools
+        (or two prompt lengths) sharing a name must compile separately.
+        GenConfig args contribute via ``_key()``; other non-hashable args
+        are rejected rather than silently collapsed into one cache line.
+        """
+        def static(a):
+            if isinstance(a, GenConfig):
+                return a._key()
+            if isinstance(a, (int, float, str, bool, tuple, frozenset,
+                              type(None))):
+                return a
+            raise TypeError(
+                f"_program builder arg {a!r} is not statically hashable; "
+                f"pass dynamic values to the compiled function, not the "
+                f"builder")
+
+        key = (name, gen._key() if gen is not None else None,
+               tuple(static(a) for a in args))
         if key not in self._programs:
             self._programs[key] = builder(*args)
         return self._programs[key]

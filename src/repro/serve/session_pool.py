@@ -1,0 +1,317 @@
+"""Continuous batching over paged CPM banks.
+
+The static engine runs one batch to completion: a single slow request pins
+every row's VMEM/HBM for the whole generation.  The session pool replaces
+that with the paper's facility view of memory (§4.2): a fixed set of
+*pages* — KV-cache rows and token-buffer bank rows — that sessions check
+in and out of mid-flight:
+
+  * ``submit``  — queue a prompt + token budget (FIFO);
+  * ``step``    — admit waiting sessions into free pages (per-session
+    prefill scattered into the pooled KV rows), decode a ``chunk`` of
+    tokens for every page in ONE compiled program (an inner scan with
+    per-row positions) that also commits each bank's tokens through the
+    MASIM packer's pre-collapsed ``insert -> truncate`` stream
+    (``MultiBankScheduler.compiled_commit`` — one fused launch per bank
+    on pallas), then retire finished sessions and reclaim their pages;
+  * ``drain``   — step until every submitted session is done.
+
+Bookkeeping is CPM all the way down: free-page lookups run on the
+allocator's metadata device (§6 ``compare`` + Rule-6 drain, ``compact``
+for the packed used-page list), token commits are §4.2
+``insert``/``truncate`` instruction streams, and pages move through the
+scalar-prefetch gather/scatter kernels on pallas banks.  The host keeps
+only mirrors (live flags, budgets) — a steady-state step is one compiled
+call, no device round-trips.
+
+Correctness contract: under greedy decoding the pool is **token-identical**
+to generating each session alone with ``Engine.generate`` — decode math is
+row-independent, admission replays the same per-session prefill, and each
+session sees exactly the same (token, position, cache) sequence it would
+see solo, at any ``chunk`` size (a session finishing mid-chunk keeps
+decoding into slack like the static engine's overshoot rows; the commit
+clamps to its budget so overshoot tokens never surface).
+``tests/test_session_pool.py`` asserts this differentially.  Sampled
+decoding is supported (pool-wide sampling params, per-step rng) but makes
+no cross-engine identity claim — the rng schedule differs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cpm.pool import CPMBank, MultiBankScheduler, SessionTable, SlotAllocator
+from repro.models import lm
+from . import kv_cache
+
+
+class SessionPool:
+    """Paged continuous-batching state for one :class:`~repro.serve.Engine`.
+
+    ``slots`` pages are split across ``n_banks`` equal banks (the model
+    batch is the concatenation of all banks' rows).  ``gen`` fixes the
+    pool-wide sampling parameters; per-session budgets come from
+    ``submit``.  ``chunk`` tokens decode per ``step`` inside one compiled
+    program — larger chunks amortize dispatch, at the cost of coarser
+    admission/retirement granularity.  ``bank_backend``/``bank_interpret``
+    route the token banks ("pallas" turns each chunk's bank commit into
+    one fused mega-kernel launch and page moves into scalar-prefetch DMA
+    kernels).
+    """
+
+    def __init__(self, engine, slots: int = 8, n_banks: int = 1, gen=None,
+                 chunk: int = 1, bank_backend: str = "reference",
+                 bank_interpret: bool | None = None, rng=None):
+        from .engine import GenConfig
+
+        if engine.cfg.enc_dec:
+            raise NotImplementedError(
+                "session pool supports decoder-only models (cross-attention "
+                "pages are encoder-owned)")
+        if slots <= 0 or n_banks <= 0 or slots % n_banks:
+            raise ValueError(f"slots ({slots}) must be a positive multiple "
+                             f"of n_banks ({n_banks})")
+        if chunk <= 0:
+            raise ValueError(f"chunk must be positive, got {chunk}")
+        self.engine = engine
+        self.gen = gen if gen is not None else GenConfig()
+        self.slots = slots
+        self.n_banks = n_banks
+        self.rows_per_bank = slots // n_banks
+        self.chunk = chunk
+        self.max_len = engine.max_len
+        self._bank_backend = bank_backend
+        self._bank_interpret = bank_interpret
+
+        self.alloc = SlotAllocator(slots)
+        self.banks = [CPMBank(self.rows_per_bank, self.max_len,
+                              backend=bank_backend,
+                              interpret=bank_interpret)
+                      for _ in range(n_banks)]
+        self.sched = MultiBankScheduler(self.banks)
+        self.table = SessionTable()
+
+        caches = lm.init_caches(engine.cfg, slots, self.max_len)
+        self.caches = kv_cache.broadcast_lens(caches, slots)
+        self.pos = jnp.zeros((slots,), jnp.int32)
+        self.cur = jnp.zeros((slots,), jnp.int32)
+        self.live = np.zeros((slots,), bool)
+        self._free_hint = slots            # host mirror of the free count
+        self._rng = rng if rng is not None else jax.random.PRNGKey(0)
+
+        self.decode_steps = 0
+        self.total_emitted = 0
+        self._decode_emitted = 0           # excludes prefill tokens
+
+    # -- public API ---------------------------------------------------------
+    def submit(self, tokens, max_new_tokens: int | None = None) -> int:
+        """Queue one session; returns its id.  ``max_new_tokens`` defaults
+        to the pool GenConfig's budget."""
+        tokens = jnp.asarray(tokens, jnp.int32).reshape(-1)
+        s = int(tokens.shape[0])
+        budget = (self.gen.max_new_tokens if max_new_tokens is None
+                  else max_new_tokens)
+        if s < 1:
+            raise ValueError("empty prompt")
+        if budget > 0 and s + budget > self.max_len:
+            raise ValueError(
+                f"prompt ({s}) + budget ({budget}) exceeds max_len "
+                f"({self.max_len}); pages are max_len wide")
+        sess = self.table.add(tokens, s, budget)
+        if budget <= 0:                     # nothing to generate
+            self.table.finish(sess.sid, np.asarray(tokens))
+        return sess.sid
+
+    def step(self) -> dict:
+        """Admit -> decode ``chunk`` tokens for every live page -> retire.
+
+        Returns a stats snapshot (see :meth:`stats`)."""
+        self._admit()
+        self._retire()                      # budget-1 sessions finish on admit
+        if self.table.active_count():
+            self._decode_chunk()
+            self._retire()
+        return self.stats()
+
+    def drain(self) -> dict[int, np.ndarray]:
+        """Step until every submitted session is DONE; returns
+        ``{sid: (prompt + generated,) int32}`` for the sessions finished
+        since the last drain (delivered sessions are evicted from the
+        table — memory stays bounded under a continuous request stream)."""
+        while not self.table.all_done():
+            self.step()
+        return self.table.collect_finished()
+
+    def stats(self) -> dict:
+        steps = self.decode_steps
+        return {
+            "decode_steps": steps,
+            "emitted": self.total_emitted,
+            # useful (budgeted) *decode* tokens per slot-step — dead pages,
+            # chunk overshoot and drained-out tails all count against it
+            # (prefill tokens are excluded: they cost no decode step)
+            "occupancy": (self._decode_emitted / (steps * self.slots)
+                          if steps else 0.0),
+            "active": self.table.active_count(),
+            "waiting": self.table.waiting_count(),
+            "bank_launches": self.sched.bank_launches,
+            "streams_packed": self.sched.streams_packed,
+        }
+
+    # -- admission ----------------------------------------------------------
+    def _admit(self) -> None:
+        engine = self.engine
+        while self._free_hint and self.table.next_waiting() is not None:
+            sess = self.table.next_waiting()
+            slot = self.alloc.alloc()       # CPM free-page lookup
+            assert slot is not None, "free-count mirror out of sync"
+            self._free_hint -= 1
+            bank_id = slot // self.rows_per_bank
+            local = slot % self.rows_per_bank
+            self.table.activate(sess.sid, bank_id, slot)
+
+            logits, caches1 = engine._prefill(
+                engine.params, batch={"tokens": sess.prompt[None]},
+                max_len=self.max_len)
+            caches1 = kv_cache.broadcast_lens(caches1, 1)
+            admit = engine._program("pool_admit", self.gen,
+                                    self._build_admit, sess.prompt_len,
+                                    self.slots)
+            self._rng, sub = jax.random.split(self._rng)
+            rng = jax.random.fold_in(sub, sess.sid)
+            self.caches, self.pos, self.cur, row = admit(
+                self.caches, caches1, jnp.asarray(slot, jnp.int32),
+                self.pos, self.cur, logits, sess.prompt, rng)
+            self.banks[bank_id].scatter(
+                jnp.asarray([local], jnp.int32), row[None],
+                jnp.asarray([sess.prompt_len + 1], jnp.int32))
+            sess.emitted = 1                # the prefill token
+            self.total_emitted += 1
+            self.live[slot] = True
+
+    def _build_admit(self, s: int, slots: int):
+        """Jitted page check-in for a prompt of length ``s``: sample the
+        prefill token, scatter the session's KV into pool row ``slot``
+        (blocks batch axis 1, tail axis 0 — whole row replaced, nothing
+        from the page's previous tenant survives), seed pos/cur, and build
+        the token-bank row."""
+        engine, gen, width = self.engine, self.gen, self.max_len
+
+        def run(pool_caches, new_caches, slot, pos, cur, logits, prompt,
+                rng):
+            first = engine._sample(logits[:, -1], gen, rng)[0]
+
+            def wr_b(p, n):
+                return p.at[:, slot].set(n[:, 0].astype(p.dtype))
+
+            def wr_t(p, n):
+                return p.at[slot].set(n[0].astype(p.dtype))
+
+            caches = {
+                "blocks": jax.tree.map(wr_b, pool_caches["blocks"],
+                                       new_caches["blocks"]),
+                "tail": jax.tree.map(wr_t, pool_caches["tail"],
+                                     new_caches["tail"]),
+            }
+            pos = pos.at[slot].set(s)
+            cur = cur.at[slot].set(first)
+            row = (jnp.zeros((width,), jnp.int32)
+                   .at[:s].set(prompt).at[s].set(first))
+            return caches, pos, cur, row
+
+        return jax.jit(run) if engine._jit else run
+
+    # -- decode -------------------------------------------------------------
+    def _decode_chunk(self) -> None:
+        """One compiled program: scan ``chunk`` decode steps over every
+        page, then commit each bank's tokens via the scheduler's packed
+        ``insert -> truncate`` stream — no host round-trip inside."""
+        engine = self.engine
+        run = engine._program("pool_chunk", self.gen, self._build_chunk,
+                              self.slots, self.chunk, self.n_banks,
+                              self._bank_backend, self._bank_interpret)
+        self._rng, sub = jax.random.split(self._rng)
+        budget_left = np.zeros((self.slots,), np.int32)
+        for sess in self.table.active():
+            budget_left[sess.slot] = sess.budget - sess.emitted
+        datas = [b.data for b in self.banks]
+        lenss = [b.lens for b in self.banks]
+        self.cur, self.caches, self.pos, datas, lenss = run(
+            engine.params, self.cur, self.caches, self.pos,
+            jnp.asarray(self.live), jnp.asarray(budget_left), datas, lenss,
+            sub)
+        for b, d, ln in zip(self.banks, datas, lenss):
+            b.data, b.lens = d, ln
+
+        active = self.table.active()
+        for sess in active:                 # host-mirror accounting only
+            emit = min(self.chunk, sess.budget - sess.emitted)
+            sess.emitted += emit
+            self.total_emitted += emit
+            self._decode_emitted += emit
+        self.decode_steps += self.chunk
+        self.sched.bank_launches += self.n_banks    # packed commit launches
+        self.sched.streams_packed += len(active)
+
+    def _build_chunk(self, slots: int, chunk: int, n_banks: int,
+                     bank_backend: str, bank_interpret):
+        """Jitted pooled decode chunk: an inner scan of ``chunk``
+        ``lm.decode_step`` calls with per-row positions (dead pages stay
+        pinned — pos frozen, token 0 — and only write their own row),
+        followed by the per-bank packed commit.  Rows whose budget ends
+        mid-chunk keep decoding into slack; ``emit`` clamps what the
+        commit makes visible."""
+        del bank_backend, bank_interpret    # cache-key discriminators: the
+        # compiled_commit closures below bake the bank routing in
+        engine, gen, cfg = self.engine, self.gen, self.engine.cfg
+        rpb = self.rows_per_bank
+        commits = [self.sched.compiled_commit(b, chunk)
+                   for b in range(n_banks)]
+
+        def run(params, cur, caches, pos, live, budget_left, datas, lenss,
+                rng):
+            def body(carry, _):
+                tok, caches, pos, rng = carry
+                rng, sub = jax.random.split(rng)
+                logits, caches = lm.decode_step(params, cfg, tok[:, None],
+                                                caches, pos)
+                nxt = engine._sample(logits[:, -1], gen, sub)
+                nxt = jnp.where(live, nxt, 0)
+                pos = jnp.where(live, pos + 1, pos)
+                return (nxt, caches, pos, rng), nxt
+
+            (cur, caches, pos, _), toks = jax.lax.scan(
+                body, (cur, caches, pos, rng), None, length=chunk)
+            toks = jnp.moveaxis(toks, 0, 1)              # (slots, chunk)
+            emit = jnp.where(live, jnp.minimum(budget_left, chunk), 0)
+            new_d, new_l = [], []
+            for b in range(n_banks):
+                rows = slice(b * rpb, (b + 1) * rpb)
+                d, ln = commits[b](datas[b], lenss[b], toks[rows],
+                                   emit[rows])
+                new_d.append(d)
+                new_l.append(ln)
+            return cur, caches, pos, new_d, new_l
+
+        return jax.jit(run) if engine._jit else run
+
+    # -- retirement ---------------------------------------------------------
+    def _retire(self) -> None:
+        for sess in list(self.table.active()):
+            if not sess.finished:
+                continue
+            bank = self.banks[sess.bank]
+            local = sess.slot % self.rows_per_bank
+            row, ln = bank.read_row(local)
+            assert ln == sess.prompt_len + sess.emitted, (
+                ln, sess.prompt_len, sess.emitted)
+            self.table.finish(sess.sid, row[:ln])
+            self.alloc.free(sess.slot)      # page back to the free list
+            self._free_hint += 1
+            self.live[sess.slot] = False
+            # pin the dead page: frozen position, token 0 — its decode
+            # writes stay inside its own (soon-to-be-recycled) row
+            self.pos = self.pos.at[sess.slot].set(0)
+            self.cur = self.cur.at[sess.slot].set(0)

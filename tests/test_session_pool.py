@@ -1,0 +1,232 @@
+"""Continuous batching vs per-session static generation — differential.
+
+The pool's contract: under greedy decoding, every session drained through
+the paged pool is **token-identical** to running it alone through the
+static scan engine — across ragged prompt lengths, ragged budgets,
+oversubscription (more sessions than pages), multi-bank splits, and the
+hybrid recurrent architecture.  Plus the engine's compiled-program cache
+keying regression (shapes must key the cache, not just names).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import all_configs
+from repro.models import lm
+from repro.serve import Engine, GenConfig
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = all_configs()["granite-8b"].smoke()
+HYB = all_configs()["recurrentgemma-9b"].smoke()
+
+
+@pytest.fixture(scope="module")
+def granite():
+    params = lm.init_params(CFG, jax.random.PRNGKey(0))
+    return Engine(CFG, params, max_len=64)
+
+
+@pytest.fixture(scope="module")
+def hybrid():
+    params = lm.init_params(HYB, jax.random.PRNGKey(0))
+    return Engine(HYB, params, max_len=48)
+
+
+def _prompt(seed, s, cfg):
+    return jax.random.randint(jax.random.PRNGKey(seed), (s,), 0,
+                              cfg.vocab_size)
+
+
+def _solo(engine, prompt, budget):
+    out, _ = engine.generate({"tokens": prompt[None]},
+                             GenConfig(max_new_tokens=budget))
+    return np.asarray(out[0])
+
+
+# ---------------------------------------------------------------------------
+# token identity
+# ---------------------------------------------------------------------------
+
+class TestPoolTokenIdentity:
+    def test_oversubscribed_ragged_matches_solo(self, granite):
+        """6 sessions over 4 pages (2 banks), ragged prompts AND budgets:
+        every drained output equals its solo static generation."""
+        lens = [8, 12, 10, 8, 16, 9]
+        budgets = [5, 12, 3, 9, 1, 7]
+        prompts = [_prompt(i, s, CFG) for i, s in enumerate(lens)]
+        want = [_solo(granite, p, b) for p, b in zip(prompts, budgets)]
+
+        pool = granite.session_pool(slots=4, n_banks=2)
+        sids = [pool.submit(p, b) for p, b in zip(prompts, budgets)]
+        outs = pool.drain()
+        for sid, w in zip(sids, want):
+            np.testing.assert_array_equal(outs[sid], w)
+        stats = pool.stats()
+        assert stats["emitted"] == sum(budgets)
+        assert 0.0 < stats["occupancy"] <= 1.0
+
+    def test_single_bank_matches_solo(self, granite):
+        prompts = [_prompt(10 + i, 8, CFG) for i in range(3)]
+        pool = granite.session_pool(slots=2, n_banks=1)
+        sids = [pool.submit(p, 6) for p in prompts]
+        outs = pool.drain()
+        for sid, p in zip(sids, prompts):
+            np.testing.assert_array_equal(outs[sid], _solo(granite, p, 6))
+
+    def test_hybrid_arch_matches_solo(self, hybrid):
+        """Recurrent (rglru) state + local-window rings page in and out of
+        the pool rows without perturbing other sessions."""
+        lens, budgets = [10, 14, 10], [6, 3, 8]
+        prompts = [_prompt(20 + i, s, HYB) for i, s in enumerate(lens)]
+        want = [_solo(hybrid, p, b) for p, b in zip(prompts, budgets)]
+        pool = hybrid.session_pool(slots=2)
+        sids = [pool.submit(p, b) for p, b in zip(prompts, budgets)]
+        outs = pool.drain()
+        for sid, w in zip(sids, want):
+            np.testing.assert_array_equal(outs[sid], w)
+
+    def test_late_arrivals_match_solo(self, granite):
+        """Sessions submitted mid-flight join free pages without touching
+        in-flight rows."""
+        first = [_prompt(30 + i, 8, CFG) for i in range(2)]
+        late = [_prompt(40 + i, 11, CFG) for i in range(2)]
+        pool = granite.session_pool(slots=2)
+        sids = [pool.submit(p, 8) for p in first]
+        pool.step()
+        pool.step()
+        sids += [pool.submit(p, 4) for p in late]
+        outs = pool.drain()
+        for sid, (p, b) in zip(sids, [(p, 8) for p in first]
+                               + [(p, 4) for p in late]):
+            np.testing.assert_array_equal(outs[sid], _solo(granite, p, b))
+
+    @pytest.mark.parametrize("chunk", [3, 8])
+    def test_chunked_decode_matches_solo(self, granite, chunk):
+        """Decoding ``chunk`` tokens per compiled step (sessions finishing
+        mid-chunk overshoot into slack; the commit clamps to budget) emits
+        the identical tokens at any chunk size."""
+        lens = [8, 12, 10, 9]
+        budgets = [5, 11, 2, 7]               # none a multiple of chunk
+        prompts = [_prompt(90 + i, s, CFG) for i, s in enumerate(lens)]
+        want = [_solo(granite, p, b) for p, b in zip(prompts, budgets)]
+        pool = granite.session_pool(slots=2, chunk=chunk)
+        sids = [pool.submit(p, b) for p, b in zip(prompts, budgets)]
+        outs = pool.drain()
+        for sid, w in zip(sids, want):
+            np.testing.assert_array_equal(outs[sid], w)
+
+    def test_pallas_banks_match_reference_banks(self, granite):
+        """Token pages on pallas banks (fused commit launches + DMA
+        gather/scatter kernels) drain the identical tokens."""
+        prompts = [_prompt(50 + i, 9, CFG) for i in range(3)]
+        ref = granite.session_pool(slots=2)
+        pal = granite.session_pool(slots=2, bank_backend="pallas",
+                                   bank_interpret=True)
+        for p in prompts:
+            ref.submit(p, 5)
+            pal.submit(p, 5)
+        r, q = ref.drain(), pal.drain()
+        for sid in r:
+            np.testing.assert_array_equal(r[sid], q[sid])
+
+
+# ---------------------------------------------------------------------------
+# lifecycle / API edges
+# ---------------------------------------------------------------------------
+
+class TestPoolLifecycle:
+    def test_zero_budget_returns_prompt(self, granite):
+        pool = granite.session_pool(slots=2)
+        p = _prompt(60, 7, CFG)
+        sid = pool.submit(p, 0)
+        outs = pool.drain()
+        np.testing.assert_array_equal(outs[sid], np.asarray(p))
+
+    def test_budget_one_is_the_prefill_token(self, granite):
+        pool = granite.session_pool(slots=2)
+        p = _prompt(61, 7, CFG)
+        sid = pool.submit(p, 1)
+        outs = pool.drain()
+        np.testing.assert_array_equal(outs[sid], _solo(granite, p, 1))
+
+    def test_overlong_request_rejected(self, granite):
+        pool = granite.session_pool(slots=2)
+        with pytest.raises(ValueError, match="max_len"):
+            pool.submit(_prompt(62, 60, CFG), 10)
+
+    def test_pages_reclaimed(self, granite):
+        pool = granite.session_pool(slots=2)
+        for i in range(4):
+            pool.submit(_prompt(70 + i, 8, CFG), 2)
+        pool.drain()
+        assert pool.alloc.free_count() == 2       # all pages back
+        assert pool.table.all_done()
+
+    def test_engine_submit_step_drain_facade(self, granite):
+        params = lm.init_params(CFG, jax.random.PRNGKey(0))
+        eng = Engine(CFG, params, max_len=64)
+        p = _prompt(80, 8, CFG)
+        sid = eng.submit(p, 3, slots=2)
+        stats = eng.step()
+        assert stats["emitted"] >= 1
+        outs = eng.drain()
+        np.testing.assert_array_equal(outs[sid], _solo(eng, p, 3))
+
+    def test_bad_shapes_rejected(self, granite):
+        with pytest.raises(ValueError, match="multiple"):
+            granite.session_pool(slots=3, n_banks=2)
+
+    def test_drain_delivers_each_session_once(self, granite):
+        """Delivered sessions are evicted — a later drain returns only
+        sessions finished since the last one (bounded table memory under
+        a continuous stream)."""
+        pool = granite.session_pool(slots=2)
+        a = pool.submit(_prompt(85, 8, CFG), 2)
+        first = pool.drain()
+        assert set(first) == {a}
+        b = pool.submit(_prompt(86, 8, CFG), 2)
+        second = pool.drain()
+        assert set(second) == {b}
+        assert len(pool.table) == 0
+
+
+# ---------------------------------------------------------------------------
+# compiled-program cache keying (regression)
+# ---------------------------------------------------------------------------
+
+class TestProgramCacheKeying:
+    def test_same_name_different_shapes_do_not_collide(self, granite):
+        """Two builders under one name with different static shape args
+        must compile separately — colliding returned the first shape's
+        program for the second shape (the pool drives varying row counts
+        through one engine)."""
+        calls = []
+
+        def builder(s):
+            calls.append(s)
+            return lambda: s
+
+        gen = GenConfig(max_new_tokens=4)
+        a = granite._program("probe", gen, builder, 8)
+        b = granite._program("probe", gen, builder, 12)
+        assert (a(), b()) == (8, 12)
+        assert calls == [8, 12]
+        # and the cache still memoizes identical keys
+        assert granite._program("probe", gen, builder, 8) is a
+        assert calls == [8, 12]
+
+    def test_genconfig_arg_keys_via_key(self, granite):
+        def builder(g):
+            return lambda: g.max_new_tokens
+
+        g1, g2 = GenConfig(max_new_tokens=4), GenConfig(max_new_tokens=9)
+        assert granite._program("probe2", g1, builder, g1)() == 4
+        assert granite._program("probe2", g2, builder, g2)() == 9
+
+    def test_unhashable_builder_arg_rejected(self, granite):
+        with pytest.raises(TypeError, match="statically hashable"):
+            granite._program("probe3", GenConfig(), lambda a: a,
+                             jnp.zeros((3,)))
