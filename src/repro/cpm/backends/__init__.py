@@ -56,11 +56,13 @@ class Backend(Protocol):
     def stencil(self, x, taps, wrap: bool = False): ...
     def compact(self, x, keep, fill=0): ...              # (out, new_len)
 
-    def fused_stream(self, x, used_len, instrs, operands):
+    def fused_stream(self, x, used_len, instrs, operands,
+                     block_r: int = 1):
         """Execute a fused instruction group (``repro.cpm.program``) in one
-        launch.  Optional capability: only backends that can keep the row
-        resident across instructions implement it (pallas); the scheduler
-        falls back to per-op replay elsewhere."""
+        launch (``block_r`` rows per grid step — autotuned by the
+        executor).  Optional capability: only backends that can keep the
+        row resident across instructions implement it (pallas); the
+        scheduler falls back to per-op replay elsewhere."""
         raise NotImplementedError(
             f"backend {self.name!r} has no fused-stream realization")
 

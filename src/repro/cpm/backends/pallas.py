@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from repro.kernels import cpm_kernels as K
 
+from .. import tuning
 from ..optable import optimal_section
 from . import _TableBacked
 
@@ -33,9 +34,27 @@ class PallasBackend(_TableBacked):
     name = "pallas"
 
     def __init__(self, interpret: bool | None = None):
-        if interpret is None:
-            interpret = jax.default_backend() != "tpu"
-        self.interpret = bool(interpret)
+        self.interpret = K.resolve_interpret(interpret)
+
+    def _tuned_section(self, op: str, x, default: int, run) -> int:
+        """Autotuned section (VMEM block width) for one reduction call,
+        cached per (op, shape, dtype, backend) with a JSON spill.  The
+        candidate grid spans the ~sqrt(N) paper choice through whole-row
+        blocks; ``run(section)`` times candidates on synthesized zeros —
+        outside any active trace only (``tuning.measurable``); traced
+        callers get cache hits or the static default.  An explicit
+        ``section=`` from the caller always bypasses tuning (this is
+        only reached when it was None)."""
+        n = x.shape[-1]
+        default = min(default, n)
+        if n < 2048:                    # tuning overhead beats any return
+            return default
+        cands = sorted({min(c, n) for c in
+                        (optimal_section(n), 256, 1024, 4096, n)})
+        key = (f"section:{op}|{'x'.join(map(str, x.shape))}"
+               f"|{jnp.dtype(x.dtype).name}"
+               f"|{tuning.backend_key(self.interpret)}")
+        return int(tuning.pick(key, cands, run, default=default))
 
     def activate(self, n, start, end, carry=1):
         return K.activate(n, start, end, carry, interpret=self.interpret)
@@ -55,28 +74,52 @@ class PallasBackend(_TableBacked):
         return un(K.compare(x2, datum, op, interpret=self.interpret))
 
     def histogram(self, x, edges, section=None):
-        sec = min(section or 1024, x.shape[-1])
+        if section is None:
+            xz = tuning.synth(x.shape, x.dtype)
+            ez = tuning.synth(edges.shape, edges.dtype)
+            section = self._tuned_section(
+                f"histogram{edges.shape[-1] - 1}", x, 1024,
+                lambda s: K.histogram(xz, ez, s, interpret=self.interpret))
+        sec = min(section, x.shape[-1])
         return K.histogram(x, edges, sec, interpret=self.interpret)
 
     def section_sum(self, x, section=None):
-        sec = section or optimal_section(x.shape[-1])
-        out = K.section_sum(x, sec, interpret=self.interpret)
+        if section is None:
+            xz = tuning.synth(x.shape, x.dtype)
+            section = self._tuned_section(
+                "section_sum", x, optimal_section(x.shape[-1]),
+                lambda s: K.section_sum(xz, s, interpret=self.interpret))
+        out = K.section_sum(x, section, interpret=self.interpret)
         # match the reference accumulation dtype (jnp.sum semantics)
         ref_dtype = jnp.zeros((), x.dtype).sum().dtype
         return out.astype(ref_dtype)
 
     def global_limit(self, x, mode="max", section=None):
-        sec = section or optimal_section(x.shape[-1])
-        return K.section_limit(x, sec, mode, interpret=self.interpret)
+        if section is None:
+            xz = tuning.synth(x.shape, x.dtype)
+            section = self._tuned_section(
+                "section_limit", x, optimal_section(x.shape[-1]),
+                lambda s: K.section_limit(xz, s, mode,
+                                          interpret=self.interpret))
+        return K.section_limit(x, section, mode, interpret=self.interpret)
 
     def super_sum(self, x, section=None):
-        sec = section or optimal_section(x.shape[-1])
-        out = K.super_sum(x, sec, interpret=self.interpret)
+        if section is None:
+            xz = tuning.synth(x.shape, x.dtype)
+            section = self._tuned_section(
+                "super_sum", x, optimal_section(x.shape[-1]),
+                lambda s: K.super_sum(xz, s, interpret=self.interpret))
+        out = K.super_sum(x, section, interpret=self.interpret)
         return out.astype(jnp.zeros((), x.dtype).sum().dtype)
 
     def super_limit(self, x, mode="max", section=None):
-        sec = section or optimal_section(x.shape[-1])
-        return K.super_limit(x, sec, mode, interpret=self.interpret)
+        if section is None:
+            xz = tuning.synth(x.shape, x.dtype)
+            section = self._tuned_section(
+                "super_limit", x, optimal_section(x.shape[-1]),
+                lambda s: K.super_limit(xz, s, mode,
+                                        interpret=self.interpret))
+        return K.super_limit(x, section, mode, interpret=self.interpret)
 
     def sort(self, x, steps=None):
         x2, un = _rows(x)
@@ -99,9 +142,11 @@ class PallasBackend(_TableBacked):
         return un(out), (new_len.reshape(lead) if lead
                          else new_len.reshape(()))
 
-    def fused_stream(self, x, used_len, instrs, operands):
+    def fused_stream(self, x, used_len, instrs, operands, block_r: int = 1):
         """One ``pallas_call`` for a whole fused instruction group: the row
         block and its §4.2 length register stay resident in VMEM across
-        every instruction (see ``cpm_kernels.fused_stream``)."""
+        every instruction (see ``cpm_kernels.fused_stream``).  ``block_r``
+        rows per grid step — the executor autotunes it per stream
+        signature."""
         return K.fused_stream(x, used_len, instrs, operands,
-                              interpret=self.interpret)
+                              block_r=block_r, interpret=self.interpret)

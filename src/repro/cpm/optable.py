@@ -68,6 +68,14 @@ class OpSpec:
     #: a run of these as ONE Pallas mega-kernel.  Reductions and sorts read
     #: or reorder the whole row and are fusion-group boundaries.
     fusable: bool = False
+    #: wall-clock cost metadata for the cost-aware scheduler
+    #: (``repro.cpm.program.costmodel``): how many full row read/write
+    #: passes the *lowering* makes (None = reuse the concurrent-step
+    #: formula) and how many kernel launches the eager pallas path pays.
+    #: Distinct from ``steps``: e.g. ``truncate`` is 1 concurrent step but
+    #: 0 row passes / 0 launches — only the length register moves.
+    passes: Callable[..., int] | None = None
+    eager_launches: int = 1
 
     def check(self, **sizes) -> int:
         """Evaluate the formula and assert it obeys the paper bound."""
@@ -100,7 +108,8 @@ OP_TABLE: dict[str, OpSpec] = {spec.name: spec for spec in [
     OpSpec("truncate", "move", "§4.2",     # range delete at the tail: the
            steps=lambda **_: 1,            # used-length register updates,
            bound=lambda **_: 1,            # entries stay put (O(1))
-           backends=_RPM, fusable=True),
+           backends=_RPM, fusable=True,
+           passes=lambda **_: 0, eager_launches=0),
     OpSpec("compact", "move", "§4.2",      # stable pack of kept items: the
            steps=lambda n, **_: _clog2(n),     # TPU-native cumsum-gather is
            bound=lambda n, **_: _clog2(n) + 1, # log-depth (paper: per-object

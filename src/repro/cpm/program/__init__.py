@@ -40,6 +40,7 @@ from .scheduler import (FusionGroup, FusionPlan, instruction_steps,
                         program_steps, scan_structured_steps, schedule)
 from .executors import apply_instruction, run_plan
 from .introspect import count_pallas_calls, scan_trip_count
+from .costmodel import CostParams, group_cost, roofline_params
 
 __all__ = [
     "CPMProgram", "Instruction", "record",
@@ -47,4 +48,5 @@ __all__ = [
     "instruction_steps", "program_steps", "scan_structured_steps",
     "apply_instruction", "run_plan",
     "count_pallas_calls", "scan_trip_count",
+    "CostParams", "group_cost", "roofline_params",
 ]

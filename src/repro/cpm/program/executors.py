@@ -25,6 +25,7 @@ a per-row ``(R, k)`` block in the mega-kernel; anything else broadcasts.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import math
 
 import jax
@@ -143,7 +144,12 @@ def _apply_rows(a, instr: ir.Instruction):
 
 def run_plan(plan, arr, backend: str | None = None,
              interpret: bool | None = None):
-    """Execute a scheduled plan; returns ``(final_array, outputs)``."""
+    """Execute a scheduled plan; returns ``(final_array, outputs)``.
+
+    Only ``fused`` groups on the pallas backend take the mega-kernel
+    path; ``eager`` groups (fusable runs the cost model rejected) and
+    ``boundary`` groups replay per-op — same instructions, bit-identical
+    results, just a different launch structure."""
     from .. import backends as B
 
     bk = backend or arr.backend
@@ -170,6 +176,51 @@ def run_plan(plan, arr, backend: str | None = None,
 # ---------------------------------------------------------------------------
 # the pallas fused-group lowering
 # ---------------------------------------------------------------------------
+
+#: don't bother timing row blockings below this problem size — the launch
+#: count is tiny and tuning would cost more than it can ever return
+_TUNE_MIN_ROWS = 4
+_TUNE_MIN_ELEMS = 1 << 15
+
+
+def _blockr_candidates(r: int) -> list[int]:
+    return sorted({br for br in (1, 8, 32, r) if 1 <= br <= r})
+
+
+def _fused_block_r(descs, operands, data, ul, r, n, backend) -> int:
+    """Autotuned rows-per-grid-step for one fused stream, cached per
+    (op-stream-signature, shape, dtype, backend) with a JSON spill.
+
+    The key depends only on static shape/dtype facts, so a traced caller
+    still *reads* decisions made earlier — but candidates are only ever
+    timed outside a trace (``tuning.measurable``), on concrete zeros of
+    the recorded shapes; the winner is a static Python int baked into
+    the pallas grid.
+    """
+    from .. import tuning
+
+    if r < _TUNE_MIN_ROWS or r * n < _TUNE_MIN_ELEMS:
+        return 1
+    cands = _blockr_candidates(r)
+    if len(cands) < 2:
+        return 1
+    sig = hashlib.md5(repr(descs).encode()).hexdigest()[:12]
+    key = (f"blockr:{'+'.join(op for op, _, _ in descs)}:{sig}"
+           f"|{r}x{n}|{jnp.dtype(data.dtype).name}"
+           f"|{tuning.backend_key(backend.interpret)}")
+    cached = tuning.lookup(key)
+    if cached is not None:
+        return int(cached)
+    if not tuning.tuning_enabled() or not tuning.measurable():
+        return 1
+    datz = tuning.synth((r, n), data.dtype)
+    ulz = tuning.synth((r,), jnp.int32)
+    opz = tuple(tuning.synth(a.shape, a.dtype) for a in operands)
+
+    def run(br):
+        return backend.fused_stream(datz, ulz, descs, opz, block_r=br)
+
+    return int(tuning.pick(key, cands, run, default=1))
 
 def _norm_operand(v, rank: int, lead, r: int, dtype=None):
     """Normalize one dynamic operand to a ``(rows, k)`` kernel input
@@ -286,8 +337,10 @@ def _run_fused_pallas(arr, group, interpret):
         operands.extend(opnds)
         if instr.op in PRODUCERS:
             meta.append((idx, instr.op, all_shared))
+    descs, operands = tuple(descs), tuple(operands)
+    block_r = _fused_block_r(descs, operands, data, ul, r, n, backend)
     out_x, out_ul, prods = backend.fused_stream(
-        data, ul, tuple(descs), tuple(operands))
+        data, ul, descs, operands, block_r=block_r)
 
     mutates = any(i.op in ("shift", "insert", "delete", "truncate")
                   for i in group.instructions)

@@ -9,7 +9,17 @@ in VMEM across instructions.  Everything else (two-phase/§8 reductions,
 histogram, sort, Rule-6 drains) is a ``boundary`` group of one instruction,
 executed by ordinary per-op dispatch.
 
-The cost model sums the ``OP_TABLE`` concurrent-step formulas per
+Fusing is *cost-aware* when the caller supplies the device (or explicit
+shape info): each fusable run is priced both ways by the launch/byte model
+in :mod:`~repro.cpm.program.costmodel` — backend-calibrated launch
+intercepts and per-byte slopes over the op table's cost metadata — and a
+run predicted slower fused is emitted as an ``eager`` group (per-op
+dispatch, same instructions, bit-identical results).  The verdict rides in
+``FusionGroup.decision`` and surfaces through ``describe()`` /
+``steps_report()``.  Without device info ``schedule`` keeps the PR-4
+behavior: every fusable run fuses (the launch-bound default).
+
+The cycle model sums the ``OP_TABLE`` concurrent-step formulas per
 instruction (operand sizes — needle/template/tap lengths, bin counts — are
 read from the recorded operands).  ``scan_structured_steps`` restricts the
 sum to ops whose *reference lowering* is a literal ``lax.scan``; the
@@ -19,9 +29,10 @@ unfused replay, exactly as PR 3 did per op.
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+import math
+from dataclasses import dataclass, field
 
-import jax.numpy as jnp
+import numpy as np
 
 from ..optable import fusable_ops, op_steps
 from .ir import DERIVED_METHODS as _DERIVED
@@ -32,15 +43,27 @@ _SCAN_STRUCTURED = ("substring_match", "find_all", "template_match",
                     "super_sum", "super_limit")
 
 
+def _operand_len(v) -> int:
+    """Trailing-axis length of a recorded operand WITHOUT materializing it:
+    tracers, ShapeDtypeStructs and plain lists all answer from metadata
+    (``jnp.asarray`` here would force a device transfer at schedule time)."""
+    shape = getattr(v, "shape", None)
+    if shape is None:
+        shape = np.shape(v)
+    if len(shape) == 0:
+        raise ValueError(f"expected a vector operand, got scalar {v!r}")
+    return int(shape[-1])
+
+
 def _instr_m(instr: Instruction) -> int:
     """The op-specific size M, read from the recorded operand shapes."""
     ops = instr.operands
     if instr.op in ("substring_match", "find_all"):
-        return int(jnp.shape(jnp.asarray(ops["needle"]))[-1])
+        return _operand_len(ops["needle"])
     if instr.op == "histogram":
-        return int(jnp.shape(jnp.asarray(ops["edges"]))[-1]) - 1
+        return _operand_len(ops["edges"]) - 1
     if instr.op == "template_match":
-        return int(jnp.shape(jnp.asarray(ops["template"]))[-1])
+        return _operand_len(ops["template"])
     if instr.op == "stencil":
         return len(ops["taps"])
     return 0
@@ -54,7 +77,12 @@ def instruction_steps(instr: Instruction, n: int,
         return int(instr.operands["steps"])   # bounded local exchange phase
     table_op = _DERIVED.get(instr.op, instr.op)
     extra = 1 if instr.op in _DERIVED else 0  # the Rule-6 count/drain step
-    sec = instr.operands.get("section") or section
+    sec = instr.operands.get("section")       # explicit None check: a
+    if sec is None:                           # recorded section=0 must
+        sec = section                         # error, not silently fall
+    if sec is not None and sec < 1:           # back to the caller default
+        raise ValueError(
+            f"{instr.op}: section must be >= 1, got {sec!r}")
     return op_steps(table_op, n=n, m=_instr_m(instr), section=sec) + extra
 
 
@@ -77,9 +105,12 @@ def scan_structured_steps(prog: CPMProgram, n: int) -> int:
 
 @dataclass(frozen=True)
 class FusionGroup:
-    kind: str                         # "fused" | "boundary"
+    kind: str                         # "fused" | "eager" | "boundary"
     indices: tuple[int, ...]          # instruction positions in the program
     instructions: tuple[Instruction, ...]
+    #: the cost model's verdict for this run (None when scheduling was not
+    #: cost-aware): {"fuse", "fused_us", "eager_us", "params"}
+    decision: dict | None = field(default=None, compare=False)
 
     def __repr__(self):
         body = "; ".join(i.op for i in self.instructions)
@@ -103,12 +134,28 @@ class FusionPlan:
                  f"{len(self.groups)} groups "
                  f"({self.fused_group_count} fused)"]
         for g in self.groups:
-            tag = ("1 mega-kernel launch" if g.kind == "fused"
-                   else "per-op dispatch")
+            tag = {"fused": "1 mega-kernel launch",
+                   "eager": "per-op dispatch (cost model)"}.get(
+                       g.kind, "per-op dispatch")
+            cost = ""
+            if g.decision is not None:
+                cost = (f"  fused {g.decision['fused_us']:.2f}us vs "
+                        f"eager {g.decision['eager_us']:.2f}us "
+                        f"[{g.decision['params']}]")
             lines.append(f"  {g.kind:8s} {list(g.indices)} "
                          f"[{' -> '.join(i.op for i in g.instructions)}]  "
-                         f"({tag})")
+                         f"({tag}){cost}")
         return "\n".join(lines)
+
+    def steps_report(self, n: int, section: int | None = None) -> dict:
+        """The cycle model plus the schedule's fuse/eager verdicts."""
+        report = self.program.steps_report(n, section=section)
+        report["schedule"] = [
+            {"kind": g.kind,
+             "ops": [i.op for i in g.instructions],
+             "decision": g.decision}
+            for g in self.groups]
+        return report
 
     def run(self, array, backend: str | None = None,
             interpret: bool | None = None):
@@ -117,18 +164,66 @@ class FusionPlan:
                                   interpret=interpret)
 
 
-def schedule(prog: CPMProgram) -> FusionPlan:
-    """Greedy linear partition: maximal fusable runs, reductions as walls."""
+def _device_geometry(device) -> tuple[int, int, int]:
+    """(rows, n, itemsize) of anything CPMArray-shaped."""
+    lead = device.batch_shape
+    rows = math.prod(lead) if lead else 1
+    return rows, device.n, device.data.dtype.itemsize
+
+
+def schedule(prog: CPMProgram, device=None, *, backend: str | None = None,
+             interpret: bool | None = None, cost=None) -> FusionPlan:
+    """Greedy linear partition: maximal fusable runs, reductions as walls.
+
+    With ``device`` (a ``CPMArray``) the partition is cost-aware: each
+    fusable run fuses only when the launch/byte model predicts the single
+    mega-kernel launch beats eager per-op dispatch on that backend —
+    otherwise the run becomes an ``eager`` group (identical per-op
+    execution, decision recorded).  ``backend`` / ``interpret`` default to
+    the device's own; ``cost`` accepts an explicit
+    :class:`~repro.cpm.program.costmodel.CostParams` (tests, what-if
+    scheduling) instead of the calibrated/roofline coefficients.
+
+    Without ``device``, every fusable run fuses — the PR-4 launch-bound
+    default, and the only safe answer with no geometry to price.
+    """
+    params = None
+    geometry = None
+    lead, dtype, itp = (), None, None
+    if device is not None or cost is not None:
+        from . import costmodel            # circular at module load time
+        bk = backend or (device.backend if device is not None else "pallas")
+        if bk == "auto" and device is not None:
+            from .. import backends as B
+            bk = B.auto_backend_name(device.data)   # same rule as run_plan
+        if bk == "pallas":
+            if device is not None:
+                geometry = _device_geometry(device)
+                lead, dtype = device.batch_shape, device.data.dtype
+                from repro.kernels.cpm_kernels import resolve_interpret
+                itp = resolve_interpret(interpret if interpret is not None
+                                        else device.interpret)
+            if geometry is not None:
+                params = cost if cost is not None \
+                    else costmodel.params_for(itp)
+
     fus = fusable_ops()
     groups: list[FusionGroup] = []
     run: list[int] = []
 
     def flush():
-        if run:
-            groups.append(FusionGroup(
-                "fused", tuple(run),
-                tuple(prog.instructions[i] for i in run)))
-            run.clear()
+        if not run:
+            return
+        instrs = tuple(prog.instructions[i] for i in run)
+        kind, decision = "fused", None
+        if params is not None:
+            rows, n, itemsize = geometry
+            decision = costmodel.decide(instrs, rows, n, itemsize, params,
+                                        lead=lead, dtype=dtype,
+                                        interpret=itp)
+            kind = "fused" if decision["fuse"] else "eager"
+        groups.append(FusionGroup(kind, tuple(run), instrs, decision))
+        run.clear()
 
     for i, ins in enumerate(prog.instructions):
         if ins.op in fus:

@@ -41,9 +41,11 @@ Kernels:
                           in scalar-prefetch so each grid step DMAs exactly
                           one (1, N) page between HBM rows and VMEM.
 
-All take ``interpret=`` so the CPU container executes the kernel bodies for
-validation; on TPU pass interpret=False.  These kernels are the ``pallas``
-backend of ``repro.cpm`` — prefer driving them through ``CPMArray``.
+All take ``interpret=`` with a ``None`` = auto default — compiled on TPU,
+Pallas interpreter elsewhere — the same rule ``CPMArray`` applies, so a
+kernel called directly on a real TPU never silently runs interpreted.
+These kernels are the ``pallas`` backend of ``repro.cpm`` — prefer driving
+them through ``CPMArray``.
 """
 
 from __future__ import annotations
@@ -55,6 +57,15 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """The one interpret auto rule (shared with ``CPMArray`` and
+    ``PallasBackend``): run kernel bodies compiled on TPU, under the Pallas
+    interpreter everywhere else.  ``None`` means auto."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -75,7 +86,7 @@ def _activate_kernel(p_ref, o_ref, *, n: int):
 
 
 @functools.partial(jax.jit, static_argnames=("n", "interpret"))
-def activate(n: int, start, end, carry=1, *, interpret: bool = True) -> jax.Array:
+def activate(n: int, start, end, carry=1, *, interpret: bool | None = None) -> jax.Array:
     """Rule-4 activation mask of length ``n`` as one VPU predicate cycle."""
     params = jnp.stack([jnp.asarray(start, jnp.int32),
                         jnp.asarray(end, jnp.int32),
@@ -85,7 +96,7 @@ def activate(n: int, start, end, carry=1, *, interpret: bool = True) -> jax.Arra
         in_specs=[pl.BlockSpec(memory_space=pltpu.VMEM)],
         out_specs=pl.BlockSpec(memory_space=pltpu.VMEM),
         out_shape=jax.ShapeDtypeStruct((1, n), jnp.int8),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(params)
     return out[0].astype(bool)
 
@@ -120,7 +131,7 @@ def _shift_range_kernel(x_ref, p_ref, f_ref, o_ref, *, n: int, shift: int,
 
 @functools.partial(jax.jit, static_argnames=("shift", "interpret"))
 def shift_range(x: jax.Array, start, end, shift: int = 1, fill=None, *,
-                interpret: bool = True) -> jax.Array:
+                interpret: bool | None = None) -> jax.Array:
     """Move the [start, end] range of every (R, N) row by ``shift`` places.
 
     Same semantics as ``repro.cpm.reference.movable.shift_range`` — vacated
@@ -140,7 +151,7 @@ def shift_range(x: jax.Array, start, end, shift: int = 1, fill=None, *,
                   pl.BlockSpec((1, 1), lambda i: (0, 0))],
         out_specs=pl.BlockSpec((1, n), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((r, n), x.dtype),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(x, params, fill_arr)
 
 
@@ -164,7 +175,7 @@ def _oddeven_kernel(x_ref, o_ref, *, n: int, steps: int):
 
 @functools.partial(jax.jit, static_argnames=("steps", "interpret"))
 def oddeven_sort(x: jax.Array, steps: int | None = None, *,
-                 interpret: bool = True) -> jax.Array:
+                 interpret: bool | None = None) -> jax.Array:
     """Row-wise ascending sort of (R, N): N odd-even cycles in VMEM."""
     r, n = x.shape
     steps = n if steps is None else steps
@@ -174,7 +185,7 @@ def oddeven_sort(x: jax.Array, steps: int | None = None, *,
         in_specs=[pl.BlockSpec((1, n), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((1, n), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((r, n), x.dtype),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(x)
 
 
@@ -217,7 +228,7 @@ def _section_sum_kernel(x_ref, o_ref, acc_ref):
 
 @functools.partial(jax.jit, static_argnames=("section", "interpret"))
 def section_sum(x: jax.Array, section: int = 1024, *,
-                interpret: bool = True) -> jax.Array:
+                interpret: bool | None = None) -> jax.Array:
     """Two-phase sum of every ``(..., N)`` row; section = VMEM block size.
 
     ONE kernel launch for any batch shape: the grid is (rows, sections)
@@ -235,7 +246,7 @@ def section_sum(x: jax.Array, section: int = 1024, *,
         out_specs=pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((r, 1), acc_dtype),
         scratch_shapes=[pltpu.VMEM((1, 1), acc_dtype)],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(xs)
     return unflatten(out).astype(jnp.promote_types(x.dtype, acc_dtype))
 
@@ -260,7 +271,7 @@ def _compare_kernel(x_ref, d_ref, o_ref, *, op: str):
 
 @functools.partial(jax.jit, static_argnames=("op", "interpret"))
 def compare(x: jax.Array, datum, op: str = "eq", *,
-            interpret: bool = True) -> jax.Array:
+            interpret: bool | None = None) -> jax.Array:
     """(R, N) rows vs a broadcast datum: one concurrent VPU compare.
 
     Mixed dtypes promote (never truncate toward ``x.dtype``): comparing int
@@ -277,7 +288,7 @@ def compare(x: jax.Array, datum, op: str = "eq", *,
                   pl.BlockSpec((1, 1), lambda i: (0, 0))],
         out_specs=pl.BlockSpec((1, n), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((r, n), jnp.int8),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(x, d)
     return out.astype(bool)
 
@@ -302,7 +313,7 @@ def _histogram_kernel(x_ref, e_ref, o_ref, acc_ref, *, m: int):
 
 @functools.partial(jax.jit, static_argnames=("section", "interpret"))
 def histogram(x: jax.Array, edges: jax.Array, section: int = 1024, *,
-              interpret: bool = True) -> jax.Array:
+              interpret: bool | None = None) -> jax.Array:
     """(..., N) values x (M+1,) ascending edges -> (..., M) per-row counts
     (§6.3, ~M compare+count cycles).
 
@@ -325,7 +336,7 @@ def histogram(x: jax.Array, edges: jax.Array, section: int = 1024, *,
         out_specs=pl.BlockSpec((1, m), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((r, m), jnp.int32),
         scratch_shapes=[pltpu.VMEM((1, m), jnp.int32)],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(xs, edges.reshape(1, m + 1))
     return out.reshape(*x.shape[:-1], m)
 
@@ -354,7 +365,7 @@ def _section_limit_kernel(x_ref, o_ref, acc_ref, *, mode: str, init):
 
 @functools.partial(jax.jit, static_argnames=("section", "mode", "interpret"))
 def section_limit(x: jax.Array, section: int = 1024, mode: str = "max", *,
-                  interpret: bool = True) -> jax.Array:
+                  interpret: bool | None = None) -> jax.Array:
     """Two-phase max/min of every ``(..., N)`` row (§7.5).
 
     Same batched (rows, sections) grid as :func:`section_sum`: one launch,
@@ -376,7 +387,7 @@ def section_limit(x: jax.Array, section: int = 1024, mode: str = "max", *,
         out_specs=pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((r, 1), acc_dtype),
         scratch_shapes=[pltpu.VMEM((1, 1), acc_dtype)],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(xs)
     return unflatten(out).astype(x.dtype)
 
@@ -436,14 +447,14 @@ def _super_reduce(x: jax.Array, section: int, mode: str, *, interpret: bool):
         out_specs=pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((r, 1), acc_dtype),
         scratch_shapes=[pltpu.VMEM((1, nsec), acc_dtype)],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(xs)
     return unflatten(out)
 
 
 @functools.partial(jax.jit, static_argnames=("section", "interpret"))
 def super_sum(x: jax.Array, section: int = 1024, *,
-              interpret: bool = True) -> jax.Array:
+              interpret: bool | None = None) -> jax.Array:
     """§8 super-connected sum of every ``(..., N)`` row: sectioned phase 1,
     log-depth tree phase 2 (~2·log2(N) concurrent steps instead of ~2·√N).
     Same result as :func:`section_sum` (bit-identical for ints)."""
@@ -453,7 +464,7 @@ def super_sum(x: jax.Array, section: int = 1024, *,
 
 @functools.partial(jax.jit, static_argnames=("section", "mode", "interpret"))
 def super_limit(x: jax.Array, section: int = 1024, mode: str = "max", *,
-                interpret: bool = True) -> jax.Array:
+                interpret: bool | None = None) -> jax.Array:
     """§8 super-connected max/min of every ``(..., N)`` row (log-depth
     phase 2).  Same result as :func:`section_limit`."""
     return _super_reduce(x, section, mode, interpret=interpret).astype(x.dtype)
@@ -466,10 +477,13 @@ def super_limit(x: jax.Array, section: int = 1024, mode: str = "max", *,
 def _sad_vals(x_f32, t_row, m: int):
     """§7.6 sliding-SAD accumulation on a resident float32 block (shared by
     the standalone kernel and the fused instruction stream); ``t_row`` is a
-    (1, M) template ref/array."""
+    (1, M) broadcast or (BR, M) per-row template ref/array."""
+    t = t_row[...]
+
     def body(j, acc):
         shifted = jnp.roll(x_f32, -j, axis=-1)
-        return acc + jnp.abs(shifted - t_row[0, j].astype(jnp.float32))
+        tap = jax.lax.dynamic_slice_in_dim(t, j, 1, axis=1)  # (rows, 1)
+        return acc + jnp.abs(shifted - tap.astype(jnp.float32))
 
     return jax.lax.fori_loop(0, m, body, jnp.zeros_like(x_f32))
 
@@ -480,7 +494,7 @@ def _template_kernel(x_ref, t_ref, o_ref, *, m: int):
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def template_match(data: jax.Array, template: jax.Array, *,
-                   interpret: bool = True) -> jax.Array:
+                   interpret: bool | None = None) -> jax.Array:
     """(R, N) x (M,) -> (R, N) SAD at every start position (wrapping tail)."""
     r, n = data.shape
     m = template.shape[-1]
@@ -491,7 +505,7 @@ def template_match(data: jax.Array, template: jax.Array, *,
                   pl.BlockSpec((1, m), lambda i: (0, 0))],
         out_specs=pl.BlockSpec((1, n), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((r, n), jnp.float32),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(data, template.reshape(1, -1))
 
 
@@ -502,11 +516,14 @@ def template_match(data: jax.Array, template: jax.Array, *,
 def _substring_ends_vals(x, nee_row, m: int, idx):
     """§5 match-END carry chain on a resident block (shared by the
     standalone kernel and the fused instruction stream); ``nee_row`` is a
-    (1, M) needle ref/array.  Returns int32 0/1 flags."""
+    (1, M) broadcast or (BR, M) per-row needle ref/array.  Returns int32
+    0/1 flags."""
     first = idx == 0
+    nee = nee_row[...]
 
     def body(i, state):
-        hit = (x == nee_row[0, i]).astype(jnp.int32)
+        sym = jax.lax.dynamic_slice_in_dim(nee, i, 1, axis=1)  # (rows, 1)
+        hit = (x == sym).astype(jnp.int32)
         shifted = jnp.where(first, 0, jnp.roll(state, 1, axis=-1))
         return jnp.where(i == 0, hit, hit * shifted)
 
@@ -521,7 +538,7 @@ def _substring_kernel(x_ref, nee_ref, o_ref, *, m: int, n: int):
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def substring_match(hay: jax.Array, needle: jax.Array, *,
-                    interpret: bool = True) -> jax.Array:
+                    interpret: bool | None = None) -> jax.Array:
     """(R, N) int rows x (M,) needle -> (R, N) int8 match-end flags."""
     r, n = hay.shape
     m = needle.shape[-1]
@@ -532,7 +549,7 @@ def substring_match(hay: jax.Array, needle: jax.Array, *,
                   pl.BlockSpec((1, m), lambda i: (0, 0))],
         out_specs=pl.BlockSpec((1, n), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((r, n), jnp.int8),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(hay, needle.reshape(1, -1))
 
 
@@ -566,7 +583,7 @@ def _stencil_vals(x, idx, taps: tuple[float, ...], wrap: bool, n: int):
 
 @functools.partial(jax.jit, static_argnames=("taps", "wrap", "interpret"))
 def stencil(x: jax.Array, taps: tuple[float, ...], *, wrap: bool = True,
-            interpret: bool = True) -> jax.Array:
+            interpret: bool | None = None) -> jax.Array:
     """(R, N) rows filtered by an odd-length tap vector.
 
     ``wrap=True`` keeps the historical ring semantics (row ends wrap);
@@ -580,7 +597,7 @@ def stencil(x: jax.Array, taps: tuple[float, ...], *, wrap: bool = True,
         in_specs=[pl.BlockSpec((1, n), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((1, n), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((r, n), jnp.float32),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(x)
 
 
@@ -618,7 +635,7 @@ def _compact_kernel(x_ref, k_ref, f_ref, o_ref, l_ref, *, n: int):
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def compact(x: jax.Array, keep: jax.Array, fill=0, *,
-            interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+            interpret: bool | None = None) -> tuple[jax.Array, jax.Array]:
     """Stable §4.2 pack of every (R, N) row: kept lanes move to the front
     (order preserved), vacated lanes take ``fill``.  Returns
     ``(compacted (R, N), new_len (R,))``.  ~2·log2(N) concurrent steps —
@@ -635,7 +652,7 @@ def compact(x: jax.Array, keep: jax.Array, fill=0, *,
                    pl.BlockSpec((1, 1), lambda i: (i, 0))],
         out_shape=[jax.ShapeDtypeStruct((r, n), x.dtype),
                    jax.ShapeDtypeStruct((r, 1), jnp.int32)],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(x, keep.astype(jnp.int32), fill_arr)
     return out, nl[:, 0]
 
@@ -651,7 +668,7 @@ def _copy_row_kernel(idx_ref, x_ref, o_ref):
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def gather_rows(x: jax.Array, idx: jax.Array, *,
-                interpret: bool = True) -> jax.Array:
+                interpret: bool | None = None) -> jax.Array:
     """(R, N) bank x (K,) page indices -> (K, N) gathered rows.
 
     The index vector rides in scalar-prefetch, so each grid step's BlockSpec
@@ -668,7 +685,7 @@ def gather_rows(x: jax.Array, idx: jax.Array, *,
         _copy_row_kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((k, n), x.dtype),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(idx.astype(jnp.int32), x)
 
 
@@ -679,7 +696,7 @@ def _scatter_row_kernel(inv_ref, d_ref, s_ref, o_ref):
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def scatter_rows(dst: jax.Array, idx: jax.Array, src: jax.Array, *,
-                 interpret: bool = True) -> jax.Array:
+                 interpret: bool | None = None) -> jax.Array:
     """Write ``src`` (K, N) rows into ``dst`` (R, N) at row indices ``idx``
     (K unique pages); untouched rows keep their content.
 
@@ -702,7 +719,7 @@ def scatter_rows(dst: jax.Array, idx: jax.Array, src: jax.Array, *,
         _scatter_row_kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((r, n), dst.dtype),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(inv, dst, src)
 
 
@@ -723,42 +740,46 @@ _FUSED_TRANSFORMS = ("shift", "insert", "delete", "truncate")
 
 
 def _fused_apply(op: str, statics, x, ul, refs, idx, n: int):
-    """Execute one broadcast instruction on the resident (1, N) block.
+    """Execute one broadcast instruction on the resident (BR, N) block.
 
-    ``x`` is the live buffer block, ``ul`` the §4.2 used-length register —
-    both stay in VMEM across the whole group.  Returns ``(x, ul, produced)``
-    with ``produced`` None for buffer transforms.  Each branch mirrors the
-    corresponding eager lowering exactly (same op order, same dtypes), so
-    the fused stream is bit-identical to per-op dispatch.
+    ``x`` is the live buffer block, ``ul`` the §4.2 used-length register
+    (a (BR, 1) column) — both stay in VMEM across the whole group.  Every
+    dynamic operand ref is read as a column slice ``ref[:, j:j+1]`` whose
+    row count is 1 (broadcast) or BR (per-row), so the same body serves
+    any row blocking.  Returns ``(x, ul, produced)`` with ``produced``
+    None for buffer transforms.  Each branch mirrors the corresponding
+    eager lowering exactly (same op order, same dtypes), so the fused
+    stream is bit-identical to per-op dispatch.
     """
     s = dict(statics)
     live = idx < ul
     if op == "activate":
         p = refs[0][...]
-        mask = _activate_vals(idx, p[0, 0], p[0, 1], p[0, 2])
-        return x, ul, mask.astype(jnp.int8)
+        mask = _activate_vals(idx, p[:, 0:1], p[:, 1:2], p[:, 2:3])
+        return x, ul, jnp.broadcast_to(mask, x.shape).astype(jnp.int8)
     if op == "shift":
         se = refs[0][...]
-        fill = refs[1][0, 0] if s["has_fill"] else None
-        return (_shift_vals(x, idx, se[0, 0], se[0, 1], s["shift"], n, fill),
+        fill = refs[1][:, 0:1] if s["has_fill"] else None
+        return (_shift_vals(x, idx, se[:, 0:1], se[:, 1:2], s["shift"], n,
+                            fill),
                 ul, None)
     if op == "insert":
-        pos, v, k = refs[0][0, 0], refs[1], s["k"]
+        pos, v, k = refs[0][:, 0:1], refs[1][...], s["k"]
         x = _shift_vals(x, idx, pos, ul - 1, k, n)
         for j in range(k):              # §4.2 broadcast write, unrolled
-            x = jnp.where(idx == pos + j, v[0, j], x)
+            x = jnp.where(idx == pos + j, v[:, j:j + 1], x)
         return x, jnp.minimum(ul + k, n), None
     if op == "delete":
-        pos, fill, k = refs[0][0, 0], refs[1][0, 0], s["k"]
+        pos, fill, k = refs[0][:, 0:1], refs[1][:, 0:1], s["k"]
         x = _shift_vals(x, idx, pos + k, ul - 1, -k, n)
         x = jnp.where((idx >= ul - k) & (idx < ul), fill, x)
         return x, jnp.maximum(ul - k, 0), None
     if op == "truncate":
-        return x, jnp.minimum(ul, refs[0][0, 0]), None
+        return x, jnp.minimum(ul, refs[0][:, 0:1]), None
     if op == "compare":
-        d = refs[0][0, 0]
+        d = refs[0][:, 0:1]
         if s["has_mask"]:
-            m = refs[1][0, 0]
+            m = refs[1][:, 0:1]
             a, b = x & m, d & m
         else:
             a, b = x.astype(jnp.dtype(s["ct"])), d
@@ -783,9 +804,10 @@ def _fused_apply(op: str, statics, x, ul, refs, idx, n: int):
     raise NotImplementedError(f"fused instruction {op!r}")
 
 
-@functools.partial(jax.jit, static_argnames=("instrs", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("instrs", "block_r", "interpret"))
 def fused_stream(x: jax.Array, used_len: jax.Array, instrs, operands, *,
-                 interpret: bool = True):
+                 block_r: int = 1, interpret: bool | None = None):
     """Execute a fused instruction group in ONE kernel launch.
 
     ``x``: (R, N) device rows; ``used_len``: (R,) §4.2 length registers.
@@ -795,16 +817,30 @@ def fused_stream(x: jax.Array, used_len: jax.Array, instrs, operands, *,
     from it); ``operands``: the matching dynamic operand arrays, each
     ``(R, k)`` per-row or ``(1, k)`` broadcast.
 
-    The row block and its length register load into VMEM once; every
-    instruction reads/writes them there — the Pallas realization of the
-    paper's "broadcast the stream, execute in memory" (§3–§4).  Returns
-    ``(rows, used_lens, producer_outputs)``.
+    ``block_r`` rows load into VMEM per grid step (the autotuned knob —
+    the executor picks it from the tuning cache); rows pad up to a
+    multiple and the pad rows are sliced off on return, so any ``block_r``
+    is bit-identical to ``block_r=1``.  The row block and its length
+    register stay resident across every instruction — the Pallas
+    realization of the paper's "broadcast the stream, execute in memory"
+    (§3–§4).  Returns ``(rows, used_lens, producer_outputs)``.
     """
     r, n = x.shape
     counts = [nops for _, _, nops in instrs]
     assert len(operands) == sum(counts), (len(operands), counts)
     prod_dts = [FUSED_PRODUCERS[op] for op, _, _ in instrs
                 if op in FUSED_PRODUCERS]
+
+    br = max(1, min(int(block_r), r))
+    pad = (-r) % br
+    ul2 = used_len.reshape(r, 1)
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+        ul2 = jnp.pad(ul2, ((0, pad), (0, 0)))
+        operands = tuple(
+            jnp.pad(a, ((0, pad), (0, 0))) if a.shape[0] == r else a
+            for a in operands)
+    rp = r + pad
 
     def kernel(*refs):
         x_ref, ul_ref = refs[0], refs[1]
@@ -817,8 +853,8 @@ def fused_stream(x: jax.Array, used_len: jax.Array, instrs, operands, *,
         prod_refs = refs[pos + 2:]
 
         xv = x_ref[...]
-        ul = ul_ref[0, 0]
-        idx = jax.lax.broadcasted_iota(jnp.int32, (1, n), 1)
+        ul = ul_ref[...]                           # (br, 1) length column
+        idx = jax.lax.broadcasted_iota(jnp.int32, (br, n), 1)
         pi = 0
         for (op, statics, _), orefs in zip(instrs, op_refs):
             xv, ul, out = _fused_apply(op, statics, xv, ul, orefs, idx, n)
@@ -826,29 +862,29 @@ def fused_stream(x: jax.Array, used_len: jax.Array, instrs, operands, *,
                 prod_refs[pi][...] = out
                 pi += 1
         o_x[...] = xv
-        o_ul[...] = jnp.asarray(ul, jnp.int32).reshape(1, 1)
+        o_ul[...] = jnp.broadcast_to(jnp.asarray(ul, jnp.int32), (br, 1))
 
     def _spec(rows, k):
-        if rows == 1 and r != 1:
+        if rows == 1 and rp != 1:
             return pl.BlockSpec((1, k), lambda i: (0, 0))
-        return pl.BlockSpec((1, k), lambda i: (i, 0))
+        return pl.BlockSpec((br, k), lambda i: (i, 0))
 
-    in_specs = [pl.BlockSpec((1, n), lambda i: (i, 0)),
-                pl.BlockSpec((1, 1), lambda i: (i, 0))]
+    in_specs = [pl.BlockSpec((br, n), lambda i: (i, 0)),
+                pl.BlockSpec((br, 1), lambda i: (i, 0))]
     in_specs += [_spec(*a.shape) for a in operands]
-    out_specs = ([pl.BlockSpec((1, n), lambda i: (i, 0)),
-                  pl.BlockSpec((1, 1), lambda i: (i, 0))]
-                 + [pl.BlockSpec((1, n), lambda i: (i, 0))
+    out_specs = ([pl.BlockSpec((br, n), lambda i: (i, 0)),
+                  pl.BlockSpec((br, 1), lambda i: (i, 0))]
+                 + [pl.BlockSpec((br, n), lambda i: (i, 0))
                     for _ in prod_dts])
-    out_shape = ([jax.ShapeDtypeStruct((r, n), x.dtype),
-                  jax.ShapeDtypeStruct((r, 1), jnp.int32)]
-                 + [jax.ShapeDtypeStruct((r, n), dt) for dt in prod_dts])
+    out_shape = ([jax.ShapeDtypeStruct((rp, n), x.dtype),
+                  jax.ShapeDtypeStruct((rp, 1), jnp.int32)]
+                 + [jax.ShapeDtypeStruct((rp, n), dt) for dt in prod_dts])
     out = pl.pallas_call(
         kernel,
-        grid=(r,),
+        grid=(rp // br,),
         in_specs=in_specs,
         out_specs=out_specs,
         out_shape=out_shape,
-        interpret=interpret,
-    )(x, used_len.reshape(r, 1), *operands)
-    return out[0], out[1][:, 0], list(out[2:])
+        interpret=resolve_interpret(interpret),
+    )(x, ul2, *operands)
+    return out[0][:r], out[1][:r, 0], [o[:r] for o in out[2:]]

@@ -14,10 +14,13 @@ sequence (paper ops in parentheses):
 Steps 2–3 on the *token buffer* are expressed here as a two-instruction
 ``CPMProgram`` (``insert`` then ``truncate`` — append the whole round's
 predictions, then roll back to the accepted prefix; the §4.2 length
-register makes the rollback free).  The fusing scheduler lowers the pair
-to ONE ``fused_stream`` mega-kernel on the pallas backend, so a commit
-round is a single launch instead of per-op dispatch — the instruction-
-stream discipline applied to a real serving path.
+register makes the rollback free).  The stream is scheduled
+*cost-aware*: on the pallas backend the launch/byte model
+(``repro.cpm.program.costmodel``) decides per commit whether the pair
+runs as ONE ``fused_stream`` mega-kernel launch (launch-bound regimes —
+compiled TPU) or as per-op dispatch (interpreter/CPU hosts, where eager
+ops jit-fuse for free and the mega-kernel only adds overhead).  Either
+way the instructions — and the committed tokens — are identical.
 
 Token-identity with the legacy scatter commit is enforced by
 ``tests/test_engine_equiv.py`` (engine vs step-by-step oracle) and
@@ -43,6 +46,10 @@ def record_commit_program(buf, used, preds, emit_n,
     ``with cpm.record(): dev.insert(used, preds).truncate(used + emit_n)``
     would trace, but the hot path must not pay the tracer's eager
     reference execution on every non-jit call.
+
+    Scheduling is cost-aware (the device geometry is known here), so the
+    plan's group is ``fused`` or ``eager`` per the backend's calibrated
+    launch/byte model rather than hardcoded — see the module docstring.
     """
     used = jnp.asarray(used, jnp.int32)
     dev = CPMArray(jnp.asarray(buf), used, backend=backend,
@@ -50,7 +57,8 @@ def record_commit_program(buf, used, preds, emit_n,
     prog = CPMProgram() \
         .append("insert", pos=used, values=preds) \
         .append("truncate", new_len=used + emit_n)
-    return dev, schedule(prog)
+    return dev, schedule(prog, device=dev, backend=backend,
+                         interpret=interpret)
 
 
 def commit_tokens(buf, used, preds, emit_n, backend: str = "reference",
