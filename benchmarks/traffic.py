@@ -1,0 +1,103 @@
+"""Arrival traces for serving benchmarks: Poisson, bursty, diurnal.
+
+Time is the pool's **virtual decode-step clock** (deterministic,
+machine-independent), not wall seconds: an arrival at step t means the
+request reaches the gateway once the pool has executed t decode steps.
+All generators are seeded ``np.random.Generator`` draws — the same seed
+always produces the same trace, so two admission policies replay
+byte-identical workloads.
+
+Requests carry a prompt length drawn from a small set (so same-length
+bucketing has something to batch, as real tokenizer-bucketed traffic
+does) and a token budget (short interactive vs long background).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Trace:
+    """One replayable workload: per-request arrival step, prompt length,
+    and token budget (arrivals sorted non-decreasing)."""
+    name: str
+    arrivals: np.ndarray               # (n,) int64 decode-step times
+    lens: np.ndarray                   # (n,) prompt lengths
+    budgets: np.ndarray                # (n,) max_new_tokens
+
+    def __post_init__(self):
+        assert (np.diff(self.arrivals) >= 0).all(), "arrivals must sort"
+        assert len(self.arrivals) == len(self.lens) == len(self.budgets)
+
+    def __len__(self) -> int:
+        return len(self.arrivals)
+
+
+def _finalize(name, arrivals, lens, budgets) -> Trace:
+    order = np.argsort(arrivals, kind="stable")
+    return Trace(name=name,
+                 arrivals=np.asarray(arrivals, np.int64)[order],
+                 lens=np.asarray(lens, np.int64)[order],
+                 budgets=np.asarray(budgets, np.int64)[order])
+
+
+def _shapes(rng, n, len_choices, budget_choices):
+    lens = rng.choice(np.asarray(len_choices), size=n)
+    budgets = rng.choice(np.asarray(budget_choices), size=n)
+    return lens, budgets
+
+
+def poisson_trace(n: int = 32, rate: float = 0.5, seed: int = 0,
+                  len_choices=(6, 8, 10), budget_choices=(3, 4, 6)) -> Trace:
+    """Memoryless arrivals: exponential inter-arrival gaps with mean
+    ``1/rate`` requests per decode step, floored onto the step grid."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.floor(np.cumsum(rng.exponential(1.0 / rate, n)))
+    lens, budgets = _shapes(rng, n, len_choices, budget_choices)
+    return _finalize(f"poisson(rate={rate})", arrivals, lens, budgets)
+
+
+def bursty_trace(incumbents: int = 4, long_budget: int = 24,
+                 n_bursts: int = 3, burst: int = 8, gap: int = 12,
+                 start: int = 4, seed: int = 0, burst_len_choices=(6, 8),
+                 burst_budget: int = 3, incumbent_len: int = 8) -> Trace:
+    """The preemption stress shape: ``incumbents`` long-budget background
+    requests arrive at t=0 and squat every slot; then ``n_bursts`` bursts
+    of ``burst`` short interactive requests land every ``gap`` steps.
+    Without preemption the bursts wait out the incumbents (p99 TTFT
+    explodes); with LRU parking they cut in."""
+    rng = np.random.default_rng(seed)
+    arrivals = [0] * incumbents
+    lens = [incumbent_len] * incumbents
+    budgets = [long_budget] * incumbents
+    for b in range(n_bursts):
+        t = start + b * gap
+        arrivals += [t] * burst
+        lens += list(rng.choice(np.asarray(burst_len_choices), size=burst))
+        budgets += [burst_budget] * burst
+    return _finalize(
+        f"bursty({incumbents}x{long_budget}+{n_bursts}x{burst})",
+        arrivals, lens, budgets)
+
+
+def diurnal_trace(n: int = 48, period: int = 32, peak_rate: float = 1.0,
+                  trough_rate: float = 0.1, seed: int = 0,
+                  len_choices=(6, 8, 10), budget_choices=(3, 4, 6)) -> Trace:
+    """Inhomogeneous Poisson with a sinusoidal day/night rate: per-step
+    counts drawn at rate(t) = trough + (peak-trough)·(1+sin(2πt/T))/2
+    until ``n`` requests exist — rush hours batch admissions, quiet
+    hours drain the backlog."""
+    rng = np.random.default_rng(seed)
+    arrivals = []
+    t = 0
+    while len(arrivals) < n:
+        rate = trough_rate + (peak_rate - trough_rate) * (
+            1 + np.sin(2 * np.pi * t / period)) / 2
+        arrivals += [t] * int(rng.poisson(rate))
+        t += 1
+    arrivals = np.asarray(arrivals[:n])
+    lens, budgets = _shapes(rng, n, len_choices, budget_choices)
+    return _finalize(f"diurnal(T={period})", arrivals, lens, budgets)

@@ -124,13 +124,35 @@ def _residency(data) -> str:
         return jax.default_backend()
 
 
-def auto_backend_name(data) -> str:
+def pallas_min_n(op: str | None = None) -> int:
+    """Minimum last-axis length for auto routing to pallas.
+
+    Consults the shared tuning cache for a *measured* reference/pallas
+    crossover — ``xover:<op>:<backend_key>`` entries written by the
+    ``cpm_ops`` benchmark's crossover sweep (per-op first, then the
+    ``*`` pooled entry) — and falls back to the static
+    :data:`PALLAS_MIN_N` when nothing was measured on this backend.
+    Small-N arrays thereby route to reference instead of paying pallas
+    launch overhead, with the threshold grounded in timings rather than
+    folklore."""
+    from .. import tuning
+    bk = tuning.backend_key(False)
+    for key in ([f"xover:{op}:{bk}"] if op else []) + [f"xover:*:{bk}"]:
+        n = tuning.lookup(key)
+        if n is not None:
+            return int(n)
+    return PALLAS_MIN_N
+
+
+def auto_backend_name(data, op: str | None = None) -> str:
     """The ``backend="auto"`` policy, defined once: Pallas when the array
-    lives on a TPU and the row is long enough to amortize a kernel launch,
-    reference otherwise.  Shared by per-op ``resolve`` and the program
-    executor (``repro.cpm.program.executors``) so eager dispatch and plan
+    lives on a TPU and the row is long enough to amortize a kernel launch
+    (threshold per :func:`pallas_min_n` — measured crossover when the
+    tuning cache has one), reference otherwise.  Shared by per-op
+    ``resolve`` and the program executor
+    (``repro.cpm.program.executors``) so eager dispatch and plan
     execution can never pick different backends for the same array."""
-    if _residency(data) == "tpu" and data.shape[-1] >= PALLAS_MIN_N:
+    if _residency(data) == "tpu" and data.shape[-1] >= pallas_min_n(op):
         return "pallas"
     return "reference"
 
@@ -145,7 +167,7 @@ def resolve(requested: str, op: str, data, *, interpret=None) -> Backend:
     the backend was forced.
     """
     if requested == "auto":
-        if (auto_backend_name(data) == "pallas"
+        if (auto_backend_name(data, op) == "pallas"
                 and "pallas" in OP_TABLE[op].backends):
             # honor an explicit interpret hint (debugging); default compiled
             return get_backend("pallas",

@@ -16,11 +16,11 @@ The serving integration — continuous batching over pooled KV pages — is
 from .allocator import FREE, USED, OracleAllocator, SlotAllocator
 from .bank import CPMBank
 from .scheduler import MultiBankScheduler
-from .sessions import ACTIVE, DONE, WAITING, Session, SessionTable
+from .sessions import ACTIVE, DONE, PARKED, WAITING, Session, SessionTable
 
 __all__ = [
     "CPMBank",
     "SlotAllocator", "OracleAllocator", "FREE", "USED",
     "MultiBankScheduler",
-    "SessionTable", "Session", "WAITING", "ACTIVE", "DONE",
+    "SessionTable", "Session", "WAITING", "ACTIVE", "PARKED", "DONE",
 ]

@@ -1,10 +1,15 @@
 """Host-side session registry for the pool: lifecycle, placement, FIFO.
 
 Sessions are the pool's unit of admission: a prompt plus a token budget,
-moving ``WAITING -> ACTIVE -> DONE``.  The table is deliberately plain
-Python — placement decisions are host decisions — while everything the
-sessions *own* (token pages, KV rows, slot metadata) lives device-side in
-the banks and the allocator.  The table never touches device memory.
+moving ``WAITING -> ACTIVE -> DONE`` — with a ``PARKED`` detour when the
+serving gateway preempts an active session (its pages are saved to a
+host-side parking buffer and the session re-queues FIFO for a later
+restore; see ``repro.serve.gateway.preempt``).  The table is deliberately
+plain Python — placement decisions are host decisions — while everything
+the sessions *own* (token pages, KV rows, slot metadata) lives device-side
+in the banks and the allocator.  The table never touches device memory
+(a parked session's page image is held by the session object, not the
+table).
 """
 
 from __future__ import annotations
@@ -14,6 +19,7 @@ from typing import Any
 
 WAITING = "waiting"
 ACTIVE = "active"
+PARKED = "parked"
 DONE = "done"
 
 
@@ -28,6 +34,11 @@ class Session:
     slot: int = -1                     # global slot id
     emitted: int = 0
     tokens: Any = None                 # final (s + emitted,) output when DONE
+    gen: Any = None                    # per-request GenConfig (sampling params)
+    parked: Any = None                 # host PageState while PARKED
+    parks: int = 0                     # times preempted
+    admit_step: int = -1               # pool.decode_steps at last (re-)admission
+    first_admit_step: int = -1         # ... at FIRST admission (TTFT anchor)
 
     @property
     def finished(self) -> bool:
@@ -59,13 +70,31 @@ class SessionTable:
     def next_waiting(self) -> Session | None:
         return self._sessions[self._queue[0]] if self._queue else None
 
+    def peek_waiting(self, k: int) -> list[Session]:
+        """First ``k`` queued sessions in FIFO order (WAITING and PARKED
+        interleaved as they arrived / were parked) — the admission
+        planner's window."""
+        return [self._sessions[sid] for sid in self._queue[:k]]
+
     def activate(self, sid: int, bank: int, slot: int) -> Session:
         s = self._sessions[sid]
-        assert s.phase == WAITING and self._queue[0] == sid, \
-            f"session {sid} is not the queue head"
-        self._queue.pop(0)
+        assert s.phase in (WAITING, PARKED), \
+            f"session {sid} is {s.phase}, not admissible"
+        assert sid in self._queue, f"session {sid} is not queued"
+        self._queue.remove(sid)
         s.phase, s.bank, s.slot = ACTIVE, bank, slot
         self._by_slot[slot] = sid
+        return s
+
+    def park(self, sid: int) -> Session:
+        """ACTIVE -> PARKED: the session loses its slot and re-queues at
+        the tail (so fresh arrivals admit first — the natural anti-thrash
+        ordering).  The caller owns the page save/free."""
+        s = self._sessions[sid]
+        assert s.phase == ACTIVE, f"session {sid} is {s.phase}, not active"
+        del self._by_slot[s.slot]
+        s.phase, s.bank, s.slot = PARKED, -1, -1
+        self._queue.append(sid)
         return s
 
     def at_slot(self, slot: int) -> Session | None:
@@ -76,9 +105,10 @@ class SessionTable:
         s = self._sessions[sid]
         if s.phase == ACTIVE:
             del self._by_slot[s.slot]
-        elif s.phase == WAITING:                  # zero-budget fast path
+        elif s.phase in (WAITING, PARKED):        # cancellation path
             self._queue.remove(sid)
         s.phase, s.tokens = DONE, tokens
+        s.parked = None
         return s
 
     def active(self) -> list[Session]:
@@ -103,5 +133,17 @@ class SessionTable:
         collected sessions are evicted from the table, so a long-running
         service's memory stays bounded and a later collection never
         re-delivers an old result."""
+        return {sid: s.tokens
+                for sid, s in self.collect_finished_sessions().items()}
+
+    def collect_finished_sessions(self) -> dict[int, Session]:
+        """Like :meth:`collect_finished` but hands back the whole popped
+        Session — the gateway needs the admission/preemption history
+        (``first_admit_step``, ``parks``) for its SLO accounting, not just
+        the tokens."""
         done = [sid for sid, s in self._sessions.items() if s.phase == DONE]
-        return {sid: self._sessions.pop(sid).tokens for sid in done}
+        return {sid: self._sessions.pop(sid) for sid in done}
+
+    def parked_count(self) -> int:
+        return sum(1 for sid in self._queue
+                   if self._sessions[sid].phase == PARKED)

@@ -1,8 +1,10 @@
-from . import engine, kv_cache, program_paths, reference, sampling, session_pool
+from . import (engine, gateway, kv_cache, program_paths, reference,
+               sampling, session_pool)
 from .engine import Engine, GenConfig
+from .gateway import Gateway
 from .reference import ReferenceEngine
 from .session_pool import SessionPool
 
-__all__ = ["engine", "kv_cache", "program_paths", "reference", "sampling",
-           "session_pool", "Engine", "GenConfig", "ReferenceEngine",
-           "SessionPool"]
+__all__ = ["engine", "gateway", "kv_cache", "program_paths", "reference",
+           "sampling", "session_pool", "Engine", "GenConfig", "Gateway",
+           "ReferenceEngine", "SessionPool"]

@@ -1,0 +1,32 @@
+"""repro.serve.gateway — the async traffic front door.
+
+::
+
+    Gateway (api)  ── submit/stream/cancel, per-request GenConfig + SLO
+        │
+        ▼ tick
+    EngineLoop (loop) ── preempt -> pool.step -> collect
+        │                    │
+        │                    ├─ admission.plan: same-length buckets ->
+        │                    │     ONE prefill launch per bucket;
+        │                    │     parked restores, no prefill
+        │                    └─ SessionPool pages (repro.cpm.pool)
+        ▼
+    Preemptor (preempt) ── SlotAllocator.victim() LRU -> host parking
+
+The gateway makes the PR-5 pool's leftovers load-bearing: batched
+admission amortizes prefill launches over arrival batches, and LRU
+preemption (pages parked host-side, restored token-identically) lets
+bursts beyond ``slots`` trade incumbent latency for burst TTFT instead
+of queueing FIFO.
+"""
+
+from . import admission, api, loop, preempt
+from .api import Gateway, Request
+from .loop import EngineLoop
+from .preempt import PreemptConfig, Preemptor
+
+__all__ = [
+    "admission", "api", "loop", "preempt",
+    "Gateway", "Request", "EngineLoop", "PreemptConfig", "Preemptor",
+]

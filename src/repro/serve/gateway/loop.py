@@ -1,0 +1,64 @@
+"""The continuous engine step loop.
+
+One ``tick`` is the gateway's heartbeat over the PR-5 pool:
+
+  1. **preempt** — the policy (``Preemptor``) parks LRU incumbents if a
+     fresh burst is queued beyond the free pages;
+  2. **step** — ``SessionPool.step()``: batched admission (restores +
+     prompt-length buckets), one compiled decode chunk across every live
+     page, retirement;
+  3. **collect** — finished Sessions (not just tokens: the gateway's SLO
+     accounting wants ``first_admit_step``/``parks`` history) move into
+     the delivery buffer.
+
+The loop is deliberately synchronous and deterministic — virtual time is
+the pool's ``decode_steps`` — so benchmarks and identity tests drive it
+tick by tick; the asyncio front door (``gateway.api``) wraps it
+cooperatively.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+
+class EngineLoop:
+    def __init__(self, pool, preemptor=None):
+        self.pool = pool
+        self.preemptor = preemptor
+        self.ticks = 0
+        self._finished: dict[int, Any] = {}   # sid -> Session, undelivered
+
+    def tick(self) -> dict:
+        """One heartbeat: preempt -> step -> collect.  Returns the pool's
+        stats snapshot."""
+        if self.preemptor is not None:
+            self.preemptor.maybe_preempt()
+        stats = self.pool.step()
+        self._finished.update(self.pool.table.collect_finished_sessions())
+        self.ticks += 1
+        return stats
+
+    def pending(self) -> bool:
+        """True while any submitted session still needs ticks."""
+        return not self.pool.table.all_done()
+
+    def take_finished(self) -> dict[int, Any]:
+        """Finished Sessions since the last take (delivery is
+        exactly-once; the buffer empties)."""
+        done, self._finished = self._finished, {}
+        return done
+
+    def run_until_idle(self, max_ticks: int = 100_000) -> dict[int, Any]:
+        """Drive ticks until every session is done (tests/benchmarks);
+        returns every finished Session collected along the way."""
+        out: dict[int, Any] = {}
+        for _ in range(max_ticks):
+            if not self.pending():
+                break
+            self.tick()
+            out.update(self.take_finished())
+        else:
+            raise RuntimeError(f"no convergence in {max_ticks} ticks")
+        out.update(self.take_finished())
+        return out

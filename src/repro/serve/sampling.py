@@ -52,3 +52,31 @@ def sample(logits: jax.Array, rng, temperature: float = 1.0,
         probs = jax.nn.softmax(logits, -1)
         logits = jnp.where(top_p_mask(probs, top_p), logits, -jnp.inf)
     return jax.random.categorical(rng, logits, axis=-1).astype(jnp.int32)
+
+
+def sample_rows(logits: jax.Array, rng, temperature: jax.Array,
+                top_k: jax.Array, top_p: jax.Array) -> jax.Array:
+    """Per-row sampling for pooled decode: each row of ``logits`` (B, V)
+    carries its *own* ``temperature`` / ``top_k`` / ``top_p`` — (B,)
+    vectors realized from per-request GenConfigs by the serving gateway.
+
+    Rows with ``temperature <= 0`` take the greedy argmax, bit-identical
+    to :func:`greedy`, so a greedy session pooled next to sampled
+    neighbours keeps its solo token-identity.  ``top_k <= 0`` /
+    ``top_p <= 0`` disable that truncation for the row.  The per-row
+    top-k cutoff is the row's k-th largest scaled logit (a sort-based
+    threshold — ``comparable.topk_mask`` needs a static k); top-p reuses
+    the bisection mask, which already batches over per-row ``p``.
+    """
+    logits = logits.astype(jnp.float32)
+    b, v = logits.shape
+    t = jnp.where(temperature > 0, temperature, 1.0).astype(jnp.float32)
+    x = logits / t[:, None]
+    k = jnp.clip(jnp.where(top_k > 0, top_k, v), 1, v).astype(jnp.int32)
+    kth = jnp.take_along_axis(jnp.sort(x, axis=-1)[:, ::-1],
+                              k[:, None] - 1, axis=-1)
+    x = jnp.where(x >= kth, x, -jnp.inf)
+    p = jnp.where(top_p > 0, top_p, 1.0).astype(jnp.float32)
+    x = jnp.where(top_p_mask(jax.nn.softmax(x, -1), p), x, -jnp.inf)
+    sampled = jax.random.categorical(rng, x, axis=-1).astype(jnp.int32)
+    return jnp.where(temperature > 0, sampled, greedy(logits))

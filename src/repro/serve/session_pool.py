@@ -6,14 +6,25 @@ that with the paper's facility view of memory (§4.2): a fixed set of
 *pages* — KV-cache rows and token-buffer bank rows — that sessions check
 in and out of mid-flight:
 
-  * ``submit``  — queue a prompt + token budget (FIFO);
-  * ``step``    — admit waiting sessions into free pages (per-session
-    prefill scattered into the pooled KV rows), decode a ``chunk`` of
-    tokens for every page in ONE compiled program (an inner scan with
-    per-row positions) that also commits each bank's tokens through the
-    MASIM packer's pre-collapsed ``insert -> truncate`` stream
-    (``MultiBankScheduler.compiled_commit`` — one fused launch per bank
-    on pallas), then retire finished sessions and reclaim their pages;
+  * ``submit``  — queue a prompt + token budget (FIFO), optionally with
+    per-request sampling params (a GenConfig override);
+  * ``step``    — admit waiting sessions into free pages with **batched
+    admission** (same-length prompts bucket into ONE stacked prefill
+    launch + ONE scatter program, so admission cost scales with arrival
+    batches, not arrivals; parked sessions restore in one group, no
+    prefill), decode a ``chunk`` of tokens for every page in ONE
+    compiled program (an inner scan with per-row positions) that also
+    commits each bank's tokens through the MASIM packer's pre-collapsed
+    ``insert -> truncate`` stream (``MultiBankScheduler.compiled_commit``
+    — one fused launch per bank on pallas), then retire finished
+    sessions and reclaim their pages;
+  * ``park``    — preempt an ACTIVE session: its KV/token pages are
+    saved to a host-side :class:`PageState` parking buffer, the slot is
+    freed, and the session re-queues FIFO for a later restore that
+    continues the token stream exactly where it was cut (the LRU
+    *policy* lives in ``repro.serve.gateway.preempt``; this is the
+    mechanism);
+  * ``cancel``  — abort a session in any phase, returning what ran;
   * ``drain``   — step until every submitted session is done.
 
 Bookkeeping is CPM all the way down: free-page lookups run on the
@@ -30,21 +41,43 @@ row-independent, admission replays the same per-session prefill, and each
 session sees exactly the same (token, position, cache) sequence it would
 see solo, at any ``chunk`` size (a session finishing mid-chunk keeps
 decoding into slack like the static engine's overshoot rows; the commit
-clamps to its budget so overshoot tokens never surface).
-``tests/test_session_pool.py`` asserts this differentially.  Sampled
-decoding is supported (pool-wide sampling params, per-step rng) but makes
-no cross-engine identity claim — the rng schedule differs.
+clamps to its budget so overshoot tokens never surface).  The identity
+survives preemption: decode math is row-independent and ``(KV rows, pos,
+cur, token row)`` fully determine a session's future, so a parked page
+image restored into *any* free slot replays the same stream —
+``tests/test_session_pool.py`` and ``tests/test_gateway.py`` assert both
+differentially.  Sampled decoding is supported (per-request sampling
+params via :func:`repro.serve.sampling.sample_rows`, per-step rng) but
+makes no cross-engine identity claim — the rng schedule differs.
 """
 
 from __future__ import annotations
+
+import dataclasses
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.cpm.pool import CPMBank, MultiBankScheduler, SessionTable, SlotAllocator
+from repro.cpm.pool.sessions import ACTIVE, DONE, PARKED
 from repro.models import lm
-from . import kv_cache
+from . import kv_cache, sampling
+
+
+@dataclasses.dataclass
+class PageState:
+    """Host-side parking image of one preempted session: everything the
+    pooled decode needs to continue token-identically from any free slot
+    — its KV rows (blocks leaves sliced at batch axis 1, tail leaves at
+    axis 0; the per-row ``len`` leaves ride along in the same trees), the
+    scan position, the current token, and its token-bank row."""
+    caches: Any                        # {"blocks": [...], "tail": [...]} np
+    pos: int
+    cur: int
+    row: np.ndarray                    # (max_len,) token page
+    row_len: int
 
 
 class SessionPool:
@@ -58,12 +91,15 @@ class SessionPool:
     admission/retirement granularity.  ``bank_backend``/``bank_interpret``
     route the token banks ("pallas" turns each chunk's bank commit into
     one fused mega-kernel launch and page moves into scalar-prefetch DMA
-    kernels).
+    kernels).  ``admit_batching=False`` degrades admission to strict
+    one-at-a-time FIFO (buckets of one) — the baseline policy the
+    ``serve_gateway`` benchmark compares against.
     """
 
     def __init__(self, engine, slots: int = 8, n_banks: int = 1, gen=None,
                  chunk: int = 1, bank_backend: str = "reference",
-                 bank_interpret: bool | None = None, rng=None):
+                 bank_interpret: bool | None = None, rng=None,
+                 admit_batching: bool = True):
         from .engine import GenConfig
 
         if engine.cfg.enc_dec:
@@ -100,28 +136,57 @@ class SessionPool:
         self.live = np.zeros((slots,), bool)
         self._free_hint = slots            # host mirror of the free count
         self._rng = rng if rng is not None else jax.random.PRNGKey(0)
+        self.admit_batching = admit_batching
+
+        # host mirrors of each slot's sampling params (per-request
+        # GenConfig overrides realized as (slots,) vectors for the chunk)
+        self._temp = np.full((slots,), self.gen.temperature, np.float32)
+        self._topk = np.full((slots,), self.gen.top_k, np.int32)
+        self._topp = np.full((slots,), self.gen.top_p, np.float32)
 
         self.decode_steps = 0
         self.total_emitted = 0
         self._decode_emitted = 0           # excludes prefill tokens
+        self.prefill_launches = 0
+        self.admit_batches = 0
+        self.preemptions = 0
+        self.restores = 0
+        self.cancels = 0
 
     # -- public API ---------------------------------------------------------
-    def submit(self, tokens, max_new_tokens: int | None = None) -> int:
-        """Queue one session; returns its id.  ``max_new_tokens`` defaults
-        to the pool GenConfig's budget."""
+    def submit(self, tokens, max_new_tokens: int | None = None,
+               gen=None) -> int:
+        """Queue one session; returns its id.
+
+        ``gen`` optionally overrides the pool GenConfig's *sampling*
+        params (temperature/top_k/top_p) for this session — the serving
+        gateway's per-request knobs.  The budget comes from
+        ``max_new_tokens``, falling back to the per-request then the pool
+        GenConfig.  Degenerate requests are rejected here, before they
+        can occupy a page: empty prompts and non-positive budgets raise
+        ``ValueError``.
+        """
         tokens = jnp.asarray(tokens, jnp.int32).reshape(-1)
         s = int(tokens.shape[0])
-        budget = (self.gen.max_new_tokens if max_new_tokens is None
-                  else max_new_tokens)
         if s < 1:
-            raise ValueError("empty prompt")
-        if budget > 0 and s + budget > self.max_len:
+            raise ValueError(
+                "empty prompt: a session needs at least one prompt token")
+        g = self.gen if gen is None else gen
+        if gen is not None and getattr(gen, "ngram_spec", 0):
+            raise ValueError(
+                "pooled serving is non-speculative: per-request "
+                "ngram_spec is not supported")
+        budget = g.max_new_tokens if max_new_tokens is None else max_new_tokens
+        if budget <= 0:
+            raise ValueError(
+                f"max_new_tokens must be positive, got {budget}: a "
+                "session must generate at least one token")
+        if s + budget > self.max_len:
             raise ValueError(
                 f"prompt ({s}) + budget ({budget}) exceeds max_len "
                 f"({self.max_len}); pages are max_len wide")
         sess = self.table.add(tokens, s, budget)
-        if budget <= 0:                     # nothing to generate
-            self.table.finish(sess.sid, np.asarray(tokens))
+        sess.gen = g
         return sess.sid
 
     def step(self) -> dict:
@@ -155,59 +220,117 @@ class SessionPool:
             "occupancy": (self._decode_emitted / (steps * self.slots)
                           if steps else 0.0),
             "active": self.table.active_count(),
-            "waiting": self.table.waiting_count(),
+            # fresh arrivals only; parked sessions are queued but counted
+            # separately (they already hold generated state)
+            "waiting": (self.table.waiting_count()
+                        - self.table.parked_count()),
+            "parked": self.table.parked_count(),
             "bank_launches": self.sched.bank_launches,
             "streams_packed": self.sched.streams_packed,
+            "prefill_launches": self.prefill_launches,
+            "admit_batches": self.admit_batches,
+            "preemptions": self.preemptions,
+            "restores": self.restores,
+            "cancels": self.cancels,
         }
 
     # -- admission ----------------------------------------------------------
     def _admit(self) -> None:
-        engine = self.engine
-        while self._free_hint and self.table.next_waiting() is not None:
-            sess = self.table.next_waiting()
+        """Admit up to ``free`` queued sessions this step.
+
+        The admission *plan* (``repro.serve.gateway.admission``) splits
+        the FIFO window into parked-session restore groups (no prefill)
+        and same-prompt-length buckets of fresh sessions; every bucket
+        pays ONE stacked prefill launch + ONE scatter program regardless
+        of its size.  With ``admit_batching=False`` every group has one
+        member — the strict FIFO baseline."""
+        from .gateway import admission
+        take = min(self._free_hint, self.table.waiting_count())
+        if not take:
+            return
+        plan = admission.plan(self.table.peek_waiting(take),
+                              batching=self.admit_batching)
+        for group in plan.restores:
+            self._restore_group(list(group))
+        for bucket in plan.buckets:
+            self._admit_bucket(list(bucket))
+
+    def _alloc_slots(self, k: int) -> list[int]:
+        slots = []
+        for _ in range(k):
             slot = self.alloc.alloc()       # CPM free-page lookup
             assert slot is not None, "free-count mirror out of sync"
-            self._free_hint -= 1
-            bank_id = slot // self.rows_per_bank
-            local = slot % self.rows_per_bank
-            self.table.activate(sess.sid, bank_id, slot)
+            slots.append(slot)
+        self._free_hint -= k
+        return slots
 
-            logits, caches1 = engine._prefill(
-                engine.params, batch={"tokens": sess.prompt[None]},
-                max_len=self.max_len)
-            caches1 = kv_cache.broadcast_lens(caches1, 1)
-            admit = engine._program("pool_admit", self.gen,
-                                    self._build_admit, sess.prompt_len,
-                                    self.slots)
-            self._rng, sub = jax.random.split(self._rng)
-            rng = jax.random.fold_in(sub, sess.sid)
-            self.caches, self.pos, self.cur, row = admit(
-                self.caches, caches1, jnp.asarray(slot, jnp.int32),
-                self.pos, self.cur, logits, sess.prompt, rng)
-            self.banks[bank_id].scatter(
-                jnp.asarray([local], jnp.int32), row[None],
-                jnp.asarray([sess.prompt_len + 1], jnp.int32))
+    def _note_admit(self, sess, slot: int) -> None:
+        """Host mirrors for one freshly seated session."""
+        sess.admit_step = self.decode_steps
+        if sess.first_admit_step < 0:
+            sess.first_admit_step = self.decode_steps
+        self.live[slot] = True
+        self._temp[slot] = sess.gen.temperature
+        self._topk[slot] = sess.gen.top_k
+        self._topp[slot] = sess.gen.top_p
+
+    def _admit_bucket(self, bucket) -> None:
+        """Check a same-prompt-length bucket of fresh sessions in with one
+        batched prefill and one scatter program."""
+        engine = self.engine
+        k, s = len(bucket), bucket[0].prompt_len
+        slots = self._alloc_slots(k)
+        prompts = jnp.stack([sess.prompt for sess in bucket])
+        logits, caches1 = engine._prefill(
+            engine.params, batch={"tokens": prompts}, max_len=self.max_len)
+        caches1 = kv_cache.broadcast_lens(caches1, k)
+        admit = engine._program("pool_admit", self.gen, self._build_admit,
+                                s, k, self.slots)
+        self._rng, sub = jax.random.split(self._rng)
+        rng = jax.random.fold_in(sub, bucket[0].sid)
+        temp = jnp.asarray([se.gen.temperature for se in bucket], jnp.float32)
+        topk = jnp.asarray([se.gen.top_k for se in bucket], jnp.int32)
+        topp = jnp.asarray([se.gen.top_p for se in bucket], jnp.float32)
+        self.caches, self.pos, self.cur, rows = admit(
+            self.caches, caches1, jnp.asarray(slots, jnp.int32), self.pos,
+            self.cur, logits, prompts, temp, topk, topp, rng)
+        self.prefill_launches += 1
+        self.admit_batches += 1
+        per_bank: dict[int, list[int]] = {}
+        for i, (sess, slot) in enumerate(zip(bucket, slots)):
+            bank_id = slot // self.rows_per_bank
+            self.table.activate(sess.sid, bank_id, slot)
+            self._note_admit(sess, slot)
             sess.emitted = 1                # the prefill token
             self.total_emitted += 1
-            self.live[slot] = True
+            per_bank.setdefault(bank_id, []).append(i)
+        for bank_id, members in per_bank.items():
+            locals_ = jnp.asarray(
+                [slots[i] % self.rows_per_bank for i in members], jnp.int32)
+            self.banks[bank_id].scatter(
+                locals_, rows[jnp.asarray(members, jnp.int32)],
+                jnp.asarray([s + 1] * len(members), jnp.int32))
 
-    def _build_admit(self, s: int, slots: int):
-        """Jitted page check-in for a prompt of length ``s``: sample the
-        prefill token, scatter the session's KV into pool row ``slot``
-        (blocks batch axis 1, tail axis 0 — whole row replaced, nothing
-        from the page's previous tenant survives), seed pos/cur, and build
-        the token-bank row."""
-        engine, gen, width = self.engine, self.gen, self.max_len
+    def _build_admit(self, s: int, k: int, slots: int):
+        """Jitted batched page check-in for ``k`` prompts of length ``s``:
+        sample each row's prefill token with its own sampling params,
+        scatter the bucket's KV into pool rows ``idx`` (blocks batch axis
+        1, tail axis 0 — whole rows replaced, nothing from the pages'
+        previous tenants survives), seed pos/cur, and build the
+        token-bank rows."""
+        del slots                           # cache-key discriminator
+        engine, width = self.engine, self.max_len
 
-        def run(pool_caches, new_caches, slot, pos, cur, logits, prompt,
-                rng):
-            first = engine._sample(logits[:, -1], gen, rng)[0]
+        def run(pool_caches, new_caches, idx, pos, cur, logits, prompts,
+                temp, topk, topp, rng):
+            first = sampling.sample_rows(logits[:, -1], rng, temp, topk,
+                                         topp)
 
             def wr_b(p, n):
-                return p.at[:, slot].set(n[:, 0].astype(p.dtype))
+                return p.at[:, idx].set(n.astype(p.dtype))
 
             def wr_t(p, n):
-                return p.at[slot].set(n[0].astype(p.dtype))
+                return p.at[idx].set(n.astype(p.dtype))
 
             caches = {
                 "blocks": jax.tree.map(wr_b, pool_caches["blocks"],
@@ -215,13 +338,154 @@ class SessionPool:
                 "tail": jax.tree.map(wr_t, pool_caches["tail"],
                                      new_caches["tail"]),
             }
-            pos = pos.at[slot].set(s)
-            cur = cur.at[slot].set(first)
-            row = (jnp.zeros((width,), jnp.int32)
-                   .at[:s].set(prompt).at[s].set(first))
-            return caches, pos, cur, row
+            pos = pos.at[idx].set(s)
+            cur = cur.at[idx].set(first)
+            rows = (jnp.zeros((k, width), jnp.int32)
+                    .at[:, :s].set(prompts)
+                    .at[jnp.arange(k), s].set(first))
+            return caches, pos, cur, rows
 
         return jax.jit(run) if engine._jit else run
+
+    # -- preemption (mechanism) ---------------------------------------------
+    def park(self, sid: int) -> None:
+        """Preempt an ACTIVE session: save its pages into a host-side
+        :class:`PageState`, free its slot, and re-queue it at the FIFO
+        tail for a later token-identical restore.  The *policy* — who
+        gets parked, and when — lives in
+        ``repro.serve.gateway.preempt``."""
+        sess = self.table.get(sid)
+        if sess.phase != ACTIVE:
+            raise ValueError(f"session {sid} is {sess.phase}, not active")
+        if sess.finished:
+            raise ValueError(f"session {sid} already hit its budget; "
+                             "step() will retire it")
+        slot = sess.slot
+        row, ln = self.banks[sess.bank].read_row(slot % self.rows_per_bank)
+        assert ln == sess.prompt_len + sess.emitted, (
+            ln, sess.prompt_len, sess.emitted)
+        image = {
+            "blocks": jax.tree.map(lambda p: p[:, slot],
+                                   self.caches["blocks"]),
+            "tail": jax.tree.map(lambda p: p[slot], self.caches["tail"]),
+        }
+        sess.parked = PageState(
+            caches=jax.device_get(image), pos=int(self.pos[slot]),
+            cur=int(self.cur[slot]), row=np.asarray(row), row_len=int(ln))
+        sess.parks += 1
+        self.preemptions += 1
+        self.table.park(sid)
+        self.alloc.free(slot)               # page back to the free list
+        self._free_hint += 1
+        self.live[slot] = False
+        self.pos = self.pos.at[slot].set(0)
+        self.cur = self.cur.at[slot].set(0)
+
+    def _restore_group(self, group) -> None:
+        """Re-admit parked sessions: ONE scatter program re-seats the
+        whole group's saved KV/pos/cur images (no prefill — the saved
+        pages already hold the history), then each token row scatters
+        back into its new bank."""
+        k = len(group)
+        slots = self._alloc_slots(k)
+        states = [sess.parked for sess in group]
+        blocks = jax.tree.map(lambda *xs: jnp.stack(xs, axis=1),
+                              *[st.caches["blocks"] for st in states])
+        tail = jax.tree.map(lambda *xs: jnp.stack(xs, axis=0),
+                            *[st.caches["tail"] for st in states])
+        restore = self.engine._program("pool_restore", self.gen,
+                                       self._build_restore, k, self.slots)
+        self.caches, self.pos, self.cur = restore(
+            self.caches, blocks, tail, jnp.asarray(slots, jnp.int32),
+            self.pos, self.cur,
+            jnp.asarray([st.pos for st in states], jnp.int32),
+            jnp.asarray([st.cur for st in states], jnp.int32))
+        per_bank: dict[int, list[int]] = {}
+        for i, (sess, slot) in enumerate(zip(group, slots)):
+            bank_id = slot // self.rows_per_bank
+            self.table.activate(sess.sid, bank_id, slot)
+            self._note_admit(sess, slot)
+            sess.parked = None
+            self.restores += 1
+            per_bank.setdefault(bank_id, []).append(i)
+        for bank_id, members in per_bank.items():
+            locals_ = jnp.asarray(
+                [slots[i] % self.rows_per_bank for i in members], jnp.int32)
+            rows = jnp.stack(
+                [jnp.asarray(states[i].row, jnp.int32) for i in members])
+            lens = jnp.asarray([states[i].row_len for i in members],
+                               jnp.int32)
+            self.banks[bank_id].scatter(locals_, rows, lens)
+
+    def _build_restore(self, k: int, slots: int):
+        """Jitted batched page re-seat for ``k`` parked sessions: write
+        the saved KV images into the newly allocated rows and restore
+        pos/cur — the decode stream continues exactly where preemption
+        cut it."""
+        del k, slots                        # cache-key discriminators
+        engine = self.engine
+
+        def run(pool_caches, blocks, tail, idx, pos, cur, spos, scur):
+            def wr_b(p, n):
+                return p.at[:, idx].set(n.astype(p.dtype))
+
+            def wr_t(p, n):
+                return p.at[idx].set(n.astype(p.dtype))
+
+            caches = {
+                "blocks": jax.tree.map(wr_b, pool_caches["blocks"], blocks),
+                "tail": jax.tree.map(wr_t, pool_caches["tail"], tail),
+            }
+            return caches, pos.at[idx].set(spos), cur.at[idx].set(scur)
+
+        return jax.jit(run) if engine._jit else run
+
+    def victim_session(self):
+        """The allocator's LRU eviction candidate (§7.5 min-over-ticks on
+        the metadata device) as a Session, or None when nothing is
+        evictable."""
+        slot = self.alloc.victim()
+        return self.table.at_slot(slot) if slot is not None else None
+
+    # -- cancellation / inspection ------------------------------------------
+    def cancel(self, sid: int) -> np.ndarray:
+        """Abort a session in any phase; returns prompt + whatever it
+        generated before the cancel.  The tokens stay collectible (DONE)
+        until the next drain/collect."""
+        sess = self.table.get(sid)
+        if sess.phase == DONE:
+            return np.asarray(sess.tokens)
+        if sess.phase == ACTIVE:
+            slot = sess.slot
+            row, ln = self.banks[sess.bank].read_row(
+                slot % self.rows_per_bank)
+            self.table.finish(sid, np.asarray(row[:ln]))
+            self.alloc.free(slot)
+            self._free_hint += 1
+            self.live[slot] = False
+            self.pos = self.pos.at[slot].set(0)
+            self.cur = self.cur.at[slot].set(0)
+        elif sess.phase == PARKED:
+            st = sess.parked
+            self.table.finish(sid, np.asarray(st.row[:st.row_len]))
+        else:                               # WAITING: nothing ran yet
+            self.table.finish(sid, np.asarray(sess.prompt))
+        self.cancels += 1
+        return np.asarray(sess.tokens)
+
+    def peek_tokens(self, sid: int) -> np.ndarray:
+        """Host snapshot of a session's tokens so far (prompt + emitted),
+        in any phase — what the gateway's streaming iterator reads."""
+        sess = self.table.get(sid)
+        if sess.phase == ACTIVE:
+            row, _ = self.banks[sess.bank].read_row(
+                sess.slot % self.rows_per_bank)
+            return np.asarray(row[:sess.prompt_len + sess.emitted])
+        if sess.phase == PARKED:
+            return np.asarray(sess.parked.row[:sess.parked.row_len])
+        if sess.phase == DONE:
+            return np.asarray(sess.tokens)
+        return np.asarray(sess.prompt)
 
     # -- decode -------------------------------------------------------------
     def _decode_chunk(self) -> None:
@@ -240,8 +504,9 @@ class SessionPool:
         lenss = [b.lens for b in self.banks]
         self.cur, self.caches, self.pos, datas, lenss = run(
             engine.params, self.cur, self.caches, self.pos,
-            jnp.asarray(self.live), jnp.asarray(budget_left), datas, lenss,
-            sub)
+            jnp.asarray(self.live), jnp.asarray(budget_left),
+            jnp.asarray(self._temp), jnp.asarray(self._topk),
+            jnp.asarray(self._topp), datas, lenss, sub)
         for b, d, ln in zip(self.banks, datas, lenss):
             b.data, b.lens = d, ln
 
@@ -265,19 +530,20 @@ class SessionPool:
         commit makes visible."""
         del bank_backend, bank_interpret    # cache-key discriminators: the
         # compiled_commit closures below bake the bank routing in
-        engine, gen, cfg = self.engine, self.gen, self.engine.cfg
+        engine, cfg = self.engine, self.engine.cfg
         rpb = self.rows_per_bank
         commits = [self.sched.compiled_commit(b, chunk)
                    for b in range(n_banks)]
 
-        def run(params, cur, caches, pos, live, budget_left, datas, lenss,
-                rng):
+        def run(params, cur, caches, pos, live, budget_left, temp, topk,
+                topp, datas, lenss, rng):
             def body(carry, _):
                 tok, caches, pos, rng = carry
                 rng, sub = jax.random.split(rng)
                 logits, caches = lm.decode_step(params, cfg, tok[:, None],
                                                 caches, pos)
-                nxt = engine._sample(logits[:, -1], gen, sub)
+                nxt = sampling.sample_rows(logits[:, -1], sub, temp, topk,
+                                           topp)
                 nxt = jnp.where(live, nxt, 0)
                 pos = jnp.where(live, pos + 1, pos)
                 return (nxt, caches, pos, rng), nxt

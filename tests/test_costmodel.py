@@ -321,3 +321,44 @@ class TestAutotune:
             jnp.zeros((2, 64), jnp.int32), jnp.zeros(2, jnp.int32),
             2, 64, backend)
         assert got == 1
+
+
+# ---------------------------------------------------------------------------
+# PR-7 satellite: measured pallas crossover consulted by backend="auto"
+# ---------------------------------------------------------------------------
+
+class TestPallasMinN:
+    """`auto_backend_name` thresholds on the *measured* reference/pallas
+    crossover when the tuning cache has one (written by the `cpm_ops`
+    benchmark sweep), per-op first, then the pooled `*` entry, static
+    PALLAS_MIN_N as the last resort."""
+
+    def test_static_fallback_when_unmeasured(self, isolated_cache):
+        from repro.cpm.backends import PALLAS_MIN_N, pallas_min_n
+        assert pallas_min_n("compare") == PALLAS_MIN_N
+        assert pallas_min_n() == PALLAS_MIN_N
+
+    def test_per_op_beats_pooled_beats_static(self, isolated_cache):
+        from repro.cpm.backends import (PALLAS_MIN_N, auto_backend_name,
+                                        pallas_min_n)
+        bk = tuning.backend_key(False)
+        tuning.store(f"xover:*:{bk}", 2048)
+        assert pallas_min_n("compare") == 2048       # pooled entry
+        tuning.store(f"xover:compare:{bk}", 512)
+        assert pallas_min_n("compare") == 512        # per-op wins
+        assert pallas_min_n("section_sum") == 2048   # others still pooled
+        assert pallas_min_n() == 2048
+        tuning.clear()
+        assert pallas_min_n("compare") == PALLAS_MIN_N
+
+    def test_cpu_resolve_unaffected_by_cache(self, isolated_cache):
+        """On CPU, auto routes to reference regardless of any crossover
+        entry (residency check comes first)."""
+        from repro.cpm.backends import auto_backend_name
+        bk = tuning.backend_key(False)
+        tuning.store(f"xover:*:{bk}", 1)             # pallas "always wins"
+        data = jnp.zeros((4096,), jnp.int32)
+        assert auto_backend_name(data, "compare") == "reference"
+        got = cpm_array(data, 4096, backend="auto").compare(0)
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.ones((4096,), np.int32))

@@ -1,0 +1,360 @@
+"""`repro.serve.gateway` — admission batching, preemption, async front door.
+
+The gateway's contracts:
+
+  * **preemption identity** — a session that is parked to host memory and
+    re-admitted emits byte-identical greedy tokens to a solo
+    ``Engine.generate`` run (the KV/token pages round-trip losslessly);
+  * **batched admission** — same-length waiting prompts share ONE prefill
+    launch (counter-asserted), and the plan preserves FIFO arrival order
+    within and across buckets;
+  * **preemption policy** — the LRU victim honors the min-resident /
+    min-remaining / max-parks guards and only evicts for fresh arrivals;
+  * **front-door faces** — sync submit/tick/result/cancel and async
+    asubmit/stream/aresult/serve deliver the same tokens, per-request
+    sampling params apply per pool row, and SLO grading runs in virtual
+    decode-step time;
+  * **traffic traces** — seeded generators replay byte-identically.
+"""
+
+import asyncio
+import os
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import all_configs
+from repro.models import lm
+from repro.serve import Engine, GenConfig, Gateway
+from repro.serve.gateway import admission
+from repro.serve.gateway.preempt import PreemptConfig, Preemptor
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir,
+                                "benchmarks"))
+import traffic  # noqa: E402
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = all_configs()["granite-8b"].smoke()
+
+
+@pytest.fixture(scope="module")
+def granite():
+    params = lm.init_params(CFG, jax.random.PRNGKey(0))
+    return Engine(CFG, params, max_len=64)
+
+
+def _prompt(seed, s):
+    return jax.random.randint(jax.random.PRNGKey(seed), (s,), 0,
+                              CFG.vocab_size)
+
+
+def _solo(engine, prompt, budget):
+    out, _ = engine.generate({"tokens": prompt[None]},
+                             GenConfig(max_new_tokens=budget))
+    return np.asarray(out[0])
+
+
+# ---------------------------------------------------------------------------
+# preemption identity
+# ---------------------------------------------------------------------------
+
+class TestPreemptionIdentity:
+    def test_parked_and_readmitted_matches_solo(self, granite):
+        """Manually park the pool's LRU session mid-decode; after the
+        restore the drained tokens equal the undisturbed solo run."""
+        pool = granite.session_pool(slots=2, n_banks=1)
+        prompts = [_prompt(i, 8) for i in range(2)]
+        sids = [pool.submit(p, 10) for p in prompts]
+        for _ in range(3):
+            pool.step()
+        victim = pool.victim_session()
+        assert victim is not None
+        pool.park(victim.sid)
+        assert pool.stats()["parked"] == 1
+        outs = pool.drain()
+        for sid, p in zip(sids, prompts):
+            np.testing.assert_array_equal(outs[sid], _solo(granite, p, 10))
+        st = pool.stats()
+        assert st["preemptions"] == 1 and st["restores"] == 1
+
+    def test_gateway_burst_preempts_with_identity(self, granite):
+        """Incumbents squat every slot; a burst of short requests forces
+        LRU parking.  Everyone — preempted incumbents included — matches
+        solo greedy."""
+        gw = Gateway(granite, slots=2, chunk=1,
+                     preempt=PreemptConfig(min_resident=1, min_remaining=1,
+                                           max_parks=3))
+        incumbents = [gw.submit(_prompt(i, 8), 12) for i in range(2)]
+        for _ in range(3):
+            gw.tick()
+        burst = [gw.submit(_prompt(10 + i, 6), 3) for i in range(2)]
+        for rid in burst + incumbents:
+            toks = gw.result(rid)
+            req = gw.request(rid)
+            np.testing.assert_array_equal(
+                toks, _solo(granite, req.prompt, req.budget))
+        assert gw.stats()["preemptions"] > 0
+        assert any(gw.request(r).parks > 0 for r in incumbents)
+
+    def test_multiple_parks_still_identical(self, granite):
+        """A session parked more than once still round-trips losslessly."""
+        pool = granite.session_pool(slots=2, n_banks=1)
+        p = _prompt(42, 8)
+        sid = pool.submit(p, 12)
+        other = pool.submit(_prompt(43, 8), 12)
+        for parks in range(2):
+            for _ in range(2):
+                pool.step()
+            pool.park(sid)
+            pool.step()                  # restore happens on admit
+        outs = pool.drain()
+        np.testing.assert_array_equal(outs[sid], _solo(granite, p, 12))
+        np.testing.assert_array_equal(outs[other],
+                                      _solo(granite, _prompt(43, 8), 12))
+
+
+# ---------------------------------------------------------------------------
+# batched admission
+# ---------------------------------------------------------------------------
+
+class _FakeSession:
+    def __init__(self, sid, prompt_len, phase="waiting"):
+        self.sid = sid
+        self.prompt_len = prompt_len
+        self.phase = phase
+
+
+class TestAdmissionPlan:
+    def test_buckets_by_length_preserving_fifo(self):
+        ss = [_FakeSession(0, 8), _FakeSession(1, 6), _FakeSession(2, 8),
+              _FakeSession(3, 6)]
+        plan = admission.plan(ss)
+        assert [[s.sid for s in b] for b in plan.buckets] == [[0, 2], [1, 3]]
+        assert plan.launches == 2
+        assert plan.sessions == 4
+
+    def test_parked_split_into_restore_group(self):
+        ss = [_FakeSession(0, 8), _FakeSession(1, 8, phase="parked"),
+              _FakeSession(2, 8)]
+        plan = admission.plan(ss)
+        assert [s.sid for s in plan.restores[0]] == [1]
+        assert [[s.sid for s in b] for b in plan.buckets] == [[0, 2]]
+
+    def test_no_batching_is_strict_fifo_singletons(self):
+        ss = [_FakeSession(0, 8), _FakeSession(1, 6), _FakeSession(2, 8)]
+        plan = admission.plan(ss, batching=False)
+        assert [[s.sid for s in b] for b in plan.buckets] == [[0], [1], [2]]
+        assert plan.launches == 3
+
+    def test_pool_counts_one_prefill_per_bucket(self, granite):
+        """4 same-length submissions into 4 slots: ONE prefill launch,
+        one admit batch — and outputs still match solo."""
+        pool = granite.session_pool(slots=4, n_banks=1)
+        prompts = [_prompt(20 + i, 8) for i in range(4)]
+        sids = [pool.submit(p, 4) for p in prompts]
+        outs = pool.drain()
+        st = pool.stats()
+        assert st["prefill_launches"] == 1
+        assert st["admit_batches"] == 1
+        for sid, p in zip(sids, prompts):
+            np.testing.assert_array_equal(outs[sid], _solo(granite, p, 4))
+
+    def test_unbatched_pool_counts_one_prefill_each(self, granite):
+        pool = granite.session_pool(slots=4, n_banks=1,
+                                    admit_batching=False)
+        prompts = [_prompt(30 + i, 8) for i in range(4)]
+        sids = [pool.submit(p, 3) for p in prompts]
+        outs = pool.drain()
+        assert pool.stats()["prefill_launches"] == 4
+        for sid, p in zip(sids, prompts):
+            np.testing.assert_array_equal(outs[sid], _solo(granite, p, 3))
+
+    def test_mixed_lengths_one_launch_per_length(self, granite):
+        pool = granite.session_pool(slots=4, n_banks=1)
+        prompts = [_prompt(40, 8), _prompt(41, 12), _prompt(42, 8),
+                   _prompt(43, 12)]
+        sids = [pool.submit(p, 3) for p in prompts]
+        outs = pool.drain()
+        assert pool.stats()["prefill_launches"] == 2
+        for sid, p in zip(sids, prompts):
+            np.testing.assert_array_equal(outs[sid], _solo(granite, p, 3))
+
+
+# ---------------------------------------------------------------------------
+# preemption policy guards
+# ---------------------------------------------------------------------------
+
+class TestPreemptorPolicy:
+    def test_no_waiting_no_preemption(self, granite):
+        pool = granite.session_pool(slots=2)
+        for i in range(2):
+            pool.submit(_prompt(50 + i, 8), 8)
+        pool.step()
+        pre = Preemptor(pool, PreemptConfig(min_resident=1))
+        assert pre.maybe_preempt() == 0
+        assert pre.preempted == 0
+
+    def test_min_resident_floor_holds(self, granite):
+        """With min_resident == slots, arrivals can never evict."""
+        pool = granite.session_pool(slots=2)
+        for i in range(2):
+            pool.submit(_prompt(60 + i, 8), 8)
+        pool.step()
+        pool.submit(_prompt(62, 8), 2)          # fresh arrival, queue full
+        pre = Preemptor(pool, PreemptConfig(min_resident=2))
+        assert pre.maybe_preempt() == 0
+        assert pre.denied > 0
+
+    def test_near_finished_sessions_protected(self, granite):
+        """min_remaining protects sessions about to finish anyway."""
+        pool = granite.session_pool(slots=2)
+        sids = [pool.submit(_prompt(70 + i, 8), 3) for i in range(2)]
+        for _ in range(2):
+            pool.step()                          # 3 emitted, 0 remaining soon
+        pool.submit(_prompt(72, 8), 2)
+        pre = Preemptor(pool, PreemptConfig(min_resident=1,
+                                            min_remaining=2))
+        assert pre.maybe_preempt() == 0
+
+    def test_max_parks_caps_thrash(self, granite):
+        pool = granite.session_pool(slots=1)
+        sid = pool.submit(_prompt(80, 8), 16)
+        pool.step()
+        sess = pool.table.get(sid)
+        sess.parks = 3
+        pool.submit(_prompt(81, 8), 2)
+        pre = Preemptor(pool, PreemptConfig(min_resident=0, min_remaining=1,
+                                            max_parks=3))
+        assert pre.maybe_preempt() == 0
+
+
+# ---------------------------------------------------------------------------
+# front door: sync + async faces, sampling, validation, SLO
+# ---------------------------------------------------------------------------
+
+class TestGatewayFaces:
+    def test_sync_submit_result_matches_solo(self, granite):
+        gw = Gateway(granite, slots=2)
+        p = _prompt(90, 8)
+        rid = gw.submit(p, 5)
+        np.testing.assert_array_equal(gw.result(rid), _solo(granite, p, 5))
+        req = gw.request(rid)
+        assert req.done and req.latency_steps >= 0
+        assert req.ttft_steps >= 0
+
+    def test_cancel_returns_prefix(self, granite):
+        gw = Gateway(granite, slots=2)
+        p = _prompt(91, 8)
+        rid = gw.submit(p, 10)
+        gw.tick()
+        gw.tick()
+        toks = gw.cancel(rid)
+        want = _solo(granite, p, 10)
+        assert 8 < len(toks) <= len(want)
+        np.testing.assert_array_equal(toks, want[:len(toks)])
+        assert gw.request(rid).cancelled
+
+    def test_validation_surfaces_at_submit(self, granite):
+        gw = Gateway(granite, slots=2)
+        with pytest.raises(ValueError, match="empty prompt"):
+            gw.submit(np.zeros((0,), np.int32), 4)
+        with pytest.raises(ValueError, match="must be positive"):
+            gw.submit(_prompt(92, 8), 0)
+        assert gw.stats()["requests"] == 0    # nothing half-registered
+
+    def test_per_request_sampling_rides_next_to_greedy(self, granite):
+        """A sampled request in the same pool batch must not perturb its
+        greedy neighbors."""
+        gw = Gateway(granite, slots=2, rng=jax.random.PRNGKey(7))
+        pg = _prompt(93, 8)
+        rid_greedy = gw.submit(pg, 6)
+        rid_sampled = gw.submit(
+            _prompt(94, 8), 6,
+            gen=GenConfig(max_new_tokens=6, temperature=0.9, top_k=12,
+                          top_p=0.9))
+        np.testing.assert_array_equal(gw.result(rid_greedy),
+                                      _solo(granite, pg, 6))
+        toks = gw.result(rid_sampled)
+        assert len(toks) == 8 + 6
+        assert ((np.asarray(toks) >= 0)
+                & (np.asarray(toks) < CFG.vocab_size)).all()
+
+    def test_slo_grading_in_virtual_time(self, granite):
+        gw = Gateway(granite, slots=2)
+        hit = gw.submit(_prompt(95, 8), 3, deadline_steps=1000)
+        miss = gw.submit(_prompt(96, 8), 3, deadline_steps=0)
+        gw.result(hit)
+        gw.result(miss)
+        assert gw.request(hit).slo_met is True
+        assert gw.request(miss).slo_met is False
+        st = gw.stats()
+        assert st["slo_met"] == 1 and st["slo_missed"] == 1
+
+    def test_collect_delivered_bounds_memory(self, granite):
+        gw = Gateway(granite, slots=2)
+        rids = [gw.submit(_prompt(97 + i, 8), 2) for i in range(2)]
+        for rid in rids:
+            gw.result(rid)
+        done = gw.collect_delivered()
+        assert sorted(r.rid for r in done) == sorted(rids)
+        assert gw.collect_delivered() == []
+
+    def test_async_stream_and_aresult(self, granite):
+        async def scenario():
+            gw = Gateway(granite, slots=2)
+            await gw.start()
+            p = _prompt(99, 8)
+            rid = await gw.asubmit(p, 5)
+            chunks = []
+            async for chunk in gw.stream(rid):
+                chunks.append(np.asarray(chunk))
+            toks = await gw.aresult(rid)
+            await gw.stop()
+            return p, rid, chunks, toks
+
+        p, rid, chunks, toks = asyncio.run(scenario())
+        want = _solo(granite, p, 5)
+        np.testing.assert_array_equal(toks, want)
+        # stream carries exactly the generated suffix, in order
+        np.testing.assert_array_equal(np.concatenate(chunks), want[8:])
+
+
+# ---------------------------------------------------------------------------
+# traffic traces
+# ---------------------------------------------------------------------------
+
+class TestTraffic:
+    @pytest.mark.parametrize("mk", [
+        lambda s: traffic.poisson_trace(n=16, seed=s),
+        lambda s: traffic.bursty_trace(seed=s),
+        lambda s: traffic.diurnal_trace(n=16, seed=s),
+    ])
+    def test_seeded_traces_replay_identically(self, mk):
+        a, b = mk(3), mk(3)
+        np.testing.assert_array_equal(a.arrivals, b.arrivals)
+        np.testing.assert_array_equal(a.lens, b.lens)
+        np.testing.assert_array_equal(a.budgets, b.budgets)
+        c = mk(4)
+        assert (len(a) != len(c)
+                or not (np.array_equal(a.arrivals, c.arrivals)
+                        and np.array_equal(a.lens, c.lens)
+                        and np.array_equal(a.budgets, c.budgets)))
+
+    def test_arrivals_sorted_and_shapes_consistent(self):
+        for tr in (traffic.poisson_trace(n=20, seed=0),
+                   traffic.bursty_trace(seed=0),
+                   traffic.diurnal_trace(n=20, seed=0)):
+            assert (np.diff(tr.arrivals) >= 0).all()
+            assert len(tr.arrivals) == len(tr.lens) == len(tr.budgets)
+            assert (tr.lens > 0).all() and (tr.budgets > 0).all()
+
+    def test_bursty_shape(self):
+        tr = traffic.bursty_trace(incumbents=3, long_budget=20, n_bursts=2,
+                                  burst=4, gap=10, start=5, seed=0)
+        assert len(tr) == 3 + 2 * 4
+        assert (tr.arrivals[:3] == 0).all()
+        assert (tr.budgets[:3] == 20).all()
+        assert set(np.unique(tr.arrivals[3:])) == {5, 15}

@@ -138,12 +138,22 @@ class TestPoolTokenIdentity:
 # ---------------------------------------------------------------------------
 
 class TestPoolLifecycle:
-    def test_zero_budget_returns_prompt(self, granite):
+    def test_zero_budget_rejected(self, granite):
+        """A degenerate budget is a caller error, not a no-op session —
+        rejected before it can occupy queue or page state."""
         pool = granite.session_pool(slots=2)
         p = _prompt(60, 7, CFG)
-        sid = pool.submit(p, 0)
-        outs = pool.drain()
-        np.testing.assert_array_equal(outs[sid], np.asarray(p))
+        with pytest.raises(ValueError, match="must be positive"):
+            pool.submit(p, 0)
+        with pytest.raises(ValueError, match="must be positive"):
+            pool.submit(p, -3)
+        assert len(pool.table) == 0
+
+    def test_empty_prompt_rejected(self, granite):
+        pool = granite.session_pool(slots=2)
+        with pytest.raises(ValueError, match="empty prompt"):
+            pool.submit(np.zeros((0,), np.int32), 4)
+        assert len(pool.table) == 0
 
     def test_budget_one_is_the_prefill_token(self, granite):
         pool = granite.session_pool(slots=2)
