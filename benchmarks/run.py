@@ -751,6 +751,67 @@ def bench_serve_pool():
         f"bank_launches={stats['bank_launches']};"
         f"streams_packed={stats['streams_packed']}")
 
+    # -- memory-normalized: paged vs whole-row at FIXED reserved memory ----
+    # Both layouts reserve the same KV/token footprint (reserved_tokens
+    # logical token-positions).  Whole-row spends it as slots * max_len —
+    # capacity bounded by the worst case; paged spends it as sub-pages —
+    # capacity bounded by tokens actually resident.  Under a seeded
+    # ragged-length burst the paged pool must hold >= 1.5x the concurrent
+    # sessions (the ISSUE-8 acceptance gate) while staying token-identical.
+    pg, cap_ml = 8, 72
+    eng2 = Engine(cfg, params, max_len=cap_ml)
+    whole_slots = 4
+    reserved_tokens = whole_slots * cap_ml                       # 288
+    paged_slots, ppb = 12, reserved_tokens // pg                 # 36 pages
+    crng = np.random.RandomState(7)                              # ragged trace
+    n_cap = 24
+    clens = crng.randint(4, 15, n_cap)
+    cbudgets = crng.randint(3, 17, n_cap)
+    cprompts = [jax.random.randint(jax.random.PRNGKey(500 + i), (int(s),), 0,
+                                   cfg.vocab_size) for i, s in enumerate(clens)]
+
+    def run_capacity(pool):
+        sids = [pool.submit(p, int(b)) for p, b in zip(cprompts, cbudgets)]
+        peak = resident_sum = ticks = 0
+        while not pool.table.all_done():
+            pool.step()
+            act = pool.table.active()
+            peak = max(peak, len(act))
+            resident_sum += sum(s.prompt_len + s.emitted for s in act)
+            ticks += 1
+        return pool.table.outputs(), sids, peak, resident_sum / max(ticks, 1), \
+            pool.decode_steps
+
+    whole = eng2.session_pool(slots=whole_slots, chunk=chunk)
+    w_out, w_sids, w_peak, w_res, w_steps = run_capacity(whole)
+    paged = eng2.session_pool(slots=paged_slots, chunk=chunk, page_size=pg,
+                              pages_per_bank=ppb)
+    p_out, p_sids, p_peak, p_res, p_steps = run_capacity(paged)
+
+    # identity: the paged layout changes residency, not tokens
+    for i in (0, 5, 11):
+        solo2, _ = eng2.generate({"tokens": cprompts[i][None]},
+                                 GenConfig(max_new_tokens=int(cbudgets[i])))
+        np.testing.assert_array_equal(p_out[p_sids[i]], np.asarray(solo2[0]))
+        np.testing.assert_array_equal(w_out[w_sids[i]], np.asarray(solo2[0]))
+
+    cap_ratio = p_peak / w_peak
+    w_util, p_util = w_res / reserved_tokens, p_res / reserved_tokens
+    assert cap_ratio >= 1.5, (
+        f"paged capacity at fixed memory only {cap_ratio:.2f}x "
+        f"(paged peak {p_peak} vs whole-row peak {w_peak})")
+    assert p_util > w_util, (p_util, w_util)
+
+    row(f"SP_wholerow_fixed_mem_{reserved_tokens}tok", 0.0,
+        f"peak_sessions={w_peak};tokens_resident_per_reserved="
+        f"{w_util:.2f};decode_steps={w_steps}")
+    row(f"SP_paged_fixed_mem_{reserved_tokens}tok", 0.0,
+        f"peak_sessions={p_peak};tokens_resident_per_reserved="
+        f"{p_util:.2f};decode_steps={p_steps};page={pg};pages={ppb}")
+    row("SP_paged_capacity_fixed_mem", 0.0,
+        f"capacity_ratio={cap_ratio:.2f}x;util_ratio={p_util / w_util:.2f}x;"
+        f"steps_ratio={w_steps / p_steps:.2f}x;gate=1.5x")
+
 
 def bench_serve_gateway():
     """Gateway (batched admission + LRU preemption) vs FIFO-queued

@@ -35,29 +35,47 @@ _NO_TICK = jnp.iinfo(jnp.int32).max
 
 
 class SlotAllocator:
-    """Page-table allocator over ``n_slots`` pages of one pool.
+    """Page-table allocator over ``n_slots`` sessions of one pool, plus an
+    optional file of ``n_pages`` *sub-pages* with per-session page lists.
 
     ``backend``/``interpret`` route the metadata queries like any other
     ``CPMArray`` (reference by default; pallas for kernel-resident
     metadata).  All methods are host-synchronous by design — allocation is
     admission control, a host decision — but each decision costs O(1)
     concurrent CPM steps, not a host-side scan over slots.
+
+    With ``n_pages > 0`` the allocator also owns the sub-page metadata
+    file: :meth:`alloc_pages` claims the ``k`` lowest free pages of a
+    bank's range in ONE §6.1 broadcast compare + Rule-6 drain
+    (``enumerate_matches(max_out=k)``), all-or-nothing; the ordered page
+    list rides on the owning slot and :meth:`free` releases slot and
+    pages together, so a retire or cancel can never leak a sub-page.
     """
 
     def __init__(self, n_slots: int, backend: str = "reference",
-                 interpret: bool | None = None):
+                 interpret: bool | None = None, n_pages: int = 0):
         if n_slots <= 0:
             raise ValueError(f"n_slots must be positive, got {n_slots}")
+        if n_pages < 0:
+            raise ValueError(f"n_pages must be >= 0, got {n_pages}")
         self.n_slots = n_slots
+        self.n_pages = n_pages
         self._backend = backend
         self._interpret = interpret
         self._state = jnp.full((n_slots,), FREE, jnp.int32)
         self._tick = jnp.zeros((n_slots,), jnp.int32)
         self._clock = 0
+        # sub-page metadata file + host mirror of the ordered page lists
+        self._pstate = jnp.full((max(n_pages, 1),), FREE, jnp.int32)
+        self._pages: dict[int, list[int]] = {}
 
     # -- CPMArray views of the metadata file --------------------------------
     def _dev(self, data) -> CPMArray:
         return CPMArray(data, jnp.asarray(self.n_slots, jnp.int32),
+                        self._backend, self._interpret)
+
+    def _pdev(self, data) -> CPMArray:
+        return CPMArray(data, jnp.asarray(self.n_pages, jnp.int32),
                         self._backend, self._interpret)
 
     # -- queries (all CPM ops) ----------------------------------------------
@@ -82,8 +100,60 @@ class SlotAllocator:
             return None
         slot = int(addrs[0])
         self._state = self._state.at[slot].set(USED)
+        self._pages[slot] = []
         self.touch(slot)
         return slot
+
+    # -- sub-page file (CPM ops on the page metadata device) ----------------
+    def _prange(self, lo: int, hi: int | None) -> tuple[int, int]:
+        hi = self.n_pages if hi is None else hi
+        if not 0 <= lo <= hi <= self.n_pages:
+            raise IndexError(f"page range [{lo}, {hi}) outside "
+                             f"[0, {self.n_pages})")
+        return lo, hi
+
+    def page_free_count(self, lo: int = 0, hi: int | None = None) -> int:
+        """Free sub-pages within ``[lo, hi)`` (a bank's range): one §6
+        broadcast compare, Rule-6 count of the masked match lines."""
+        if not self.n_pages:
+            return 0
+        lo, hi = self._prange(lo, hi)
+        flags = self._pdev(self._pstate).compare(FREE)
+        ids = jnp.arange(self.n_pages, dtype=jnp.int32)
+        return int(pe_array.count_matches(flags & (ids >= lo) & (ids < hi)))
+
+    def alloc_pages(self, slot: int, k: int, lo: int = 0,
+                    hi: int | None = None) -> list[int] | None:
+        """Grow ``slot``'s page list by the ``k`` lowest free sub-pages in
+        ``[lo, hi)``, or ``None`` (nothing claimed) when fewer than ``k``
+        are free — all-or-nothing, so a mid-decode top-up either fully
+        covers the next chunk or parks the session.
+
+        One §6.1 broadcast ``compare(FREE)`` (range-masked) asserts every
+        candidate's match line; the Rule-6 priority-encoder drain
+        (``enumerate_matches(max_out=k)``) materializes the ``k`` lowest
+        addresses."""
+        self._check(slot)
+        if int(self._state[slot]) != USED:
+            raise ValueError(f"slot {slot} is free; pages need an owner")
+        if k <= 0:
+            raise ValueError(f"page count must be positive, got {k}")
+        lo, hi = self._prange(lo, hi)
+        flags = self._pdev(self._pstate).compare(FREE)
+        ids = jnp.arange(self.n_pages, dtype=jnp.int32)
+        addrs, valid = pe_array.enumerate_matches(
+            flags & (ids >= lo) & (ids < hi), max_out=k)
+        if not bool(valid.all()):
+            return None
+        got = [int(a) for a in np.asarray(addrs)]
+        self._pstate = self._pstate.at[jnp.asarray(got)].set(USED)
+        self._pages.setdefault(slot, []).extend(got)
+        return got
+
+    def pages(self, slot: int) -> list[int]:
+        """``slot``'s ordered page list (logical rank -> sub-page id)."""
+        self._check(slot)
+        return list(self._pages.get(slot, []))
 
     def victim(self) -> int | None:
         """The least-recently-used *used* page (LRU eviction candidate).
@@ -112,10 +182,15 @@ class SlotAllocator:
 
     # -- transitions (single-address broadcast writes) ----------------------
     def free(self, slot: int) -> None:
+        """Release ``slot`` AND its whole page list — retire, cancel and
+        park all come through here, so sub-pages cannot leak."""
         self._check(slot)
         if int(self._state[slot]) != USED:
             raise ValueError(f"double free of slot {slot}")
         self._state = self._state.at[slot].set(FREE)
+        held = self._pages.pop(slot, [])
+        if held:
+            self._pstate = self._pstate.at[jnp.asarray(held)].set(FREE)
 
     def touch(self, slot: int) -> None:
         """Stamp ``slot`` as most recently used (LRU bookkeeping)."""
@@ -131,14 +206,20 @@ class SlotAllocator:
     def state_vector(self) -> np.ndarray:
         return np.asarray(self._state)
 
+    def page_state_vector(self) -> np.ndarray:
+        return np.asarray(self._pstate[:self.n_pages])
+
 
 class OracleAllocator:
     """Naive host-side allocator with identical semantics — the property
     tests' differential oracle (no CPM ops, just Python)."""
 
-    def __init__(self, n_slots: int):
+    def __init__(self, n_slots: int, n_pages: int = 0):
         self.n_slots = n_slots
+        self.n_pages = n_pages
         self.used: dict[int, int] = {}          # slot -> last-use tick
+        self.page_lists: dict[int, list[int]] = {}   # slot -> ordered pages
+        self.page_owner: dict[int, int] = {}         # page -> slot
         self._clock = 0
 
     def alloc(self) -> int | None:
@@ -146,11 +227,14 @@ class OracleAllocator:
             if s not in self.used:
                 self._clock += 1
                 self.used[s] = self._clock
+                self.page_lists[s] = []
                 return s
         return None
 
     def free(self, slot: int) -> None:
         del self.used[slot]
+        for p in self.page_lists.pop(slot, []):
+            del self.page_owner[p]
 
     def touch(self, slot: int) -> None:
         self._clock += 1
@@ -167,3 +251,22 @@ class OracleAllocator:
 
     def used_slots(self) -> list[int]:
         return sorted(self.used)
+
+    # -- sub-page file ------------------------------------------------------
+    def alloc_pages(self, slot: int, k: int, lo: int = 0,
+                    hi: int | None = None) -> list[int] | None:
+        hi = self.n_pages if hi is None else hi
+        got = [p for p in range(lo, hi) if p not in self.page_owner][:k]
+        if len(got) < k:
+            return None
+        for p in got:
+            self.page_owner[p] = slot
+        self.page_lists.setdefault(slot, []).extend(got)
+        return got
+
+    def pages(self, slot: int) -> list[int]:
+        return list(self.page_lists.get(slot, []))
+
+    def page_free_count(self, lo: int = 0, hi: int | None = None) -> int:
+        hi = self.n_pages if hi is None else hi
+        return sum(1 for p in range(lo, hi) if p not in self.page_owner)

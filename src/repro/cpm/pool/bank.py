@@ -1,17 +1,24 @@
-"""`CPMBank` — one fixed-shape array of CPM pages.
+"""`CPMBank` — one fixed-shape array of CPM sub-pages.
 
 A bank is the pool's unit of physical residency: a batched ``(slots, width)``
-:class:`~repro.cpm.array.CPMArray` whose rows are *pages* handed out by the
-allocator and whose per-row ``used_len`` registers are the §4.2 "memory
-managing itself" length state.  The bank owns the buffers; callers get
-transient ``CPMArray`` views (:meth:`device`) to run programs against and
-write the result back with :meth:`update` — the bank never copies rows to
-run an instruction stream, only to move pages in or out.
+:class:`~repro.cpm.array.CPMArray` whose rows are *sub-pages* handed out by
+the allocator and whose per-row ``used_len`` registers are the §4.2 "memory
+managing itself" length state.  Under the serving pool's paged layout the
+rows are ``(pages_per_bank, page_size)`` fixed-size sub-pages: a session's
+logical token row is its ordered page list's rows concatenated, each
+sub-page's length register holding how much of it is live (full pages
+``page_size``, the tail page the remainder).  The degenerate
+``page_size == max_len`` configuration makes every row a whole session —
+the pre-paging layout, still what standalone tests build.  The bank owns
+the buffers; callers get transient ``CPMArray`` views (:meth:`device`) to
+run programs against and write the result back with :meth:`update` — the
+bank never copies rows to run an instruction stream, only to move
+sub-pages in or out.
 
-Page movement is the one place rows do travel, and it goes through the
+Sub-page movement is the one place rows do travel, and it goes through the
 paged-row kernels (`repro.kernels.cpm_kernels.gather_rows` /
 ``scatter_rows``) on the pallas backend — dynamic page indices ride in
-scalar-prefetch so each page is ONE (1, width) DMA — with a plain jnp
+scalar-prefetch so each sub-page is ONE (1, width) DMA — with a plain jnp
 take/scatter realization on reference, differential-tested identical.
 """
 

@@ -192,7 +192,7 @@ class MultiBankScheduler:
             return jnp.ones((r,), jnp.int32)
         return jnp.zeros((r,), jnp.int32)
 
-    def compiled_commit(self, bank_id: int, k: int):
+    def compiled_commit(self, bank_id: int, k: int, rows: int | None = None):
         """The serving hot path's packing, pre-collapsed: every row of the
         bank runs the same ``insert(k tokens) -> truncate`` stream, so the
         per-session operand scatter reduces to stacked vectors and the
@@ -207,9 +207,14 @@ class MultiBankScheduler:
         on the same ``CPMProgram`` + fusing scheduler as :meth:`flush`
         (ONE fused mega-kernel launch per call on a pallas bank), but with
         no per-call Python packing, so a compiled serving step can inline
-        it.  Not jitted here — callers embed it in their own programs."""
+        it.  Not jitted here — callers embed it in their own programs.
+
+        ``rows`` overrides the row count when the bank's physical rows are
+        sub-pages (the paged pool): the commit then runs on the caller's
+        gathered *logical* rows, not on the bank buffer directly."""
         bank = self.banks[bank_id]
-        return packed_commit(bank.backend, bank.interpret, bank.slots, k)
+        return packed_commit(bank.backend, bank.interpret,
+                             bank.slots if rows is None else rows, k)
 
     def _compiled(self, bank_id: int, template, dyn_sig):
         """One jitted executor per (bank, template, operand-name signature):

@@ -8,8 +8,13 @@ arXiv:2412.02218).  The planner groups one step's FIFO admission window:
 
   * **fresh** sessions bucket by prompt length — each bucket prefills as
     ONE stacked launch and scatters with ONE program;
-  * **parked** sessions (preempted earlier, pages saved host-side) form
-    restore groups — no prefill at all, just a batched page re-seat.
+  * **parked** sessions (preempted earlier, sub-pages saved host-side)
+    form restore groups — no prefill at all, just a batched page re-seat.
+    Groups bucket by *saved page count*: the restore program stacks the
+    whole group's page images, so only sessions with the same number of
+    live sub-pages can share one launch (under the degenerate whole-row
+    layout every parked session saves one page, so this reduces to the
+    old single restore group).
 
 Pure host-side planning over Session objects; the pool executes the plan
 (``SessionPool._admit_bucket`` / ``_restore_group``).  With
@@ -47,15 +52,18 @@ def plan(sessions: list[Session], batching: bool = True) -> AdmissionPlan:
     group).  Every planned session is admitted in the same ``step``, so
     inter-group order carries no fairness weight."""
     fresh_by_len: dict[int, list[Session]] = {}
+    parked_by_pages: dict[int, list[Session]] = {}
     parked: list[Session] = []
     for s in sessions:
         if s.phase == PARKED:
             parked.append(s)
+            n_pages = s.parked.n_pages if s.parked is not None else 0
+            parked_by_pages.setdefault(n_pages, []).append(s)
         else:
             fresh_by_len.setdefault(s.prompt_len, []).append(s)
     if batching:
         buckets = tuple(tuple(b) for b in fresh_by_len.values())
-        restores = (tuple(parked),) if parked else ()
+        restores = tuple(tuple(g) for g in parked_by_pages.values())
     else:                                   # strict arrival order, one each
         buckets = tuple((s,) for s in sessions if s.phase != PARKED)
         restores = tuple((s,) for s in parked)

@@ -11,9 +11,13 @@ deterministic core:
     for a live process: ``serve()`` runs the continuous tick loop
     cooperatively on the event loop, parking on an event when idle, and
     ``stream()`` yields each request's new tokens as the bank commits
-    them.  One tick's compute blocks the event loop (the pool call is
-    synchronous jax) — fine for a single-process front door; a
-    production deployment would push ticks to a worker thread.
+    them.  A tick's compute (synchronous jax) runs in a worker thread
+    via ``asyncio.to_thread``, so the event loop stays responsive —
+    ``asubmit``/``stream`` consumers are never blocked behind a decode
+    chunk.  Delivery (queue/event signalling) still happens on the event
+    loop after the thread returns: asyncio primitives are not
+    thread-safe, and the pool itself is single-writer — only the serve
+    loop's one in-flight thread ever calls ``pool.step``.
 
 Per-request knobs ride on :class:`Request`: a GenConfig override
 (sampling params realized per pool row), a token budget, and an optional
@@ -83,12 +87,15 @@ class Gateway:
                  admit_batching: bool = True,
                  preempt: bool | PreemptConfig = True,
                  bank_backend: str = "reference",
-                 bank_interpret: bool | None = None, rng=None):
+                 bank_interpret: bool | None = None, rng=None,
+                 page_size: int | None = None,
+                 pages_per_bank: int | None = None):
         self.gen = gen if gen is not None else GenConfig()
         self.pool = engine.session_pool(
             slots=slots, n_banks=n_banks, gen=self.gen, chunk=chunk,
             bank_backend=bank_backend, bank_interpret=bank_interpret,
-            rng=rng, admit_batching=admit_batching)
+            rng=rng, admit_batching=admit_batching, page_size=page_size,
+            pages_per_bank=pages_per_bank)
         if preempt:
             cfg = preempt if isinstance(preempt, PreemptConfig) else None
             self.preemptor: Preemptor | None = Preemptor(self.pool, cfg)
@@ -266,12 +273,22 @@ class Gateway:
 
     async def serve(self, idle_wait: float = 0.05) -> None:
         """The continuous loop: tick while work is pending, park on the
-        wake event (set by asubmit) when idle."""
+        wake event (set by asubmit) when idle.
+
+        The heartbeat's compute half (``EngineLoop.tick`` — preempt,
+        step, collect; synchronous jax) runs in a worker thread so the
+        event loop keeps servicing ``asubmit``/``stream`` during a
+        decode chunk.  The delivery half (``_publish`` — queue puts,
+        event sets) runs back on the event loop: asyncio primitives are
+        not thread-safe.  Cross-thread safety of the pool state is the
+        serve loop's single-flight discipline — exactly one tick thread
+        exists at a time, and ``submit`` only appends to the host-side
+        FIFO table, which the tick reads at well-defined points."""
         wake = self._ensure_wake()
         while not self._stopping:
             if self.loop.pending():
-                self.tick()
-                await asyncio.sleep(0)     # let submitters/streamers run
+                await asyncio.to_thread(self.loop.tick)
+                self._publish()
             else:
                 wake.clear()
                 try:

@@ -56,21 +56,32 @@ class Preemptor:
 
     def maybe_preempt(self) -> int:
         """Park LRU victims until every fresh arrival could be seated (or
-        the LRU candidate is protected).  Returns how many were parked."""
+        the LRU candidate is protected).  Returns how many were parked.
+
+        Seating is two-resource under the paged layout: a fresh session
+        needs a slot AND its admission page grant.  Pressure on *either*
+        resource justifies eviction — a parked victim frees both its slot
+        and its whole page list at once (under the degenerate whole-row
+        layout pages and slots are one-to-one, so the two deficits
+        coincide and this reduces to the old slot-only policy)."""
         pool = self.pool
-        fresh = sum(1 for s in pool.table.peek_waiting(
-            pool.table.waiting_count()) if s.phase == WAITING)
-        want = fresh - pool._free_hint
+        window = pool.table.peek_waiting(pool.table.waiting_count())
+        fresh = [s for s in window if s.phase == WAITING]
+        want = len(fresh) - pool._free_hint
+        want_pages = (sum(pool._grant0(s.prompt_len) for s in fresh)
+                      - pool.alloc.page_free_count())
         parked = 0
-        while want > 0:
+        while want > 0 or want_pages > 0:
             sess = pool.victim_session()
             if sess is None or sess.finished:
                 break                       # nothing evictable right now
             if self._protected(sess):
                 self.denied += 1
                 break                       # LRU is protected: stop, don't churn
+            held = len(pool.alloc.pages(sess.slot))
             pool.park(sess.sid)
             self.preempted += 1
             parked += 1
             want -= 1
+            want_pages -= held
         return parked

@@ -8,6 +8,22 @@ round-trip over the bus.  This is the paper's thesis applied to serving:
   * speculative rollback     = range delete (`truncate`)
   * hole compaction          = stable compaction (`compact_slots`)
   * prefix-cache splice      = range insert (`splice_prefix`)
+  * paged residency          = sub-page pools + page-table gather/scatter
+                               (`paged_pool` / `logical_view` /
+                               `merge_paged` / `seat_caches` / `lift_slot`)
+
+The paged helpers implement the serving pool's vLLM-style layout: every
+*global*-attention k/v leaf is stored as a pool of fixed-size sub-pages
+(``(..., n_pages, KVH, page_size, dh)``) instead of one ``max_len`` row
+per session, and a per-slot page table ``(B, C)`` (``C = max_len //
+page_size``; entries ``>= n_pages`` are sentinels) maps each session's
+logical row onto its page list.  Local-window rings, recurrent states
+and ``len`` leaves stay per-slot — only the worst-case-sized global
+caches are paged.  Gathers reassemble the FULL logical width (attention
+then runs bit-identically to the un-paged layout; sentinel pages clamp
+to an arbitrary page and are excluded by the ``len`` mask), scatters
+write back only the pages named by the (dirty-masked) table — sentinel
+entries drop.
 
 All ops treat the slot axis (-2 of (B, KVH, S, dh)) as the PE address axis.
 The insert/truncate paths run through :class:`repro.cpm.CPMArray` — the
@@ -106,6 +122,185 @@ def broadcast_lens(caches, batch: int):
             return type(node)([walk(x) for x in node])
         return node
     return walk(caches)
+
+
+def attn_sites(cfg) -> tuple[tuple[int, ...], tuple[int, ...]]:
+    """Positions of the *global*-attention cache nodes in a pool tree —
+    (unit indices into ``blocks``, indices into ``tail``).  These are the
+    leaves the paged layout replaces; everything else stays per-slot."""
+    from repro.models import lm
+    unit, _, tail = lm._layout(cfg)
+    return (tuple(u for u, kind in enumerate(unit) if kind == "attn"),
+            tuple(t for t, kind in enumerate(tail) if kind == "attn"))
+
+
+def _map_attn_nodes(caches, cfg, site_fn):
+    """Rebuild a cache tree with ``site_fn(attn_node, stacked)`` applied to
+    every global-attention node (``stacked``: leading rep axis or not);
+    other nodes pass through untouched."""
+    ub, ut = attn_sites(cfg)
+    blocks = [dict(node, attn=site_fn(node["attn"], True))
+              if u in ub else node
+              for u, node in enumerate(caches["blocks"])]
+    tail = [dict(node, attn=site_fn(node["attn"], False))
+            if t in ut else node
+            for t, node in enumerate(caches["tail"])]
+    return {"blocks": blocks, "tail": tail}
+
+
+def paged_pool(caches, cfg, n_pages: int, page_size: int):
+    """Re-layout zero-initialized decode caches for paged serving: every
+    global-attn k/v leaf ``(..., B, KVH, max_len, dh)`` becomes a sub-page
+    pool ``(..., n_pages, KVH, page_size, dh)``; ``len`` leaves and all
+    non-global nodes keep their per-slot shapes."""
+    def site(a, stacked):
+        k = a["k"]
+        if stacked:
+            r, _, kvh, _, dh = k.shape
+            shp = (r, n_pages, kvh, page_size, dh)
+        else:
+            _, kvh, _, dh = k.shape
+            shp = (n_pages, kvh, page_size, dh)
+        return dict(a, k=jnp.zeros(shp, k.dtype), v=jnp.zeros(shp, k.dtype))
+    return _map_attn_nodes(caches, cfg, site)
+
+
+def _gather_leaf(pool_leaf, pt, stacked: bool):
+    """Pool pages -> logical rows: ``(..., P, KVH, pg, dh)`` gathered at
+    ``pt (B, C)`` and flattened to ``(..., B, KVH, C*pg, dh)``.  Sentinel
+    entries clamp to the last page — their content is masked downstream by
+    the per-row ``len``."""
+    n_pages = pool_leaf.shape[1] if stacked else pool_leaf.shape[0]
+    ptc = jnp.clip(jnp.asarray(pt, jnp.int32), 0, n_pages - 1)
+    if stacked:
+        g = jnp.moveaxis(pool_leaf[:, ptc], 3, 2)  # (R, B, KVH, C, pg, dh)
+        r, b, kvh, c, pg, dh = g.shape
+        return g.reshape(r, b, kvh, c * pg, dh)
+    g = jnp.moveaxis(pool_leaf[ptc], 2, 1)         # (B, KVH, C, pg, dh)
+    b, kvh, c, pg, dh = g.shape
+    return g.reshape(b, kvh, c * pg, dh)
+
+
+def _scatter_leaf(pool_leaf, rows_leaf, pt, stacked: bool):
+    """Logical rows -> pool pages: the inverse of :func:`_gather_leaf`;
+    ``pt`` entries ``>= n_pages`` (sentinels / clean pages) drop."""
+    pt = jnp.asarray(pt, jnp.int32)
+    c = pt.shape[-1]
+    if stacked:
+        r, b, kvh, w, dh = rows_leaf.shape
+        vals = rows_leaf.reshape(r, b, kvh, c, w // c, dh)
+        vals = jnp.moveaxis(vals, 2, 3)            # (R, B, C, KVH, pg, dh)
+        return pool_leaf.at[:, pt].set(vals.astype(pool_leaf.dtype),
+                                       mode="drop")
+    b, kvh, w, dh = rows_leaf.shape
+    vals = rows_leaf.reshape(b, kvh, c, w // c, dh)
+    vals = jnp.moveaxis(vals, 1, 2)                # (B, C, KVH, pg, dh)
+    return pool_leaf.at[pt].set(vals.astype(pool_leaf.dtype), mode="drop")
+
+
+def logical_view(pool_caches, cfg, pt):
+    """The decode-facing view of a paged pool: global-attn k/v gathered
+    through the page table ``pt (B, C)`` into full-width logical rows —
+    exactly the un-paged layout, so ``lm.decode_step`` runs unchanged and
+    bit-identically.  All other leaves pass through."""
+    def site(a, stacked):
+        return dict(a, k=_gather_leaf(a["k"], pt, stacked),
+                    v=_gather_leaf(a["v"], pt, stacked))
+    return _map_attn_nodes(pool_caches, cfg, site)
+
+
+def merge_paged(pool_caches, slot_caches, cfg, pt):
+    """Fold a post-decode logical tree back into the pool: global-attn k/v
+    scattered through ``pt`` (dirty-masked — sentinel entries drop, so
+    clean pages are not rewritten); every other leaf — updated rings,
+    recurrent states, ``len`` — is taken from ``slot_caches``."""
+    ub, ut = attn_sites(cfg)
+    pool = {"blocks": list(slot_caches["blocks"]),
+            "tail": list(slot_caches["tail"])}
+    for u in ub:
+        a, pa = pool["blocks"][u]["attn"], pool_caches["blocks"][u]["attn"]
+        pool["blocks"][u] = dict(pool["blocks"][u], attn=dict(
+            a, k=_scatter_leaf(pa["k"], a["k"], pt, True),
+            v=_scatter_leaf(pa["v"], a["v"], pt, True)))
+    for t in ut:
+        a, pa = pool["tail"][t]["attn"], pool_caches["tail"][t]["attn"]
+        pool["tail"][t] = dict(pool["tail"][t], attn=dict(
+            a, k=_scatter_leaf(pa["k"], a["k"], pt, False),
+            v=_scatter_leaf(pa["v"], a["v"], pt, False)))
+    return pool
+
+
+def seat_caches(pool_caches, new_caches, cfg, idx, pt):
+    """Check ``k`` sessions' slot-form caches into the pool: global-attn
+    k/v page-chunked and scattered through ``pt (k, C')`` (sentinel-padded
+    past each session's grant), every other leaf written at rows ``idx``
+    (blocks batch axis 1, tail axis 0).  Serves both admission (``C' = C``
+    prefill rows) and restore (``C' = n_live`` saved sub-pages)."""
+    ub, ut = attn_sites(cfg)
+
+    def wr_b(p, n):
+        return p.at[:, idx].set(n.astype(p.dtype))
+
+    def wr_t(p, n):
+        return p.at[idx].set(n.astype(p.dtype))
+
+    def node_out(pnode, nnode, u_attn, wr, stacked):
+        if not u_attn:
+            return jax.tree.map(wr, pnode, nnode)
+        out = {}
+        for kk, vv in pnode.items():
+            if kk == "attn":
+                na = nnode["attn"]
+                out[kk] = dict(
+                    vv, k=_scatter_leaf(vv["k"], na["k"], pt, stacked),
+                    v=_scatter_leaf(vv["v"], na["v"], pt, stacked),
+                    len=wr(vv["len"], na["len"]))
+            else:
+                out[kk] = jax.tree.map(wr, vv, nnode[kk])
+        return out
+
+    return {
+        "blocks": [node_out(p, n, u in ub, wr_b, True) for u, (p, n)
+                   in enumerate(zip(pool_caches["blocks"],
+                                    new_caches["blocks"]))],
+        "tail": [node_out(p, n, t in ut, wr_t, False) for t, (p, n)
+                 in enumerate(zip(pool_caches["tail"],
+                                  new_caches["tail"]))],
+    }
+
+
+def lift_slot(pool_caches, cfg, slot: int, pt1):
+    """One session's park image out of the pool: global-attn k/v gathered
+    at ``pt1 (1, n_live)`` — ONLY its live sub-pages travel — flattened to
+    a logical ``n_live * page_size`` row; every other leaf sliced at
+    ``slot``.  The restore path re-seats the image via
+    :func:`seat_caches`."""
+    ub, ut = attn_sites(cfg)
+
+    def node_out(node, u_attn, stacked):
+        sl = (lambda p: p[:, slot]) if stacked else (lambda p: p[slot])
+        if not u_attn:
+            return jax.tree.map(sl, node)
+        out = {}
+        for kk, vv in node.items():
+            if kk == "attn":
+                if stacked:
+                    k = _gather_leaf(vv["k"], pt1, True)[:, 0]
+                    v = _gather_leaf(vv["v"], pt1, True)[:, 0]
+                else:
+                    k = _gather_leaf(vv["k"], pt1, False)[0]
+                    v = _gather_leaf(vv["v"], pt1, False)[0]
+                out[kk] = dict(vv, k=k, v=v, len=sl(vv["len"]))
+            else:
+                out[kk] = jax.tree.map(sl, vv)
+        return out
+
+    return {
+        "blocks": [node_out(n, u in ub, True)
+                   for u, n in enumerate(pool_caches["blocks"])],
+        "tail": [node_out(n, t in ut, False)
+                 for t, n in enumerate(pool_caches["tail"])],
+    }
 
 
 def compact_slots(k: jax.Array, v: jax.Array, keep: jax.Array):

@@ -3,8 +3,8 @@
 The static engine runs one batch to completion: a single slow request pins
 every row's VMEM/HBM for the whole generation.  The session pool replaces
 that with the paper's facility view of memory (§4.2): a fixed set of
-*pages* — KV-cache rows and token-buffer bank rows — that sessions check
-in and out of mid-flight:
+fixed-size **sub-pages** — KV-cache pages and token-buffer bank pages —
+that sessions check in and out of mid-flight:
 
   * ``submit``  — queue a prompt + token budget (FIFO), optionally with
     per-request sampling params (a GenConfig override);
@@ -12,43 +12,60 @@ in and out of mid-flight:
     admission** (same-length prompts bucket into ONE stacked prefill
     launch + ONE scatter program, so admission cost scales with arrival
     batches, not arrivals; parked sessions restore in one group, no
-    prefill), decode a ``chunk`` of tokens for every page in ONE
-    compiled program (an inner scan with per-row positions) that also
-    commits each bank's tokens through the MASIM packer's pre-collapsed
-    ``insert -> truncate`` stream (``MultiBankScheduler.compiled_commit``
-    — one fused launch per bank on pallas), then retire finished
+    prefill), decode a ``chunk`` of tokens for every session in ONE
+    compiled program (an inner scan with per-row positions) that reads
+    and commits KV **through the page table**, then retire finished
     sessions and reclaim their pages;
-  * ``park``    — preempt an ACTIVE session: its KV/token pages are
-    saved to a host-side :class:`PageState` parking buffer, the slot is
-    freed, and the session re-queues FIFO for a later restore that
-    continues the token stream exactly where it was cut (the LRU
-    *policy* lives in ``repro.serve.gateway.preempt``; this is the
-    mechanism);
+  * ``park``    — preempt an ACTIVE session: only its LIVE sub-pages are
+    saved to a host-side :class:`PageState` parking buffer, the slot and
+    page list are freed, and the session re-queues FIFO for a later
+    restore that continues the token stream exactly where it was cut
+    (the LRU *policy* lives in ``repro.serve.gateway.preempt``; this is
+    the mechanism);
   * ``cancel``  — abort a session in any phase, returning what ran;
   * ``drain``   — step until every submitted session is done.
 
-Bookkeeping is CPM all the way down: free-page lookups run on the
-allocator's metadata device (§6 ``compare`` + Rule-6 drain, ``compact``
-for the packed used-page list), token commits are §4.2
-``insert``/``truncate`` instruction streams, and pages move through the
-scalar-prefetch gather/scatter kernels on pallas banks.  The host keeps
-only mirrors (live flags, budgets) — a steady-state step is one compiled
-call, no device round-trips.
+Paged layout (the vLLM idea expressed as CPM ops): storage is
+``page_size``-token sub-pages, not ``max_len`` rows.  Each session holds
+an ordered *page list* (``SlotAllocator.pages``); a per-slot page table
+``(slots, C)`` maps logical page ranks to sub-page ids.  Global-attn KV
+leaves live as page pools (``kv_cache.paged_pool``), token rows as
+``(pages_per_bank, page_size)`` banks.  The compiled chunk gathers each
+session's FULL logical row through the table (bit-identical attention —
+same width, same mask as the un-paged layout), scans ``chunk`` decode
+steps, then scatters back only the *dirty* pages (ranks touched since
+the chunk started; clean pages keep their sentinel and drop).  Sessions
+are admitted with ``ceil((prompt+1)/page_size)`` pages and topped up
+host-side between chunks (``_ensure_pages``) with enough slack to cover
+the next chunk — a session crossing a page boundary mid-decode never
+stalls the compiled step.  When a bank runs dry the youngest sessions
+park (their pages free instantly), so the oldest always progresses and
+a lone session can never livelock.
+
+Bookkeeping is CPM all the way down: free-slot and free-page lookups run
+on the allocator's metadata devices (§6 ``compare`` + Rule-6 drain,
+§7.5 ``global_limit(min)`` for the LRU victim), token commits are §4.2
+``insert``/``truncate`` instruction streams over the gathered logical
+rows, and sub-pages move through the scalar-prefetch gather/scatter
+kernels on pallas banks.  The host keeps only mirrors (live flags,
+budgets, page lists) — a steady-state step is one compiled call, no
+device round-trips.
 
 Correctness contract: under greedy decoding the pool is **token-identical**
 to generating each session alone with ``Engine.generate`` — decode math is
-row-independent, admission replays the same per-session prefill, and each
-session sees exactly the same (token, position, cache) sequence it would
-see solo, at any ``chunk`` size (a session finishing mid-chunk keeps
-decoding into slack like the static engine's overshoot rows; the commit
-clamps to its budget so overshoot tokens never surface).  The identity
-survives preemption: decode math is row-independent and ``(KV rows, pos,
-cur, token row)`` fully determine a session's future, so a parked page
-image restored into *any* free slot replays the same stream —
-``tests/test_session_pool.py`` and ``tests/test_gateway.py`` assert both
-differentially.  Sampled decoding is supported (per-request sampling
-params via :func:`repro.serve.sampling.sample_rows`, per-step rng) but
-makes no cross-engine identity claim — the rng schedule differs.
+row-independent, admission replays the same per-session prefill, the paged
+gather/scatter round-trip is a pure copy, and each session sees exactly
+the same (token, position, cache) sequence it would see solo, at any
+``chunk`` size (a session finishing mid-chunk keeps decoding into slack
+like the static engine's overshoot rows; the commit clamps to its budget
+so overshoot tokens never surface).  The identity survives preemption:
+``(live sub-pages, pos, cur, token row)`` fully determine a session's
+future, so a parked page image restored into *any* free slot + page list
+replays the same stream — ``tests/test_session_pool.py`` and
+``tests/test_gateway.py`` assert both differentially.  Sampled decoding
+is supported (per-request sampling params via
+:func:`repro.serve.sampling.sample_rows`, per-step rng) but makes no
+cross-engine identity claim — the rng schedule differs.
 """
 
 from __future__ import annotations
@@ -70,28 +87,37 @@ from . import kv_cache, sampling
 class PageState:
     """Host-side parking image of one preempted session: everything the
     pooled decode needs to continue token-identically from any free slot
-    — its KV rows (blocks leaves sliced at batch axis 1, tail leaves at
-    axis 0; the per-row ``len`` leaves ride along in the same trees), the
-    scan position, the current token, and its token-bank row."""
+    — its LIVE KV sub-pages flattened to a logical ``n_pages *
+    page_size`` row per global-attn leaf (per-slot leaves — rings,
+    recurrent states, lengths — ride along in the same trees), the scan
+    position, the current token, and its token row."""
     caches: Any                        # {"blocks": [...], "tail": [...]} np
     pos: int
     cur: int
-    row: np.ndarray                    # (max_len,) token page
+    row: np.ndarray                    # (row_len,) token content
     row_len: int
+    n_pages: int                       # live sub-pages saved per leaf
 
 
 class SessionPool:
     """Paged continuous-batching state for one :class:`~repro.serve.Engine`.
 
-    ``slots`` pages are split across ``n_banks`` equal banks (the model
-    batch is the concatenation of all banks' rows).  ``gen`` fixes the
-    pool-wide sampling parameters; per-session budgets come from
-    ``submit``.  ``chunk`` tokens decode per ``step`` inside one compiled
-    program — larger chunks amortize dispatch, at the cost of coarser
+    ``slots`` sessions are split across ``n_banks`` equal banks (the model
+    batch is the concatenation of all banks' rows).  ``page_size`` sets
+    the sub-page width in tokens (default: ``max_len`` — one page per
+    session, the degenerate whole-row layout); ``pages_per_bank`` sets
+    each bank's sub-page pool size (default: enough for every slot's
+    worst case, i.e. whole-row capacity).  A *paged* pool uses
+    ``page_size < max_len`` with ``pages_per_bank`` well below the worst
+    case — capacity is then bounded by tokens actually resident, not by
+    ``slots * max_len``.  ``gen`` fixes the pool-wide sampling
+    parameters; per-session budgets come from ``submit``.  ``chunk``
+    tokens decode per ``step`` inside one compiled program — larger
+    chunks amortize dispatch, at the cost of coarser
     admission/retirement granularity.  ``bank_backend``/``bank_interpret``
     route the token banks ("pallas" turns each chunk's bank commit into
-    one fused mega-kernel launch and page moves into scalar-prefetch DMA
-    kernels).  ``admit_batching=False`` degrades admission to strict
+    one fused mega-kernel launch and sub-page moves into scalar-prefetch
+    DMA kernels).  ``admit_batching=False`` degrades admission to strict
     one-at-a-time FIFO (buckets of one) — the baseline policy the
     ``serve_gateway`` benchmark compares against.
     """
@@ -99,7 +125,8 @@ class SessionPool:
     def __init__(self, engine, slots: int = 8, n_banks: int = 1, gen=None,
                  chunk: int = 1, bank_backend: str = "reference",
                  bank_interpret: bool | None = None, rng=None,
-                 admit_batching: bool = True):
+                 admit_batching: bool = True, page_size: int | None = None,
+                 pages_per_bank: int | None = None):
         from .engine import GenConfig
 
         if engine.cfg.enc_dec:
@@ -121,18 +148,34 @@ class SessionPool:
         self._bank_backend = bank_backend
         self._bank_interpret = bank_interpret
 
-        self.alloc = SlotAllocator(slots)
-        self.banks = [CPMBank(self.rows_per_bank, self.max_len,
-                              backend=bank_backend,
+        pg = self.max_len if page_size is None else page_size
+        if not 0 < pg <= self.max_len or self.max_len % pg:
+            raise ValueError(
+                f"page_size ({pg}) must be a positive divisor of max_len "
+                f"({self.max_len})")
+        self.page_size = pg
+        self.C = self.max_len // pg        # page-table width per slot
+        ppb = (self.rows_per_bank * self.C if pages_per_bank is None
+               else pages_per_bank)
+        if ppb <= 0:
+            raise ValueError(f"pages_per_bank must be positive, got {ppb}")
+        self.pages_per_bank = ppb
+        self.total_pages = n_banks * ppb   # doubles as the table sentinel
+
+        self.alloc = SlotAllocator(slots, n_pages=self.total_pages)
+        self.banks = [CPMBank(ppb, pg, backend=bank_backend,
                               interpret=bank_interpret)
                       for _ in range(n_banks)]
         self.sched = MultiBankScheduler(self.banks)
         self.table = SessionTable()
 
         caches = lm.init_caches(engine.cfg, slots, self.max_len)
-        self.caches = kv_cache.broadcast_lens(caches, slots)
+        caches = kv_cache.broadcast_lens(caches, slots)
+        self.caches = kv_cache.paged_pool(caches, engine.cfg,
+                                          self.total_pages, pg)
         self.pos = jnp.zeros((slots,), jnp.int32)
         self.cur = jnp.zeros((slots,), jnp.int32)
+        self.tok_lens = jnp.zeros((slots,), jnp.int32)
         self.live = np.zeros((slots,), bool)
         self._free_hint = slots            # host mirror of the free count
         self._rng = rng if rng is not None else jax.random.PRNGKey(0)
@@ -150,8 +193,25 @@ class SessionPool:
         self.prefill_launches = 0
         self.admit_batches = 0
         self.preemptions = 0
+        self.page_stalls = 0               # parks forced by page pressure
         self.restores = 0
         self.cancels = 0
+
+    # -- paging arithmetic --------------------------------------------------
+    def pages_for(self, tokens: int) -> int:
+        """Sub-pages needed to hold ``tokens`` of content."""
+        return -(-tokens // self.page_size)
+
+    def _bank_of(self, slot: int) -> int:
+        return slot // self.rows_per_bank
+
+    def _page_range(self, bank: int) -> tuple[int, int]:
+        """Bank ``bank``'s slice of the global sub-page id space."""
+        return bank * self.pages_per_bank, (bank + 1) * self.pages_per_bank
+
+    def _grant0(self, prompt_len: int) -> int:
+        """Admission grant: pages covering the prompt + its prefill token."""
+        return min(self.C, self.pages_for(prompt_len + 1))
 
     # -- public API ---------------------------------------------------------
     def submit(self, tokens, max_new_tokens: int | None = None,
@@ -163,8 +223,9 @@ class SessionPool:
         gateway's per-request knobs.  The budget comes from
         ``max_new_tokens``, falling back to the per-request then the pool
         GenConfig.  Degenerate requests are rejected here, before they
-        can occupy a page: empty prompts and non-positive budgets raise
-        ``ValueError``.
+        can occupy a page: empty prompts, non-positive budgets, requests
+        longer than a logical row, and requests whose worst-case page
+        count exceeds one bank's capacity all raise ``ValueError``.
         """
         tokens = jnp.asarray(tokens, jnp.int32).reshape(-1)
         s = int(tokens.shape[0])
@@ -185,16 +246,25 @@ class SessionPool:
             raise ValueError(
                 f"prompt ({s}) + budget ({budget}) exceeds max_len "
                 f"({self.max_len}); pages are max_len wide")
+        worst = min(self.C,
+                    self.pages_for(s + budget - 1 + self.chunk))
+        if worst > self.pages_per_bank:
+            raise ValueError(
+                f"prompt ({s}) + budget ({budget}) needs up to {worst} "
+                f"sub-pages of {self.page_size} tokens, but bank capacity "
+                f"is {self.pages_per_bank} pages — the session could "
+                f"never be seated")
         sess = self.table.add(tokens, s, budget)
         sess.gen = g
         return sess.sid
 
     def step(self) -> dict:
-        """Admit -> decode ``chunk`` tokens for every live page -> retire.
-
-        Returns a stats snapshot (see :meth:`stats`)."""
+        """Admit -> decode ``chunk`` tokens for every live session ->
+        retire.  Returns a stats snapshot (see :meth:`stats`)."""
         self._admit()
         self._retire()                      # budget-1 sessions finish on admit
+        if self.table.active_count():
+            self._ensure_pages()            # slack for the next chunk
         if self.table.active_count():
             self._decode_chunk()
             self._retire()
@@ -214,7 +284,7 @@ class SessionPool:
         return {
             "decode_steps": steps,
             "emitted": self.total_emitted,
-            # useful (budgeted) *decode* tokens per slot-step — dead pages,
+            # useful (budgeted) *decode* tokens per slot-step — dead rows,
             # chunk overshoot and drained-out tails all count against it
             # (prefill tokens are excluded: they cost no decode step)
             "occupancy": (self._decode_emitted / (steps * self.slots)
@@ -225,44 +295,74 @@ class SessionPool:
             "waiting": (self.table.waiting_count()
                         - self.table.parked_count()),
             "parked": self.table.parked_count(),
+            "pages_free": self.alloc.page_free_count(),
             "bank_launches": self.sched.bank_launches,
             "streams_packed": self.sched.streams_packed,
             "prefill_launches": self.prefill_launches,
             "admit_batches": self.admit_batches,
             "preemptions": self.preemptions,
+            "page_stalls": self.page_stalls,
             "restores": self.restores,
             "cancels": self.cancels,
         }
 
     # -- admission ----------------------------------------------------------
-    def _admit(self) -> None:
-        """Admit up to ``free`` queued sessions this step.
+    def _try_seat(self, need: int) -> int | None:
+        """Reserve one slot plus ``need`` sub-pages in the slot's own bank
+        — both CPM lookups on the metadata devices.  A slot whose bank is
+        out of pages is set aside and the next bank's slots are probed;
+        on failure everything probed is released and the caller leaves
+        the session queued."""
+        held: list[int] = []
+        try:
+            while True:
+                slot = self.alloc.alloc()   # CPM free-slot lookup
+                if slot is None:
+                    return None
+                lo, hi = self._page_range(self._bank_of(slot))
+                if self.alloc.alloc_pages(slot, need, lo, hi) is not None:
+                    return slot
+                held.append(slot)           # bank out of pages; try the next
+        finally:
+            for s in held:
+                self.alloc.free(s)
 
-        The admission *plan* (``repro.serve.gateway.admission``) splits
-        the FIFO window into parked-session restore groups (no prefill)
-        and same-prompt-length buckets of fresh sessions; every bucket
-        pays ONE stacked prefill launch + ONE scatter program regardless
-        of its size.  With ``admit_batching=False`` every group has one
-        member — the strict FIFO baseline."""
+    def _admit(self) -> None:
+        """Admit queued sessions that fit this step.
+
+        Seating is two-resource admission control: a session needs a free
+        slot AND its initial page grant (``ceil((prompt+1)/page_size)``
+        fresh, the saved page count parked) in the slot's bank.  Sessions
+        that do not fit stay queued in FIFO position.  The admission
+        *plan* (``repro.serve.gateway.admission``) splits the seated
+        window into parked-session restore groups (bucketed by saved page
+        count, no prefill) and same-prompt-length buckets of fresh
+        sessions; every bucket pays ONE stacked prefill launch + ONE
+        scatter program regardless of its size.  With
+        ``admit_batching=False`` every group has one member — the strict
+        FIFO baseline."""
         from .gateway import admission
         take = min(self._free_hint, self.table.waiting_count())
         if not take:
             return
-        plan = admission.plan(self.table.peek_waiting(take),
-                              batching=self.admit_batching)
+        seated: dict[int, int] = {}
+        for sess in self.table.peek_waiting(take):
+            need = (sess.parked.n_pages if sess.phase == PARKED
+                    else self._grant0(sess.prompt_len))
+            slot = self._try_seat(need)
+            if slot is None:
+                continue                    # stays queued, FIFO order kept
+            seated[sess.sid] = slot
+            self._free_hint -= 1
+        if not seated:
+            return
+        plan = admission.plan(
+            [s for s in self.table.peek_waiting(take) if s.sid in seated],
+            batching=self.admit_batching)
         for group in plan.restores:
-            self._restore_group(list(group))
+            self._restore_group(list(group), seated)
         for bucket in plan.buckets:
-            self._admit_bucket(list(bucket))
-
-    def _alloc_slots(self, k: int) -> list[int]:
-        slots = []
-        for _ in range(k):
-            slot = self.alloc.alloc()       # CPM free-page lookup
-            assert slot is not None, "free-count mirror out of sync"
-            slots.append(slot)
-        self._free_hint -= k
-        return slots
+            self._admit_bucket(list(bucket), seated)
 
     def _note_admit(self, sess, slot: int) -> None:
         """Host mirrors for one freshly seated session."""
@@ -274,70 +374,98 @@ class SessionPool:
         self._topk[slot] = sess.gen.top_k
         self._topp[slot] = sess.gen.top_p
 
-    def _admit_bucket(self, bucket) -> None:
+    def _page_table_rows(self, slots: list[int], width: int) -> np.ndarray:
+        """Page-table rows for freshly seated ``slots``: each session's
+        page list left-aligned into a ``(k, width)`` table, sentinel
+        (``total_pages``) beyond the grant."""
+        pt = np.full((len(slots), width), self.total_pages, np.int32)
+        for i, slot in enumerate(slots):
+            ids = self.alloc.pages(slot)
+            pt[i, :len(ids)] = ids
+        return pt
+
+    def _scatter_token_pages(self, pairs) -> None:
+        """Write freshly admitted/restored token rows into their banks:
+        ``pairs`` is ``[(slot, row (max_len-or-shorter device/np array),
+        row_len)]``; each row is page-chunked onto the slot's page list
+        with per-page length registers."""
+        per_bank: dict[int, list] = {}
+        for slot, row, row_len in pairs:
+            per_bank.setdefault(self._bank_of(slot), []).append(
+                (slot, row, row_len))
+        pg = self.page_size
+        for bank_id, members in per_bank.items():
+            base = bank_id * self.pages_per_bank
+            idx: list[int] = []
+            lens: list[int] = []
+            chunks = []
+            for slot, row, row_len in members:
+                ids = self.alloc.pages(slot)
+                n_live = self.pages_for(row_len)
+                use = ids[:n_live]
+                row = jnp.asarray(row, jnp.int32).reshape(-1)
+                padded = jnp.zeros((n_live * pg,), jnp.int32)
+                padded = padded.at[:row.shape[0]].set(row[:n_live * pg])
+                idx += [p - base for p in use]
+                lens += [min(pg, max(0, row_len - r * pg))
+                         for r in range(n_live)]
+                chunks.append(padded.reshape(n_live, pg))
+            self.banks[bank_id].scatter(
+                jnp.asarray(idx, jnp.int32), jnp.concatenate(chunks, 0),
+                jnp.asarray(lens, jnp.int32))
+
+    def _admit_bucket(self, bucket, seated: dict[int, int]) -> None:
         """Check a same-prompt-length bucket of fresh sessions in with one
         batched prefill and one scatter program."""
         engine = self.engine
         k, s = len(bucket), bucket[0].prompt_len
-        slots = self._alloc_slots(k)
+        slots = [seated[sess.sid] for sess in bucket]
         prompts = jnp.stack([sess.prompt for sess in bucket])
         logits, caches1 = engine._prefill(
             engine.params, batch={"tokens": prompts}, max_len=self.max_len)
         caches1 = kv_cache.broadcast_lens(caches1, k)
         admit = engine._program("pool_admit", self.gen, self._build_admit,
-                                s, k, self.slots)
+                                s, k, self.slots, self.page_size,
+                                self.pages_per_bank)
         self._rng, sub = jax.random.split(self._rng)
         rng = jax.random.fold_in(sub, bucket[0].sid)
         temp = jnp.asarray([se.gen.temperature for se in bucket], jnp.float32)
         topk = jnp.asarray([se.gen.top_k for se in bucket], jnp.int32)
         topp = jnp.asarray([se.gen.top_p for se in bucket], jnp.float32)
+        pt = jnp.asarray(self._page_table_rows(slots, self.C))
+        idx = jnp.asarray(slots, jnp.int32)
         self.caches, self.pos, self.cur, rows = admit(
-            self.caches, caches1, jnp.asarray(slots, jnp.int32), self.pos,
-            self.cur, logits, prompts, temp, topk, topp, rng)
+            self.caches, caches1, idx, pt, self.pos, self.cur, logits,
+            prompts, temp, topk, topp, rng)
+        self.tok_lens = self.tok_lens.at[idx].set(s + 1)
         self.prefill_launches += 1
         self.admit_batches += 1
-        per_bank: dict[int, list[int]] = {}
-        for i, (sess, slot) in enumerate(zip(bucket, slots)):
-            bank_id = slot // self.rows_per_bank
-            self.table.activate(sess.sid, bank_id, slot)
+        for sess, slot in zip(bucket, slots):
+            self.table.activate(sess.sid, self._bank_of(slot), slot)
             self._note_admit(sess, slot)
             sess.emitted = 1                # the prefill token
             self.total_emitted += 1
-            per_bank.setdefault(bank_id, []).append(i)
-        for bank_id, members in per_bank.items():
-            locals_ = jnp.asarray(
-                [slots[i] % self.rows_per_bank for i in members], jnp.int32)
-            self.banks[bank_id].scatter(
-                locals_, rows[jnp.asarray(members, jnp.int32)],
-                jnp.asarray([s + 1] * len(members), jnp.int32))
+        self._scatter_token_pages(
+            [(slot, rows[i], s + 1) for i, slot in enumerate(slots)])
 
-    def _build_admit(self, s: int, k: int, slots: int):
-        """Jitted batched page check-in for ``k`` prompts of length ``s``:
+    def _build_admit(self, s: int, k: int, slots: int, page_size: int,
+                     pages_per_bank: int):
+        """Jitted batched check-in for ``k`` prompts of length ``s``:
         sample each row's prefill token with its own sampling params,
-        scatter the bucket's KV into pool rows ``idx`` (blocks batch axis
-        1, tail axis 0 — whole rows replaced, nothing from the pages'
-        previous tenants survives), seed pos/cur, and build the
-        token-bank rows."""
-        del slots                           # cache-key discriminator
-        engine, width = self.engine, self.max_len
+        scatter the bucket's KV through the page table ``pt (k, C)``
+        (global-attn leaves page-chunked into the sub-page pools —
+        granted pages are fully rewritten, so nothing from their previous
+        tenants survives; per-slot leaves written at rows ``idx``), seed
+        pos/cur, and build the token rows."""
+        del slots, page_size, pages_per_bank    # cache-key discriminators
+        engine, width, cfg = self.engine, self.max_len, self.engine.cfg
 
-        def run(pool_caches, new_caches, idx, pos, cur, logits, prompts,
+        def run(pool_caches, new_caches, idx, pt, pos, cur, logits, prompts,
                 temp, topk, topp, rng):
             first = sampling.sample_rows(logits[:, -1], rng, temp, topk,
                                          topp)
-
-            def wr_b(p, n):
-                return p.at[:, idx].set(n.astype(p.dtype))
-
-            def wr_t(p, n):
-                return p.at[idx].set(n.astype(p.dtype))
-
-            caches = {
-                "blocks": jax.tree.map(wr_b, pool_caches["blocks"],
-                                       new_caches["blocks"]),
-                "tail": jax.tree.map(wr_t, pool_caches["tail"],
-                                     new_caches["tail"]),
-            }
+            caches = kv_cache.seat_caches(pool_caches, new_caches, cfg,
+                                          idx, pt)
             pos = pos.at[idx].set(s)
             cur = cur.at[idx].set(first)
             rows = (jnp.zeros((k, width), jnp.int32)
@@ -349,10 +477,10 @@ class SessionPool:
 
     # -- preemption (mechanism) ---------------------------------------------
     def park(self, sid: int) -> None:
-        """Preempt an ACTIVE session: save its pages into a host-side
-        :class:`PageState`, free its slot, and re-queue it at the FIFO
-        tail for a later token-identical restore.  The *policy* — who
-        gets parked, and when — lives in
+        """Preempt an ACTIVE session: save its LIVE sub-pages into a
+        host-side :class:`PageState`, free its slot and whole page list,
+        and re-queue it at the FIFO tail for a later token-identical
+        restore.  The *policy* — who gets parked, and when — lives in
         ``repro.serve.gateway.preempt``."""
         sess = self.table.get(sid)
         if sess.phase != ACTIVE:
@@ -361,81 +489,77 @@ class SessionPool:
             raise ValueError(f"session {sid} already hit its budget; "
                              "step() will retire it")
         slot = sess.slot
-        row, ln = self.banks[sess.bank].read_row(slot % self.rows_per_bank)
-        assert ln == sess.prompt_len + sess.emitted, (
-            ln, sess.prompt_len, sess.emitted)
-        image = {
-            "blocks": jax.tree.map(lambda p: p[:, slot],
-                                   self.caches["blocks"]),
-            "tail": jax.tree.map(lambda p: p[slot], self.caches["tail"]),
-        }
+        row_len = sess.prompt_len + sess.emitted
+        n_live = self.pages_for(row_len)
+        row = self._read_row(sess)
+        pt1 = jnp.asarray(
+            self._page_table_rows([slot], n_live)[:, :n_live])
+        image = kv_cache.lift_slot(self.caches, self.engine.cfg, slot, pt1)
         sess.parked = PageState(
             caches=jax.device_get(image), pos=int(self.pos[slot]),
-            cur=int(self.cur[slot]), row=np.asarray(row), row_len=int(ln))
+            cur=int(self.cur[slot]), row=np.asarray(row), row_len=row_len,
+            n_pages=n_live)
         sess.parks += 1
         self.preemptions += 1
         self.table.park(sid)
-        self.alloc.free(slot)               # page back to the free list
+        self._release(slot)
+
+    def _release(self, slot: int) -> None:
+        """Slot + page list back to the free files, mirrors pinned."""
+        self.alloc.free(slot)
         self._free_hint += 1
         self.live[slot] = False
         self.pos = self.pos.at[slot].set(0)
         self.cur = self.cur.at[slot].set(0)
+        self.tok_lens = self.tok_lens.at[slot].set(0)
 
-    def _restore_group(self, group) -> None:
-        """Re-admit parked sessions: ONE scatter program re-seats the
-        whole group's saved KV/pos/cur images (no prefill — the saved
-        pages already hold the history), then each token row scatters
-        back into its new bank."""
+    def _restore_group(self, group, seated: dict[int, int]) -> None:
+        """Re-admit parked sessions (all with the same saved page count,
+        the planner's grouping key): ONE scatter program re-seats the
+        whole group's saved sub-pages/pos/cur images (no prefill — the
+        saved pages already hold the history), then each token row
+        scatters back onto its new page list."""
         k = len(group)
-        slots = self._alloc_slots(k)
+        slots = [seated[sess.sid] for sess in group]
         states = [sess.parked for sess in group]
+        n_live = states[0].n_pages
         blocks = jax.tree.map(lambda *xs: jnp.stack(xs, axis=1),
                               *[st.caches["blocks"] for st in states])
         tail = jax.tree.map(lambda *xs: jnp.stack(xs, axis=0),
                             *[st.caches["tail"] for st in states])
         restore = self.engine._program("pool_restore", self.gen,
-                                       self._build_restore, k, self.slots)
+                                       self._build_restore, k, n_live,
+                                       self.slots, self.page_size,
+                                       self.pages_per_bank)
+        pt = jnp.asarray(self._page_table_rows(slots, n_live))
+        idx = jnp.asarray(slots, jnp.int32)
         self.caches, self.pos, self.cur = restore(
-            self.caches, blocks, tail, jnp.asarray(slots, jnp.int32),
-            self.pos, self.cur,
+            self.caches, blocks, tail, idx, pt, self.pos, self.cur,
             jnp.asarray([st.pos for st in states], jnp.int32),
             jnp.asarray([st.cur for st in states], jnp.int32))
-        per_bank: dict[int, list[int]] = {}
-        for i, (sess, slot) in enumerate(zip(group, slots)):
-            bank_id = slot // self.rows_per_bank
-            self.table.activate(sess.sid, bank_id, slot)
+        self.tok_lens = self.tok_lens.at[idx].set(
+            jnp.asarray([st.row_len for st in states], jnp.int32))
+        for sess, slot in zip(group, slots):
+            self.table.activate(sess.sid, self._bank_of(slot), slot)
             self._note_admit(sess, slot)
             sess.parked = None
             self.restores += 1
-            per_bank.setdefault(bank_id, []).append(i)
-        for bank_id, members in per_bank.items():
-            locals_ = jnp.asarray(
-                [slots[i] % self.rows_per_bank for i in members], jnp.int32)
-            rows = jnp.stack(
-                [jnp.asarray(states[i].row, jnp.int32) for i in members])
-            lens = jnp.asarray([states[i].row_len for i in members],
-                               jnp.int32)
-            self.banks[bank_id].scatter(locals_, rows, lens)
+        self._scatter_token_pages(
+            [(slot, st.row, st.row_len)
+             for slot, st in zip(slots, states)])
 
-    def _build_restore(self, k: int, slots: int):
-        """Jitted batched page re-seat for ``k`` parked sessions: write
-        the saved KV images into the newly allocated rows and restore
-        pos/cur — the decode stream continues exactly where preemption
-        cut it."""
-        del k, slots                        # cache-key discriminators
-        engine = self.engine
+    def _build_restore(self, k: int, n_live: int, slots: int,
+                       page_size: int, pages_per_bank: int):
+        """Jitted batched re-seat for ``k`` parked sessions with ``n_live``
+        saved sub-pages each: write the saved images through the page
+        table and restore pos/cur — the decode stream continues exactly
+        where preemption cut it."""
+        del k, n_live, slots, page_size, pages_per_bank   # cache keys
+        engine, cfg = self.engine, self.engine.cfg
 
-        def run(pool_caches, blocks, tail, idx, pos, cur, spos, scur):
-            def wr_b(p, n):
-                return p.at[:, idx].set(n.astype(p.dtype))
-
-            def wr_t(p, n):
-                return p.at[idx].set(n.astype(p.dtype))
-
-            caches = {
-                "blocks": jax.tree.map(wr_b, pool_caches["blocks"], blocks),
-                "tail": jax.tree.map(wr_t, pool_caches["tail"], tail),
-            }
+        def run(pool_caches, blocks, tail, idx, pt, pos, cur, spos, scur):
+            caches = kv_cache.seat_caches(
+                pool_caches, {"blocks": blocks, "tail": tail}, cfg, idx, pt)
             return caches, pos.at[idx].set(spos), cur.at[idx].set(scur)
 
         return jax.jit(run) if engine._jit else run
@@ -448,6 +572,28 @@ class SessionPool:
         return self.table.at_slot(slot) if slot is not None else None
 
     # -- cancellation / inspection ------------------------------------------
+    def _read_row(self, sess) -> np.ndarray:
+        """A session's token content reassembled from its live sub-pages
+        (host copy)."""
+        row_len = sess.prompt_len + sess.emitted
+        n_live = self.pages_for(row_len)
+        base = self._bank_of(sess.slot) * self.pages_per_bank
+        local = jnp.asarray(
+            [p - base for p in self.alloc.pages(sess.slot)[:n_live]],
+            jnp.int32)
+        pages = np.asarray(self.banks[sess.bank].gather(local))
+        return pages.reshape(-1)[:row_len]
+
+    def _row_committed(self, sess) -> int:
+        """Summed page-length registers of a session's live sub-pages —
+        the bank's own view of how many tokens it holds."""
+        row_len = sess.prompt_len + sess.emitted
+        base = self._bank_of(sess.slot) * self.pages_per_bank
+        local = [p - base for p in
+                 self.alloc.pages(sess.slot)[:self.pages_for(row_len)]]
+        lens = np.asarray(self.banks[sess.bank].lens)
+        return int(lens[np.asarray(local, np.int64)].sum())
+
     def cancel(self, sid: int) -> np.ndarray:
         """Abort a session in any phase; returns prompt + whatever it
         generated before the cancel.  The tokens stay collectible (DONE)
@@ -456,15 +602,9 @@ class SessionPool:
         if sess.phase == DONE:
             return np.asarray(sess.tokens)
         if sess.phase == ACTIVE:
-            slot = sess.slot
-            row, ln = self.banks[sess.bank].read_row(
-                slot % self.rows_per_bank)
-            self.table.finish(sid, np.asarray(row[:ln]))
-            self.alloc.free(slot)
-            self._free_hint += 1
-            self.live[slot] = False
-            self.pos = self.pos.at[slot].set(0)
-            self.cur = self.cur.at[slot].set(0)
+            row = self._read_row(sess)
+            self.table.finish(sid, row)
+            self._release(sess.slot)
         elif sess.phase == PARKED:
             st = sess.parked
             self.table.finish(sid, np.asarray(st.row[:st.row_len]))
@@ -478,9 +618,7 @@ class SessionPool:
         in any phase — what the gateway's streaming iterator reads."""
         sess = self.table.get(sid)
         if sess.phase == ACTIVE:
-            row, _ = self.banks[sess.bank].read_row(
-                sess.slot % self.rows_per_bank)
-            return np.asarray(row[:sess.prompt_len + sess.emitted])
+            return self._read_row(sess)
         if sess.phase == PARKED:
             return np.asarray(sess.parked.row[:sess.parked.row_len])
         if sess.phase == DONE:
@@ -488,25 +626,56 @@ class SessionPool:
         return np.asarray(sess.prompt)
 
     # -- decode -------------------------------------------------------------
+    def _ensure_pages(self) -> None:
+        """Host-side top-up between chunks: every active session gets
+        enough slack pages to cover the next chunk's KV and token writes
+        (so a page-boundary crossing never stalls the compiled step).
+        When a bank runs dry the *youngest* sessions park — their pages
+        free instantly for the older survivors, so the oldest session
+        always progresses and a lone session can never livelock (submit
+        bounds every session's worst case to one bank's capacity)."""
+        order = sorted(self.table.active(),
+                       key=lambda s: (s.first_admit_step, s.sid))
+        for sess in reversed(order):        # youngest parks first if dry
+            need = min(self.C, self.pages_for(
+                sess.prompt_len + sess.emitted + self.chunk))
+            have = len(self.alloc.pages(sess.slot))
+            if need <= have:
+                continue
+            lo, hi = self._page_range(self._bank_of(sess.slot))
+            if self.alloc.alloc_pages(sess.slot, need - have,
+                                      lo, hi) is None:
+                self.page_stalls += 1
+                self.park(sess.sid)
+
     def _decode_chunk(self) -> None:
-        """One compiled program: scan ``chunk`` decode steps over every
-        page, then commit each bank's tokens via the scheduler's packed
-        ``insert -> truncate`` stream — no host round-trip inside."""
+        """One compiled program: gather every session's logical row
+        through the page table, scan ``chunk`` decode steps, scatter back
+        the dirty sub-pages, and commit each bank's tokens via the
+        scheduler's packed ``insert -> truncate`` stream — no host
+        round-trip inside."""
         engine = self.engine
         run = engine._program("pool_chunk", self.gen, self._build_chunk,
                               self.slots, self.chunk, self.n_banks,
-                              self._bank_backend, self._bank_interpret)
+                              self._bank_backend, self._bank_interpret,
+                              self.page_size, self.pages_per_bank)
         self._rng, sub = jax.random.split(self._rng)
         budget_left = np.zeros((self.slots,), np.int32)
         for sess in self.table.active():
             budget_left[sess.slot] = sess.budget - sess.emitted
+        pt = np.full((self.slots, self.C), self.total_pages, np.int32)
+        for sess in self.table.active():
+            ids = self.alloc.pages(sess.slot)
+            pt[sess.slot, :len(ids)] = ids
         datas = [b.data for b in self.banks]
         lenss = [b.lens for b in self.banks]
-        self.cur, self.caches, self.pos, datas, lenss = run(
+        (self.cur, self.caches, self.pos, datas, lenss,
+         self.tok_lens) = run(
             engine.params, self.cur, self.caches, self.pos,
             jnp.asarray(self.live), jnp.asarray(budget_left),
             jnp.asarray(self._temp), jnp.asarray(self._topk),
-            jnp.asarray(self._topp), datas, lenss, sub)
+            jnp.asarray(self._topp), datas, lenss, jnp.asarray(pt),
+            self.tok_lens, sub)
         for b, d, ln in zip(self.banks, datas, lenss):
             b.data, b.lens = d, ln
 
@@ -521,45 +690,95 @@ class SessionPool:
         self.sched.streams_packed += len(active)
 
     def _build_chunk(self, slots: int, chunk: int, n_banks: int,
-                     bank_backend: str, bank_interpret):
-        """Jitted pooled decode chunk: an inner scan of ``chunk``
-        ``lm.decode_step`` calls with per-row positions (dead pages stay
-        pinned — pos frozen, token 0 — and only write their own row),
-        followed by the per-bank packed commit.  Rows whose budget ends
+                     bank_backend: str, bank_interpret, page_size: int,
+                     pages_per_bank: int):
+        """Jitted pooled decode chunk, paged end to end: gather each
+        session's FULL logical KV row and token row through the page
+        table (``kv_cache.logical_view`` for the KV pools; the
+        scalar-prefetch gather kernel for pallas token banks), run an
+        inner scan of ``chunk`` ``lm.decode_step`` calls with per-row
+        positions (dead rows stay pinned — pos frozen, token 0), commit
+        the gathered token rows via the per-bank packed ``insert ->
+        truncate`` stream (unchanged logical shapes, so it stays ONE
+        fused launch per bank on pallas), then scatter back only the
+        DIRTY sub-pages — ranks touched since the chunk began; clean
+        pages keep the sentinel and drop.  Rows whose budget ends
         mid-chunk keep decoding into slack; ``emit`` clamps what the
         commit makes visible."""
-        del bank_backend, bank_interpret    # cache-key discriminators: the
-        # compiled_commit closures below bake the bank routing in
+        del bank_interpret                  # cache-key discriminator: the
+        # interpret default below and the commit closures bake it in
         engine, cfg = self.engine, self.engine.cfg
-        rpb = self.rows_per_bank
-        commits = [self.sched.compiled_commit(b, chunk)
+        rpb, C, pg, ppb = (self.rows_per_bank, self.C, self.page_size,
+                           pages_per_bank)
+        total = self.total_pages
+        commits = [self.sched.compiled_commit(b, chunk, rows=rpb)
                    for b in range(n_banks)]
+        pallas = bank_backend == "pallas"
+        if pallas:
+            from repro.kernels import cpm_kernels as K
+            interp = self.banks[0]._pallas_interpret()
+
+            def rows_gather(data, idx):
+                return K.gather_rows(data, idx, interpret=interp)
+
+            def rows_scatter(data, idx, rows):
+                return K.scatter_rows(data, idx, rows, interpret=interp)
+        else:
+            def rows_gather(data, idx):
+                return jnp.take(data, idx, axis=0)
+
+            def rows_scatter(data, idx, rows):
+                return data.at[idx].set(rows)    # OOB (sentinel) drops
 
         def run(params, cur, caches, pos, live, budget_left, temp, topk,
-                topp, datas, lenss, rng):
+                topp, datas, lenss, page_tbl, tok_lens, rng):
+            pos0 = pos
+            logical = kv_cache.logical_view(caches, cfg, page_tbl)
+
             def body(carry, _):
-                tok, caches, pos, rng = carry
+                tok, lcaches, pos, rng = carry
                 rng, sub = jax.random.split(rng)
-                logits, caches = lm.decode_step(params, cfg, tok[:, None],
-                                                caches, pos)
+                logits, lcaches = lm.decode_step(params, cfg, tok[:, None],
+                                                 lcaches, pos)
                 nxt = sampling.sample_rows(logits[:, -1], sub, temp, topk,
                                            topp)
                 nxt = jnp.where(live, nxt, 0)
                 pos = jnp.where(live, pos + 1, pos)
-                return (nxt, caches, pos, rng), nxt
+                return (nxt, lcaches, pos, rng), nxt
 
-            (cur, caches, pos, _), toks = jax.lax.scan(
-                body, (cur, caches, pos, rng), None, length=chunk)
+            (cur, logical, pos, _), toks = jax.lax.scan(
+                body, (cur, logical, pos, rng), None, length=chunk)
             toks = jnp.moveaxis(toks, 0, 1)              # (slots, chunk)
             emit = jnp.where(live, jnp.minimum(budget_left, chunk), 0)
-            new_d, new_l = [], []
+            rank = jnp.arange(C)[None]                   # page ranks
+            kv_dirty = rank >= (pos0 // pg)[:, None]     # (slots, C)
+            caches = kv_cache.merge_paged(
+                caches, logical, cfg,
+                jnp.where(kv_dirty, page_tbl, total))
+            new_d, new_l, new_tl = [], [], []
             for b in range(n_banks):
                 rows = slice(b * rpb, (b + 1) * rpb)
-                d, ln = commits[b](datas[b], lenss[b], toks[rows],
-                                   emit[rows])
+                ptb = page_tbl[rows] - b * ppb           # (rpb, C) local ids
+                flat = ptb.reshape(-1)
+                lrows = rows_gather(
+                    datas[b], jnp.clip(flat, 0, ppb - 1)).reshape(rpb,
+                                                                  C * pg)
+                lens_b = tok_lens[rows]
+                d_rows, l_rows = commits[b](lrows, lens_b, toks[rows],
+                                            emit[rows])
+                tok_dirty = rank >= (lens_b // pg)[:, None]
+                d = rows_scatter(
+                    datas[b], jnp.where(tok_dirty, ptb, ppb).reshape(-1),
+                    d_rows.reshape(rpb * C, pg))
+                plens = jnp.clip(
+                    l_rows[:, None] - jnp.arange(C)[None] * pg, 0, pg)
+                ln = lenss[b].at[flat].set(plens.reshape(-1).astype(
+                    lenss[b].dtype), mode="drop")
                 new_d.append(d)
                 new_l.append(ln)
-            return cur, caches, pos, new_d, new_l
+                new_tl.append(l_rows)
+            return (cur, caches, pos, new_d, new_l,
+                    jnp.concatenate(new_tl))
 
         return jax.jit(run) if engine._jit else run
 
@@ -568,16 +787,8 @@ class SessionPool:
         for sess in list(self.table.active()):
             if not sess.finished:
                 continue
-            bank = self.banks[sess.bank]
-            local = sess.slot % self.rows_per_bank
-            row, ln = bank.read_row(local)
+            ln = self._row_committed(sess)
             assert ln == sess.prompt_len + sess.emitted, (
                 ln, sess.prompt_len, sess.emitted)
-            self.table.finish(sess.sid, row[:ln])
-            self.alloc.free(sess.slot)      # page back to the free list
-            self._free_hint += 1
-            self.live[sess.slot] = False
-            # pin the dead page: frozen position, token 0 — its decode
-            # writes stay inside its own (soon-to-be-recycled) row
-            self.pos = self.pos.at[sess.slot].set(0)
-            self.cur = self.cur.at[sess.slot].set(0)
+            self.table.finish(sess.sid, self._read_row(sess))
+            self._release(sess.slot)

@@ -65,6 +65,9 @@ except ImportError:
         items = list(seq)
         return _Strategy(lambda r: r.choice(items))
 
+    def tuples(*strats):
+        return _Strategy(lambda r: tuple(s.draw(r) for s in strats))
+
     def given(*strats):
         def deco(fn):
             @functools.wraps(fn)
@@ -93,7 +96,7 @@ except ImportError:
     _st = types.ModuleType("hypothesis.strategies")
     for _name, _obj in [("integers", integers), ("booleans", booleans),
                         ("floats", floats), ("lists", lists), ("text", text),
-                        ("sampled_from", sampled_from)]:
+                        ("sampled_from", sampled_from), ("tuples", tuples)]:
         setattr(_st, _name, _obj)
     _h.given = given
     _h.settings = settings

@@ -121,10 +121,11 @@ class TestPreemptionIdentity:
 # ---------------------------------------------------------------------------
 
 class _FakeSession:
-    def __init__(self, sid, prompt_len, phase="waiting"):
+    def __init__(self, sid, prompt_len, phase="waiting", parked=None):
         self.sid = sid
         self.prompt_len = prompt_len
         self.phase = phase
+        self.parked = parked            # real Session always has this field
 
 
 class TestAdmissionPlan:
@@ -358,3 +359,95 @@ class TestTraffic:
         assert (tr.arrivals[:3] == 0).all()
         assert (tr.budgets[:3] == 20).all()
         assert set(np.unique(tr.arrivals[3:])) == {5, 15}
+
+
+# ---------------------------------------------------------------------------
+# event-loop responsiveness + the paged gateway path
+# ---------------------------------------------------------------------------
+
+class TestServeResponsiveness:
+    def test_asubmit_responsive_during_slow_tick(self, granite):
+        """``serve()`` runs the tick's compute in a worker thread
+        (``asyncio.to_thread``), so a slow decode chunk must NOT block
+        ``asubmit``: with every tick pinned to 0.5 s of compute, a submit
+        issued mid-tick has to return in a fraction of that."""
+        import time
+
+        async def scenario():
+            gw = Gateway(granite, slots=2)
+            real_tick = gw.loop.tick
+
+            def slow_tick():
+                time.sleep(0.5)             # a long decode chunk
+                return real_tick()
+
+            gw.loop.tick = slow_tick
+            rid0 = await gw.asubmit(_prompt(300, 8), 3)
+            await gw.start()
+            await asyncio.sleep(0.1)        # serve() is now inside a tick
+            t0 = time.monotonic()
+            rid1 = await gw.asubmit(_prompt(301, 8), 3)
+            elapsed = time.monotonic() - t0
+            toks0 = await gw.aresult(rid0)
+            toks1 = await gw.aresult(rid1)
+            await gw.stop()
+            return elapsed, toks0, toks1
+
+        elapsed, toks0, toks1 = asyncio.run(scenario())
+        assert elapsed < 0.25, (
+            f"asubmit blocked {elapsed:.3f}s behind a 0.5s tick — the "
+            "event loop is running tick compute inline")
+        np.testing.assert_array_equal(toks0, _solo(granite, _prompt(300, 8), 3))
+        np.testing.assert_array_equal(toks1, _solo(granite, _prompt(301, 8), 3))
+
+
+class TestPagedGateway:
+    def test_burst_preempts_with_identity_paged(self, granite):
+        """The full gateway stack over a paged pool (page-pressure-aware
+        preemption, restore groups bucketed by saved page count) delivers
+        byte-identical tokens under an oversubscribed burst."""
+        gw = Gateway(granite, slots=2, chunk=2, page_size=8,
+                     pages_per_bank=10,
+                     preempt=PreemptConfig(min_resident=2, min_remaining=1,
+                                           max_parks=3))
+        specs = [(310, 9, 10), (311, 12, 8), (312, 8, 6), (313, 10, 7)]
+        rids = [gw.submit(_prompt(sd, s), b) for sd, s, b in specs]
+        for rid, (sd, s, b) in zip(rids, specs):
+            np.testing.assert_array_equal(
+                gw.result(rid), _solo(granite, _prompt(sd, s), b))
+        assert gw.pool.alloc.page_free_count() == gw.pool.total_pages
+
+    def test_restore_groups_bucket_by_saved_pages(self):
+        """Parked sessions with different saved page counts cannot stack
+        into one restore launch — the planner must split them."""
+        a = _FakeSession(0, 8, phase="parked")
+        b = _FakeSession(1, 8, phase="parked")
+        c = _FakeSession(2, 8, phase="parked")
+
+        class _PS:
+            def __init__(self, n):
+                self.n_pages = n
+
+        a.parked, b.parked, c.parked = _PS(2), _PS(3), _PS(2)
+        plan = admission.plan([a, b, c])
+        groups = {tuple(s.sid for s in g) for g in plan.restores}
+        assert groups == {(0, 2), (1,)}
+        # whole-row layout: every parked session saves one page -> one group
+        a.parked, b.parked, c.parked = _PS(1), _PS(1), _PS(1)
+        plan = admission.plan([a, b, c])
+        assert [tuple(s.sid for s in g) for g in plan.restores] \
+            == [(0, 1, 2)]
+
+    def test_preemptor_acts_on_page_pressure_alone(self, granite):
+        """Free slots but an empty page file: the preemptor must still
+        park the LRU incumbent so a fresh arrival's page grant fits."""
+        pool = granite.session_pool(slots=4, n_banks=1, chunk=2,
+                                    page_size=8, pages_per_bank=4)
+        pre = Preemptor(pool, PreemptConfig(min_resident=0, min_remaining=0,
+                                            max_parks=5))
+        a = pool.submit(_prompt(320, 16), 10)          # 3 pages
+        pool.step()
+        pool.submit(_prompt(321, 8), 20)               # wants 2: only 1 free
+        assert pool._free_hint > 0                     # slots are NOT scarce
+        assert pre.maybe_preempt() == 1                # ...pages are
+        assert pool.table.get(a).phase == "parked"

@@ -138,6 +138,104 @@ class TestSlotAllocator:
 
 
 # ---------------------------------------------------------------------------
+# sub-page file: page-list allocation as CPM ops
+# ---------------------------------------------------------------------------
+
+class TestPagedAllocator:
+    def test_alloc_pages_lowest_first_in_range(self):
+        a = SlotAllocator(2, n_pages=8)
+        s = a.alloc()
+        assert a.alloc_pages(s, 2, 4, 8) == [4, 5]     # bank-1 range only
+        assert a.alloc_pages(s, 1) == [0]              # global: lowest free
+        assert a.pages(s) == [4, 5, 0]                 # ordered by grant
+        assert a.page_free_count() == 5
+        assert a.page_free_count(4, 8) == 2
+
+    def test_alloc_pages_all_or_nothing(self):
+        a = SlotAllocator(1, n_pages=4)
+        s = a.alloc()
+        assert a.alloc_pages(s, 3) == [0, 1, 2]
+        assert a.alloc_pages(s, 2) is None             # only 1 left: claim
+        assert a.page_free_count() == 1                # NOTHING of it
+        assert a.pages(s) == [0, 1, 2]
+        assert a.alloc_pages(s, 1) == [3]
+
+    def test_pages_need_a_used_owner(self):
+        a = SlotAllocator(2, n_pages=4)
+        with pytest.raises(ValueError, match="owner"):
+            a.alloc_pages(0, 1)
+        s = a.alloc()
+        with pytest.raises(ValueError, match="positive"):
+            a.alloc_pages(s, 0)
+        with pytest.raises(IndexError):
+            a.alloc_pages(s, 1, 2, 9)                  # range out of bounds
+
+    def test_free_releases_whole_page_list(self):
+        a = SlotAllocator(2, n_pages=6)
+        s0, s1 = a.alloc(), a.alloc()
+        a.alloc_pages(s0, 3)
+        a.alloc_pages(s1, 2)
+        a.free(s0)                                     # retire: slot + pages
+        assert a.page_free_count() == 4
+        assert a.pages(s1) == [3, 4]                   # neighbor untouched
+        s2 = a.alloc()
+        assert a.alloc_pages(s2, 3) == [0, 1, 2]       # reclaimed, lowest-first
+
+    def test_no_page_file_is_inert(self):
+        a = SlotAllocator(2)                           # n_pages=0 default
+        s = a.alloc()
+        assert a.page_free_count() == 0
+        assert a.pages(s) == []
+        a.free(s)                                      # nothing to leak
+
+    @given(st.lists(st.tuples(st.integers(0, 3), st.integers(0, 7)),
+                    min_size=1, max_size=60))
+    @settings(max_examples=20, deadline=None)
+    def test_page_traces_match_oracle_no_double_booking_no_leaks(self, moves):
+        """Random alloc / alloc_pages(extend) / free(park-or-retire) /
+        touch traces: the CPM allocator and the oracle hand out identical
+        page lists, no sub-page is ever owned twice, and freeing a slot
+        (retire, cancel and park all route through ``free``) returns its
+        whole list — free + owned always covers the page file exactly."""
+        n, npg = 3, 8
+        cpm = SlotAllocator(n, n_pages=npg)
+        orc = OracleAllocator(n, n_pages=npg)
+        held: set[int] = set()
+        for i, (mv, arg) in enumerate(moves):
+            if mv == 0:                                   # alloc slot
+                got, want = cpm.alloc(), orc.alloc()
+                assert got == want
+                if got is not None:
+                    held.add(got)
+            elif mv == 1 and held:                        # extend page list
+                slot = sorted(held)[i % len(held)]
+                k = 1 + arg % 3
+                lo = (arg % 2) * (npg // 2)               # one bank's range
+                got = cpm.alloc_pages(slot, k, lo, lo + npg // 2)
+                want = orc.alloc_pages(slot, k, lo, lo + npg // 2)
+                assert got == want                        # incl. both-None
+            elif mv == 2 and held:                        # free = park/retire
+                slot = sorted(held)[i % len(held)]
+                cpm.free(slot)
+                orc.free(slot)
+                held.discard(slot)
+            elif mv == 3 and held:                        # touch
+                slot = sorted(held)[i % len(held)]
+                cpm.touch(slot)
+                orc.touch(slot)
+            owned = [p for s in held for p in orc.pages(s)]
+            assert len(owned) == len(set(owned))          # never double-booked
+            for s in sorted(held):
+                assert cpm.pages(s) == orc.pages(s)       # identical lists
+            # free + owned covers the file exactly: nothing leaked
+            assert (cpm.page_free_count() == orc.page_free_count()
+                    == npg - len(owned))
+            booked = set(np.flatnonzero(cpm.page_state_vector()))
+            assert booked == set(owned)
+            assert cpm.victim() == orc.victim()
+
+
+# ---------------------------------------------------------------------------
 # banks: paged row movement, reference vs pallas kernels
 # ---------------------------------------------------------------------------
 

@@ -240,3 +240,167 @@ class TestProgramCacheKeying:
         with pytest.raises(TypeError, match="statically hashable"):
             granite._program("probe3", GenConfig(), lambda a: a,
                              jnp.zeros((3,)))
+
+
+# ---------------------------------------------------------------------------
+# paged layout: sub-page banks + page-table attention
+# ---------------------------------------------------------------------------
+
+class TestPagedLayout:
+    """``page_size < max_len``: KV and token storage become fixed-size
+    sub-pages addressed through per-session page lists.  The contract is
+    unchanged — every drained output is byte-identical to its solo static
+    generation — while capacity is bounded by tokens resident, not by
+    ``slots * max_len``."""
+
+    def test_paged_ragged_matches_solo(self, granite):
+        """Ragged prompts and budgets across page boundaries: sessions
+        start inside one sub-page and grow across several mid-decode
+        (slack pre-grant + host top-up), on 2 banks."""
+        lens = [8, 12, 10, 9, 16, 7]
+        budgets = [5, 12, 3, 9, 1, 14]
+        prompts = [_prompt(200 + i, s, CFG) for i, s in enumerate(lens)]
+        want = [_solo(granite, p, b) for p, b in zip(prompts, budgets)]
+        pool = granite.session_pool(slots=4, n_banks=2, chunk=3,
+                                    page_size=8, pages_per_bank=8)
+        assert pool.C == 8 and pool.total_pages == 16
+        sids = [pool.submit(p, b) for p, b in zip(prompts, budgets)]
+        outs = pool.drain()
+        for sid, w in zip(sids, want):
+            np.testing.assert_array_equal(outs[sid], w)
+        assert pool.alloc.page_free_count() == 16     # no sub-page leaked
+        assert pool.alloc.free_count() == 4
+
+    def test_page_pressure_parks_and_stays_identical(self, granite):
+        """An under-provisioned page file (fewer sub-pages than the live
+        set wants) forces mid-flight parks; the freed pages let older
+        sessions finish and the parked ones restore token-identically."""
+        lens = [8, 12, 10, 9]
+        budgets = [9, 12, 6, 8]
+        prompts = [_prompt(210 + i, s, CFG) for i, s in enumerate(lens)]
+        want = [_solo(granite, p, b) for p, b in zip(prompts, budgets)]
+        pool = granite.session_pool(slots=3, n_banks=1, chunk=2,
+                                    page_size=4, pages_per_bank=9)
+        sids = [pool.submit(p, b) for p, b in zip(prompts, budgets)]
+        outs = pool.drain()
+        for sid, w in zip(sids, want):
+            np.testing.assert_array_equal(outs[sid], w)
+        assert pool.stats()["page_stalls"] > 0        # pressure actually hit
+        assert pool.alloc.page_free_count() == 9
+
+    def test_explicit_park_restore_paged(self, granite):
+        """A mid-decode preempt saves ONLY live sub-pages; the restore
+        (into whatever slot/pages are free then) continues the stream."""
+        pa, pb = _prompt(220, 9, CFG), _prompt(221, 12, CFG)
+        pool = granite.session_pool(slots=2, n_banks=1, chunk=2,
+                                    page_size=8, pages_per_bank=10)
+        sa, sb = pool.submit(pa, 12), pool.submit(pb, 8)
+        for _ in range(3):
+            pool.step()
+        sess = pool.table.get(sa)
+        pool.park(sa)
+        st = sess.parked
+        assert st.n_pages == -(-st.row_len // 8)      # live pages only
+        outs = pool.drain()
+        np.testing.assert_array_equal(outs[sa], _solo(granite, pa, 12))
+        np.testing.assert_array_equal(outs[sb], _solo(granite, pb, 8))
+        assert pool.stats()["restores"] == 1
+
+    def test_paged_pallas_banks_match_reference(self, granite):
+        """Sub-page movement through the scalar-prefetch DMA kernels
+        (gather logical rows -> fused commit -> scatter dirty pages)
+        drains identical tokens to the reference jnp realization."""
+        prompts = [_prompt(230 + i, 9, CFG) for i in range(4)]
+        ref = granite.session_pool(slots=2, chunk=3, page_size=8,
+                                   pages_per_bank=8)
+        pal = granite.session_pool(slots=2, chunk=3, page_size=8,
+                                   pages_per_bank=8,
+                                   bank_backend="pallas",
+                                   bank_interpret=True)
+        for p in prompts:
+            ref.submit(p, 7)
+            pal.submit(p, 7)
+        r, q = ref.drain(), pal.drain()
+        for sid in r:
+            np.testing.assert_array_equal(r[sid], q[sid])
+
+    def test_hybrid_arch_paged_matches_solo(self, hybrid):
+        """Only global-attn leaves page; rings and recurrent state stay
+        per-slot and ride through park/grow untouched."""
+        lens, budgets = [10, 14, 10], [6, 3, 8]
+        prompts = [_prompt(240 + i, s, HYB) for i, s in enumerate(lens)]
+        want = [_solo(hybrid, p, b) for p, b in zip(prompts, budgets)]
+        pool = hybrid.session_pool(slots=2, page_size=8, pages_per_bank=10)
+        sids = [pool.submit(p, b) for p, b in zip(prompts, budgets)]
+        outs = pool.drain()
+        for sid, w in zip(sids, want):
+            np.testing.assert_array_equal(outs[sid], w)
+
+    def test_degenerate_page_size_is_whole_row_layout(self, granite):
+        """Defaults (``page_size=None``) give pg = max_len, C = 1: one
+        sub-page per session, the exact pre-paging layout."""
+        pool = granite.session_pool(slots=2)
+        assert pool.page_size == pool.max_len and pool.C == 1
+        assert pool.pages_per_bank == 2                # rows_per_bank * C
+        assert pool.total_pages == pool.slots          # one page per slot
+        sid = pool.submit(_prompt(250, 8, CFG), 3)
+        pool.step()
+        sess = pool.table.get(sid)
+        assert pool.alloc.pages(sess.slot) == [sess.slot]  # 1:1 with slot
+
+    def test_bad_page_geometry_rejected(self, granite):
+        with pytest.raises(ValueError, match="divisor"):
+            granite.session_pool(slots=2, page_size=7)     # 64 % 7 != 0
+        with pytest.raises(ValueError, match="divisor"):
+            granite.session_pool(slots=2, page_size=0)
+        with pytest.raises(ValueError, match="pages_per_bank"):
+            granite.session_pool(slots=2, page_size=8, pages_per_bank=0)
+
+    def test_submit_rejects_requests_beyond_bank_capacity(self, granite):
+        """Regression: a request whose worst-case page count exceeds one
+        bank's page file must be rejected at submit — it could never be
+        seated, and previously nothing checked (satellite: no silent
+        overflow/truncation)."""
+        pool = granite.session_pool(slots=2, n_banks=1, chunk=2,
+                                    page_size=8, pages_per_bank=3)
+        with pytest.raises(ValueError, match="bank capacity"):
+            pool.submit(_prompt(260, 20, CFG), 10)     # needs 4 pages
+        assert len(pool.table) == 0
+        # the same request fits a deeper page file
+        deep = granite.session_pool(slots=2, n_banks=1, chunk=2,
+                                    page_size=8, pages_per_bank=5)
+        sid = deep.submit(_prompt(260, 20, CFG), 10)
+        outs = deep.drain()
+        np.testing.assert_array_equal(
+            outs[sid], _solo(granite, _prompt(260, 20, CFG), 10))
+
+    def test_paged_chunk_is_three_pallas_launches_per_bank(self, granite):
+        """The compiled paged decode chunk on a pallas bank lowers to
+        exactly THREE kernel launches per bank — the sub-page gather, the
+        ONE fused insert->truncate commit mega-kernel (the pre-paging
+        invariant, alive on the paged path), and the dirty-page scatter —
+        regardless of chunk size or session count."""
+        from repro.cpm.program import count_pallas_calls
+        pool = granite.session_pool(slots=2, n_banks=1, chunk=3,
+                                    page_size=8, pages_per_bank=8,
+                                    bank_backend="pallas",
+                                    bank_interpret=True)
+        for i in range(2):
+            pool.submit(_prompt(270 + i, 9, CFG), 8)
+        pool.step()                                   # admit + first chunk
+        run = pool.engine._program(
+            "pool_chunk", pool.gen, pool._build_chunk, pool.slots,
+            pool.chunk, pool.n_banks, "pallas", True, pool.page_size,
+            pool.pages_per_bank)
+        budget = jnp.asarray([8, 8], jnp.int32)
+        pt = np.full((pool.slots, pool.C), pool.total_pages, np.int32)
+        for sess in pool.table.active():
+            ids = pool.alloc.pages(sess.slot)
+            pt[sess.slot, :len(ids)] = ids
+        n = count_pallas_calls(
+            run, pool.engine.params, pool.cur, pool.caches, pool.pos,
+            jnp.asarray(pool.live), budget, jnp.asarray(pool._temp),
+            jnp.asarray(pool._topk), jnp.asarray(pool._topp),
+            [b.data for b in pool.banks], [b.lens for b in pool.banks],
+            jnp.asarray(pt), pool.tok_lens, jax.random.PRNGKey(7))
+        assert n == 3 * pool.n_banks
