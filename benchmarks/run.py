@@ -838,11 +838,13 @@ def bench_serve_gateway():
 
     import traffic
 
+    from repro import obs
     from repro.configs import all_configs
     from repro.models import lm
     from repro.serve import Engine, GenConfig
     from repro.serve.gateway import Gateway, PreemptConfig
 
+    obs.TRACER.clear()                 # scope the exported trace to this bench
     cfg = dataclasses.replace(all_configs()["granite-8b"].smoke(),
                               d_model=128, n_layers=2, d_ff=256)
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
@@ -962,6 +964,93 @@ def bench_serve_gateway():
             f"admit_batches={st['admit_batches']};"
             f"prefill_launches={st['prefill_launches']}")
 
+    if obs.enabled():
+        _serve_gateway_telemetry(cfg, params)
+
+
+def _serve_gateway_telemetry(cfg, params):
+    """PR-9 telemetry artifacts off the serve_gateway replays just run:
+    Chrome-trace export (validated: >= 1 span per serving layer),
+    Prometheus metrics snapshot, the per-op-family predicted-vs-measured
+    cycle-drift table, and the jaxpr-asserted decode-chunk launch-count
+    invariance (telemetry on == off)."""
+    import os
+
+    from repro import obs
+    from repro.cpm import cpm_array, record
+    from repro.cpm.program import count_pallas_calls
+    from repro.serve import Engine
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+    # Chrome/Perfetto trace: one span per serving layer, or the export is
+    # lying about coverage
+    trace = obs.write_trace(os.path.join(root, "OBS_trace.json"))
+    counts = obs.validate_chrome_trace(trace)
+    layers = ("gateway.tick", "pool.admission", "pool.prefill",
+              "pool.decode_chunk", "pool.park", "pool.restore")
+    for span_name in layers:
+        assert counts.get(span_name, 0) >= 1, (
+            f"no {span_name} span in exported trace: {sorted(counts)}")
+    obs.write_metrics(os.path.join(root, "OBS_metrics.prom"))
+    row("SG_obs_trace", 0.0,
+        ";".join(f"{n.rsplit('.', 1)[-1]}={counts[n]}" for n in layers))
+
+    # model-vs-measured cycle drift per op family: audit a representative
+    # program (serving-commit ops + one op per budget family) and require
+    # zero drift between op-table predictions and jaxpr-measured trips
+    dev0 = cpm_array(jnp.arange(64), 48, backend="reference")
+    with record() as prog:
+        d2 = dev0.insert(3, jnp.array([7, 8]))
+        d2 = d2.truncate(48)
+        d2.compare(9, "lt")
+        d2.substring_match(jnp.array([7, 8]))
+        d2.super_sum()
+    audit_rows = obs.audit(prog, dev0)
+    print(obs.LEDGER.format_drift_table(), flush=True)
+    assert all(r["drift"] == 0 for r in audit_rows), audit_rows
+    row("SG_obs_cycle_drift", 0.0,
+        ";".join(f"{r['family']}.{r['op']}="
+                 f"{r['measured_trips']}/{r['predicted_scan']}"
+                 for r in audit_rows) + ";max_drift=0")
+
+    # launch-count invariance: building the compiled decode chunk with
+    # telemetry on vs off lowers to the identical pallas launch count
+    # (recording is host-side between compiled calls — REPRO_OBS can
+    # never change what compiles)
+    eng = Engine(cfg, params, max_len=32)
+    pool = eng.session_pool(slots=2, n_banks=1, chunk=2, page_size=8,
+                            pages_per_bank=8, bank_backend="pallas",
+                            bank_interpret=True)
+
+    def chunk_launches():
+        run = pool._build_chunk(pool.slots, pool.chunk, pool.n_banks,
+                                "pallas", True, pool.page_size,
+                                pool.pages_per_bank)
+        pt = np.full((pool.slots, pool.C), pool.total_pages, np.int32)
+        return count_pallas_calls(
+            run, eng.params, pool.cur, pool.caches, pool.pos,
+            jnp.asarray(pool.live), jnp.zeros((pool.slots,), jnp.int32),
+            jnp.asarray(pool._temp), jnp.asarray(pool._topk),
+            jnp.asarray(pool._topp), [b.data for b in pool.banks],
+            [b.lens for b in pool.banks], jnp.asarray(pt), pool.tok_lens,
+            jax.random.PRNGKey(7))
+
+    n_on = chunk_launches()
+    saved = os.environ.get("REPRO_OBS")
+    os.environ["REPRO_OBS"] = "0"
+    try:
+        n_off = chunk_launches()
+    finally:
+        if saved is None:
+            os.environ.pop("REPRO_OBS", None)
+        else:
+            os.environ["REPRO_OBS"] = saved
+    assert n_on == n_off == 3 * pool.n_banks, (n_on, n_off)
+    row("SG_obs_launch_invariance", 0.0,
+        f"pallas_launches_obs_on={n_on};obs_off={n_off};"
+        f"expected={3 * pool.n_banks}")
+
 
 def bench_engine_decode():
     """Serving-engine scenarios: scan-decode throughput and batched
@@ -1054,18 +1143,27 @@ def main(argv=None) -> None:
         import json
         import os
 
-        def dump(path, rows):
+        from repro import obs
+
+        def dump(path, rows, scenario):
+            # schema v2: rows + the global metrics-registry snapshot, so
+            # every BENCH artifact carries the telemetry that produced it
             with open(path, "w") as fh:
-                json.dump([{"name": n, "us_per_call": us, "derived": d}
-                           for n, us, d in rows], fh, indent=1)
+                json.dump({
+                    "schema_version": 2,
+                    "scenario": scenario,
+                    "rows": [{"name": n, "us_per_call": us, "derived": d}
+                             for n, us, d in rows],
+                    "metrics": obs.snapshot(),
+                }, fh, indent=1)
             print(f"wrote {len(rows)} rows to {path}", file=sys.stderr)
 
         if json_path:
-            dump(json_path, ROWS)
+            dump(json_path, ROWS, "+".join(names))
         else:
             root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
             for s, (a, b) in spans.items():
-                dump(os.path.join(root, f"BENCH_{s}.json"), ROWS[a:b])
+                dump(os.path.join(root, f"BENCH_{s}.json"), ROWS[a:b], s)
 
 
 if __name__ == "__main__":

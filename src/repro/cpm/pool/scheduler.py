@@ -28,14 +28,31 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import itertools
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 
+from repro.obs import metrics as _obs_metrics
+
 from ..array import CPMArray
 from ..program import CPMProgram, schedule
 from .bank import CPMBank
+
+# registry-backed launch accounting, one label (sched="<id>") per
+# scheduler instance — host ints only, nothing device-side
+_SCHED_IDS = itertools.count()
+_SCHED_FAMILIES = {
+    "flushes": _obs_metrics.counter(
+        "repro_sched_flushes_total", "multi-bank flush calls", ("sched",)),
+    "streams_packed": _obs_metrics.counter(
+        "repro_sched_streams_packed_total",
+        "per-session streams packed into batched launches", ("sched",)),
+    "bank_launches": _obs_metrics.counter(
+        "repro_sched_bank_launches_total",
+        "batched program launches across banks", ("sched",)),
+}
 
 #: operand names treated as dynamic (per-slot) per op; everything else in an
 #: instruction is static and must agree across the packed streams
@@ -82,13 +99,19 @@ class _Pending:
 class MultiBankScheduler:
     """Packs per-session streams into one batched launch per bank."""
 
+    # thin views over each scheduler's registry series (repro.obs) — the
+    # attribute arithmetic (`sched.bank_launches += n`) is the accounting
+    flushes = _obs_metrics.series_property("flushes")
+    streams_packed = _obs_metrics.series_property("streams_packed")
+    bank_launches = _obs_metrics.series_property("bank_launches")
+
     def __init__(self, banks: list[CPMBank]):
         self.banks = banks
         self._queues: list[list[_Pending]] = [[] for _ in banks]
         self._jitted: dict = {}
-        self.flushes = 0
-        self.streams_packed = 0
-        self.bank_launches = 0
+        label = str(next(_SCHED_IDS))
+        self._obs_series = {
+            k: fam.labels(sched=label) for k, fam in _SCHED_FAMILIES.items()}
 
     def submit(self, bank: int, slot: int, ops) -> None:
         """Queue one session's instruction stream for ``(bank, slot)``.

@@ -94,13 +94,21 @@ class CPMProgram:
     # -- whole-program cost model (delegates to the scheduler) --------------
     def steps_report(self, n: int, section: int | None = None) -> dict:
         """Per-instruction + total concurrent-step counts at device size
-        ``n`` — ``CPMArray.steps_report`` extended to whole programs."""
+        ``n`` — ``CPMArray.steps_report`` extended to whole programs.
+
+        Telemetry hook: every report also feeds the process-global cycle
+        ledger (``repro.obs.cycles``), so scheduled programs' predicted
+        cycles accumulate per op family next to any jaxpr-measured trip
+        counts an audit records — the live model-vs-measured drift
+        metric.  Host-side accounting only; ``REPRO_OBS=0`` skips it."""
         from . import scheduler
         per = [(f"{i}:{ins.op}",
                 scheduler.instruction_steps(ins, n, section=section))
                for i, ins in enumerate(self.instructions)]
         report = dict(per)
         report["total"] = sum(s for _, s in per)
+        from repro.obs import cycles as _obs_cycles
+        _obs_cycles.note_report(self, n, report)
         return report
 
     def run(self, array, backend: str | None = None,

@@ -1,0 +1,38 @@
+"""repro.obs — unified telemetry for the serving stack.
+
+::
+
+    metrics  ── process-global registry: counters/gauges/histograms with
+    │           labeled series; JSON snapshot + Prometheus text exposition
+    tracing  ── nestable spans in wall-clock AND virtual decode-step time
+    │           (gateway tick, admission, prefill, decode chunk, park/
+    │           restore), recorded host-side between compiled calls
+    export   ── Chrome/Perfetto trace_event JSON + snapshot writers
+    cycles   ── per-op-family predicted-vs-measured cycle ledger hooked
+                into ``CPMProgram.steps_report()`` (model drift metric)
+
+Contract (the PR-6 trace-safety rule extended to telemetry): all
+recording is host-side Python between compiled calls — instrumented
+serving code compiles **byte-identically** to uninstrumented code (same
+program cache keys, same pallas launch counts, jaxpr-asserted in
+``tests/test_obs.py``), and ``REPRO_OBS=0`` reduces every span/ledger
+record to one env lookup while the metric instruments keep functioning
+(the serving layers' ``stats()`` dicts are thin views over them).
+"""
+
+from . import cycles, export, metrics, tracing
+from .cycles import LEDGER, audit, drift_table
+from .export import (chrome_trace, validate_chrome_trace, write_metrics,
+                     write_trace)
+from .metrics import (REGISTRY, counter, enabled, gauge, histogram,
+                      prometheus_text, snapshot)
+from .tracing import TRACER, instant, span
+
+__all__ = [
+    "cycles", "export", "metrics", "tracing",
+    "LEDGER", "audit", "drift_table",
+    "chrome_trace", "validate_chrome_trace", "write_metrics", "write_trace",
+    "REGISTRY", "counter", "enabled", "gauge", "histogram",
+    "prometheus_text", "snapshot",
+    "TRACER", "instant", "span",
+]

@@ -1,0 +1,282 @@
+"""The process-global metrics registry: counters, gauges, histograms.
+
+Every serving layer used to grow its own ad-hoc counter fields
+(``SessionPool.prefill_launches``, ``Gateway.stats()``, one-off bench
+dicts).  This module is the single surface they all record through: a
+metric is a named *family* with fixed label names, and each distinct
+label-value combination is one **series** (``prefill_launches{pool="0"}``)
+— the Prometheus data model, kept deliberately tiny.
+
+Two hard rules keep telemetry out of the compiled programs:
+
+  * **Host-side only.**  Instruments store plain Python numbers; callers
+    record values they already hold on the host (counters bumped between
+    compiled calls, gauges set from host mirrors).  Nothing here touches
+    a device array, so instrumented code compiles byte-identically to
+    uninstrumented code — the ``tests/test_obs.py`` jaxpr walks assert it.
+  * **Views stay live.**  The serving layers' old dict-returning APIs
+    (``SessionPool.stats()``, ``Gateway.stats()``) are thin views over
+    these series, and their old attribute counters are properties backed
+    by them — so the *instrument* is always functional (it is the
+    accounting, not a copy of it).  ``REPRO_OBS=0`` therefore does not
+    null the instruments; it only skips **registration** into the global
+    registry (exports stay empty) and disables span/cycle recording
+    (see :mod:`repro.obs.tracing` / :mod:`repro.obs.cycles`).
+
+Snapshots: :func:`snapshot` returns a JSON-able ``{family: {series_key:
+value}}`` dict; :func:`prometheus_text` renders the standard text
+exposition format (``# HELP`` / ``# TYPE`` + one line per series).
+"""
+
+from __future__ import annotations
+
+import itertools
+import os
+import threading
+from typing import Any, Iterable
+
+_HIST_DEFAULT_BUCKETS = (0.001, 0.005, 0.01, 0.05, 0.1, 0.5, 1.0, 5.0)
+
+
+def enabled() -> bool:
+    """Telemetry master switch (``REPRO_OBS=0`` disables).  Read per call
+    — a dict lookup — so tests and benchmarks can flip it in-process."""
+    return os.environ.get("REPRO_OBS", "1") != "0"
+
+
+def _label_key(labels: dict[str, str]) -> tuple[tuple[str, str], ...]:
+    return tuple(sorted(labels.items()))
+
+
+def _fmt_labels(key: tuple[tuple[str, str], ...]) -> str:
+    if not key:
+        return ""
+    return "{" + ",".join(f'{k}="{v}"' for k, v in key) + "}"
+
+
+class _Series:
+    """One label-combination's value cell.  Plain host arithmetic — safe
+    to bump from the gateway's tick worker thread (single-writer per
+    series by the pool's discipline; reads are snapshots)."""
+
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0
+
+    def inc(self, amount=1):
+        self.value += amount
+
+    def set(self, value):
+        self.value = value
+
+
+class _HistSeries:
+    """Cumulative-bucket histogram cell (Prometheus ``le`` semantics)."""
+
+    __slots__ = ("buckets", "counts", "sum", "count")
+
+    def __init__(self, buckets: tuple[float, ...]):
+        self.buckets = buckets
+        self.counts = [0] * (len(buckets) + 1)   # +inf tail
+        self.sum = 0.0
+        self.count = 0
+
+    def observe(self, value: float):
+        self.sum += value
+        self.count += 1
+        for i, edge in enumerate(self.buckets):
+            if value <= edge:
+                self.counts[i] += 1
+                return
+        self.counts[-1] += 1
+
+
+class Metric:
+    """A named family of series sharing one set of label names."""
+
+    kind = "untyped"
+
+    def __init__(self, name: str, help: str = "",
+                 labelnames: Iterable[str] = ()):
+        self.name = name
+        self.help = help
+        self.labelnames = tuple(labelnames)
+        self._series: dict[tuple[tuple[str, str], ...], Any] = {}
+        self._lock = threading.Lock()
+
+    def _new_series(self):
+        return _Series()
+
+    def labels(self, **labels):
+        """The series for one label-value combination (created on first
+        use).  Label names must match the family's declaration."""
+        if set(labels) != set(self.labelnames):
+            raise ValueError(
+                f"{self.name}: labels {sorted(labels)} != declared "
+                f"{sorted(self.labelnames)}")
+        key = _label_key({k: str(v) for k, v in labels.items()})
+        with self._lock:
+            s = self._series.get(key)
+            if s is None:
+                s = self._series[key] = self._new_series()
+        return s
+
+    @property
+    def default(self):
+        """The label-less series (only valid when declared label-less)."""
+        return self.labels()
+
+    def series(self) -> dict[str, Any]:
+        """``{rendered_label_string: value}`` snapshot."""
+        return {_fmt_labels(k) or "": s.value
+                for k, s in sorted(self._series.items())}
+
+
+class Counter(Metric):
+    kind = "counter"
+
+    def inc(self, amount=1, **labels):
+        self.labels(**labels).inc(amount)
+
+
+class Gauge(Metric):
+    kind = "gauge"
+
+    def set(self, value, **labels):
+        self.labels(**labels).set(value)
+
+
+class Histogram(Metric):
+    kind = "histogram"
+
+    def __init__(self, name: str, help: str = "",
+                 labelnames: Iterable[str] = (),
+                 buckets: tuple[float, ...] = _HIST_DEFAULT_BUCKETS):
+        self.buckets = tuple(sorted(buckets))
+        super().__init__(name, help, labelnames)
+
+    def _new_series(self):
+        return _HistSeries(self.buckets)
+
+    def observe(self, value, **labels):
+        self.labels(**labels).observe(value)
+
+    def series(self) -> dict[str, Any]:
+        return {_fmt_labels(k): {"sum": s.sum, "count": s.count,
+                                 "buckets": dict(zip(
+                                     [str(b) for b in s.buckets] + ["+Inf"],
+                                     list(itertools.accumulate(s.counts))))}
+                for k, s in sorted(self._series.items())}
+
+
+class Registry:
+    """Name -> metric family.  One process-global instance (``REGISTRY``)
+    backs the whole serving stack; tests may build private ones."""
+
+    def __init__(self):
+        self._metrics: dict[str, Metric] = {}
+        self._lock = threading.Lock()
+
+    def register(self, metric: Metric) -> Metric:
+        with self._lock:
+            have = self._metrics.get(metric.name)
+            if have is not None:
+                if type(have) is not type(metric) \
+                        or have.labelnames != metric.labelnames:
+                    raise ValueError(
+                        f"metric {metric.name!r} re-registered with a "
+                        f"different type/labels")
+                return have
+            self._metrics[metric.name] = metric
+            return metric
+
+    def get(self, name: str) -> Metric | None:
+        return self._metrics.get(name)
+
+    def metrics(self) -> list[Metric]:
+        return list(self._metrics.values())
+
+    def snapshot(self) -> dict:
+        """JSON-able ``{name: {"kind", "help", "series": {...}}}``."""
+        return {m.name: {"kind": m.kind, "help": m.help,
+                         "series": m.series()}
+                for m in sorted(self._metrics.values(),
+                                key=lambda m: m.name)}
+
+    def prometheus_text(self) -> str:
+        """Standard Prometheus text exposition of every series."""
+        lines: list[str] = []
+        for m in sorted(self._metrics.values(), key=lambda m: m.name):
+            lines.append(f"# HELP {m.name} {m.help}")
+            lines.append(f"# TYPE {m.name} {m.kind}")
+            if isinstance(m, Histogram):
+                for key, s in sorted(m._series.items()):
+                    acc = 0
+                    for edge, c in zip(list(m.buckets) + ["+Inf"], s.counts):
+                        acc += c
+                        lk = _label_key(dict(key) | {"le": str(edge)})
+                        lines.append(
+                            f"{m.name}_bucket{_fmt_labels(lk)} {acc}")
+                    lines.append(f"{m.name}_sum{_fmt_labels(key)} {s.sum}")
+                    lines.append(f"{m.name}_count{_fmt_labels(key)} "
+                                 f"{s.count}")
+            else:
+                for key, s in sorted(m._series.items()):
+                    lines.append(f"{m.name}{_fmt_labels(key)} {s.value}")
+        return "\n".join(lines) + "\n"
+
+    def clear(self) -> None:
+        """Drop every family (tests)."""
+        with self._lock:
+            self._metrics.clear()
+
+
+#: the process-global registry every serving layer records through
+REGISTRY = Registry()
+
+
+def _make(cls, name, help, labelnames, **kw):
+    metric = cls(name, help, labelnames, **kw)
+    if enabled():
+        return REGISTRY.register(metric)
+    # disabled: the instrument still works (the serving layers' stats
+    # views read through it) but stays out of the global exports
+    return metric
+
+
+def counter(name: str, help: str = "",
+            labelnames: Iterable[str] = ()) -> Counter:
+    return _make(Counter, name, help, labelnames)
+
+
+def gauge(name: str, help: str = "", labelnames: Iterable[str] = ()) -> Gauge:
+    return _make(Gauge, name, help, labelnames)
+
+
+def histogram(name: str, help: str = "", labelnames: Iterable[str] = (),
+              buckets: tuple[float, ...] = _HIST_DEFAULT_BUCKETS) -> Histogram:
+    return _make(Histogram, name, help, labelnames, buckets=buckets)
+
+
+def series_property(key: str, store: str = "_obs_series",
+                    doc: str | None = None) -> property:
+    """A class attribute that reads/writes one registry series — the
+    migration shim that keeps a layer's legacy counter attributes
+    (``pool.prefill_launches``) working as thin views over the registry.
+    The instance must hold a ``{key: series}`` dict at ``store``."""
+    def getter(self):
+        return getattr(self, store)[key].value
+
+    def setter(self, value):
+        getattr(self, store)[key].set(value)
+
+    return property(getter, setter, doc=doc)
+
+
+def snapshot() -> dict:
+    return REGISTRY.snapshot()
+
+
+def prometheus_text() -> str:
+    return REGISTRY.prometheus_text()

@@ -1,0 +1,158 @@
+"""Nestable spans over the serving stack, in wall-clock AND virtual time.
+
+A span is one timed region of the host-side serving loop — gateway tick,
+admission bucket, prefill launch, decode chunk, park/restore — recorded
+with two clocks:
+
+  * **wall clock** (``time.perf_counter``): what the machine spent.  The
+    decode chunk's dispatch is async, so its span measures *dispatch +
+    any blocking the caller already does* — the tracer never inserts a
+    ``block_until_ready`` of its own (that would add a device sync inside
+    the serving loop; ``tests/test_obs.py`` asserts it doesn't).
+  * **virtual time** (the pool's ``decode_steps`` counter): the
+    deterministic scheduling clock every SLO and benchmark is graded in.
+    Callers pass ``vclock=lambda: pool.decode_steps``; the span records
+    it at entry and exit, so a Perfetto view can correlate wall hiccups
+    with virtual-step progress.
+
+Recording is strictly host-side (list appends + ``perf_counter`` calls)
+and happens **between** compiled calls, never inside a trace — the PR-6
+trace-safety rule.  With ``REPRO_OBS=0`` every ``span()`` yields a shared
+null handle and records nothing, so a disabled tracer costs one env
+lookup per call and the event buffer never grows.
+
+Spans nest per-thread (the gateway's tick worker thread gets its own
+stack and its events carry its tid), and :mod:`repro.obs.export` renders
+the buffer as Chrome/Perfetto ``trace_event`` JSON.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+import time
+from typing import Any, Callable
+
+from .metrics import enabled
+
+
+@dataclasses.dataclass
+class SpanEvent:
+    """One finished span (or instant, ``dur is None``)."""
+    name: str
+    cat: str
+    ts: float                      # perf_counter seconds at entry
+    dur: float | None              # wall seconds (None for instants)
+    tid: int
+    depth: int                     # nesting depth within its thread
+    vstep: int | None = None       # virtual decode-step clock at entry
+    vdur: int | None = None        # virtual steps elapsed inside the span
+    args: dict[str, Any] | None = None
+
+
+class _SpanHandle:
+    """Live span: mutate ``args`` inside the ``with`` to annotate it."""
+
+    __slots__ = ("args",)
+
+    def __init__(self, args: dict[str, Any]):
+        self.args = args
+
+
+_NULL_HANDLE = _SpanHandle({})
+
+
+class Tracer:
+    """The event buffer + per-thread span stacks."""
+
+    def __init__(self):
+        self.events: list[SpanEvent] = []
+        self._local = threading.local()
+        self._lock = threading.Lock()
+
+    def _depth(self) -> int:
+        return getattr(self._local, "depth", 0)
+
+    @contextlib.contextmanager
+    def span(self, name: str, cat: str = "serve",
+             vclock: Callable[[], int] | None = None,
+             args: dict[str, Any] | None = None):
+        """Record one nested region.  ``vclock`` (if given) is sampled at
+        entry and exit on the host — pass a closure over a host mirror,
+        never a device read."""
+        if not enabled():
+            yield _NULL_HANDLE
+            return
+        depth = self._depth()
+        self._local.depth = depth + 1
+        handle = _SpanHandle(dict(args) if args else {})
+        v0 = int(vclock()) if vclock is not None else None
+        t0 = time.perf_counter()
+        try:
+            yield handle
+        finally:
+            dur = time.perf_counter() - t0
+            v1 = int(vclock()) if vclock is not None else None
+            self._local.depth = depth
+            ev = SpanEvent(name=name, cat=cat, ts=t0, dur=dur,
+                           tid=threading.get_ident(), depth=depth,
+                           vstep=v0,
+                           vdur=(v1 - v0) if v0 is not None else None,
+                           args=handle.args or None)
+            with self._lock:
+                self.events.append(ev)
+
+    def instant(self, name: str, cat: str = "serve",
+                vstep: int | None = None,
+                args: dict[str, Any] | None = None) -> None:
+        """Record a zero-duration marker (page grants, packed commits)."""
+        if not enabled():
+            return
+        ev = SpanEvent(name=name, cat=cat, ts=time.perf_counter(),
+                       dur=None, tid=threading.get_ident(),
+                       depth=self._depth(),
+                       vstep=int(vstep) if vstep is not None else None,
+                       args=dict(args) if args else None)
+        with self._lock:
+            self.events.append(ev)
+
+    def counter(self, name: str, value, cat: str = "serve") -> None:
+        """Record a Chrome counter-track sample (rendered as ``ph: "C"``)."""
+        if not enabled():
+            return
+        ev = SpanEvent(name=name, cat="__counter__." + cat,
+                       ts=time.perf_counter(), dur=None,
+                       tid=threading.get_ident(), depth=0,
+                       args={"value": value})
+        with self._lock:
+            self.events.append(ev)
+
+    def spans(self, name: str | None = None) -> list[SpanEvent]:
+        """Snapshot of recorded events, optionally filtered by exact name."""
+        with self._lock:
+            evs = list(self.events)
+        if name is None:
+            return evs
+        return [e for e in evs if e.name == name]
+
+    def clear(self) -> None:
+        with self._lock:
+            self.events.clear()
+
+
+#: the process-global tracer the serving layers record through
+TRACER = Tracer()
+
+
+def span(name: str, cat: str = "serve",
+         vclock: Callable[[], int] | None = None,
+         args: dict[str, Any] | None = None):
+    """``with tracing.span("pool.decode_chunk", vclock=...):`` — the
+    module-level convenience over :data:`TRACER`."""
+    return TRACER.span(name, cat=cat, vclock=vclock, args=args)
+
+
+def instant(name: str, cat: str = "serve", vstep: int | None = None,
+            args: dict[str, Any] | None = None) -> None:
+    TRACER.instant(name, cat=cat, vstep=vstep, args=args)

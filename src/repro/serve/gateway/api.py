@@ -29,13 +29,30 @@ from __future__ import annotations
 
 import asyncio
 import dataclasses
+import itertools
 from typing import Any, AsyncIterator
 
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
+
 from ..engine import GenConfig
-from .loop import EngineLoop
+from .loop import EngineLoop, TickReport
 from .preempt import PreemptConfig, Preemptor
+
+# registry-backed gateway accounting (one label gw="<id>" per instance);
+# the legacy attributes below are series_property views over these
+_GW_IDS = itertools.count()
+_GW_FAMILIES = {
+    "slo_met_count": obs_metrics.counter(
+        "repro_gateway_slo_met_total",
+        "finished requests inside their deadline", ("gw",)),
+    "slo_missed_count": obs_metrics.counter(
+        "repro_gateway_slo_missed_total",
+        "finished requests past their deadline", ("gw",)),
+    "requests_total": obs_metrics.counter(
+        "repro_gateway_requests_total", "requests submitted", ("gw",)),
+}
 
 
 @dataclasses.dataclass
@@ -82,6 +99,9 @@ class Gateway:
     """Traffic front door over one Engine: batched admission, LRU
     preemption, per-request sampling params/deadlines, streaming."""
 
+    slo_met_count = obs_metrics.series_property("slo_met_count")
+    slo_missed_count = obs_metrics.series_property("slo_missed_count")
+
     def __init__(self, engine, slots: int = 8, n_banks: int = 1,
                  chunk: int = 1, gen: GenConfig | None = None,
                  admit_batching: bool = True,
@@ -106,8 +126,9 @@ class Gateway:
         self._by_sid: dict[int, Request] = {}
         self._streaming: set[int] = set()
         self._next_rid = 0
-        self.slo_met_count = 0
-        self.slo_missed_count = 0
+        label = str(next(_GW_IDS))
+        self._obs_series = {k: fam.labels(gw=label)
+                            for k, fam in _GW_FAMILIES.items()}
         self._wake: asyncio.Event | None = None
         self._task: asyncio.Task | None = None
         self._stopping = False
@@ -131,6 +152,7 @@ class Gateway:
                       budget=sess.budget, deadline_steps=deadline_steps,
                       arrival_step=self.now, sid=sid)
         self._next_rid += 1
+        self._obs_series["requests_total"].inc()
         self._requests[req.rid] = req
         self._by_sid[sid] = req
         if self._wake is not None:
@@ -140,13 +162,16 @@ class Gateway:
     def request(self, rid: int) -> Request:
         return self._requests[rid]
 
-    def tick(self) -> dict:
+    def tick(self) -> TickReport:
         """One heartbeat (preempt -> step -> collect) plus delivery:
         finished requests get their tokens/SLO grade, attached streams
-        get their new tokens."""
-        stats = self.loop.tick()
+        get their new tokens.  Returns the structured
+        :class:`~repro.serve.gateway.loop.TickReport` (per-tick deltas +
+        pool snapshot; dict-style access falls through to the snapshot
+        for legacy keys)."""
+        report = self.loop.tick()
         self._publish()
-        return stats
+        return report
 
     def result(self, rid: int) -> np.ndarray:
         """Drive ticks until ``rid`` finishes; returns prompt + generated."""

@@ -11,15 +11,89 @@ One ``tick`` is the gateway's heartbeat over the PR-5 pool:
      accounting wants ``first_admit_step``/``parks`` history) move into
      the delivery buffer.
 
+Each heartbeat returns a :class:`TickReport` — the structured schema of
+what the tick *did* (per-tick deltas) next to where the pool *is* (the
+snapshot), replacing the loose stats dict the loop used to hand back.
+Dict-style access still works (``report["waiting"]``), falling through
+to the full pool-stats snapshot for legacy keys, so existing callers are
+unchanged.
+
 The loop is deliberately synchronous and deterministic — virtual time is
 the pool's ``decode_steps`` — so benchmarks and identity tests drive it
 tick by tick; the asyncio front door (``gateway.api``) wraps it
-cooperatively.
+cooperatively.  Every tick records a ``gateway.tick`` span (wall +
+virtual clock) through :mod:`repro.obs.tracing`.
 """
 
 from __future__ import annotations
 
+import dataclasses
+import time
 from typing import Any
+
+from repro.obs import tracing as obs_tracing
+
+
+@dataclasses.dataclass(frozen=True)
+class TickReport:
+    """What one heartbeat did, and where the pool stands after it.
+
+    Schema (all counts are sessions unless noted):
+
+    ==============  =========================================================
+    field           meaning
+    ==============  =========================================================
+    tick            0-based index of this heartbeat
+    step            pool virtual decode-step clock AFTER the tick
+    admitted        fresh sessions seated this tick (stacked prefill)
+    restored        parked sessions re-seated this tick (no prefill)
+    preempted       sessions parked this tick (policy + page stalls)
+    finished        sessions retired into the delivery buffer this tick
+    emitted         tokens emitted this tick (prefill + decode), all rows
+    chunk_wall_s    wall seconds dispatching this tick's compiled decode
+                    chunk (0.0 when no chunk ran; dispatch only — the loop
+                    never forces a device sync)
+    wall_s          wall seconds of the whole tick (preempt+step+collect)
+    active          sessions decoding after the tick
+    waiting         fresh sessions still queued after the tick
+    parked          preempted sessions queued after the tick
+    pages_free      free sub-pages across all banks after the tick
+    stats           the full :meth:`SessionPool.stats` snapshot (dict)
+    ==============  =========================================================
+
+    ``report[key]`` reads any field by name and falls through to
+    ``stats`` for every other pool-stats key (``report["preemptions"]``),
+    which keeps pre-TickReport callers working verbatim.
+    """
+
+    tick: int
+    step: int
+    admitted: int
+    restored: int
+    preempted: int
+    finished: int
+    emitted: int
+    chunk_wall_s: float
+    wall_s: float
+    active: int
+    waiting: int
+    parked: int
+    pages_free: int
+    stats: dict = dataclasses.field(default_factory=dict, repr=False)
+
+    def __getitem__(self, key: str):
+        if key != "stats" and key in self.__dataclass_fields__:
+            return getattr(self, key)
+        return self.stats[key]
+
+    def get(self, key: str, default=None):
+        try:
+            return self[key]
+        except KeyError:
+            return default
+
+    def asdict(self) -> dict:
+        return dataclasses.asdict(self)
 
 
 class EngineLoop:
@@ -29,15 +103,41 @@ class EngineLoop:
         self.ticks = 0
         self._finished: dict[int, Any] = {}   # sid -> Session, undelivered
 
-    def tick(self) -> dict:
-        """One heartbeat: preempt -> step -> collect.  Returns the pool's
-        stats snapshot."""
-        if self.preemptor is not None:
-            self.preemptor.maybe_preempt()
-        stats = self.pool.step()
-        self._finished.update(self.pool.table.collect_finished_sessions())
+    def tick(self) -> TickReport:
+        """One heartbeat: preempt -> step -> collect.  Returns the
+        :class:`TickReport` (deltas + snapshot) for this tick."""
+        pool = self.pool
+        before = {k: getattr(pool, k)
+                  for k in ("admits", "restores", "preemptions",
+                            "total_emitted")}
+        done_before = len(self._finished)
+        t0 = time.perf_counter()
+        with obs_tracing.span("gateway.tick", cat="gateway",
+                              vclock=pool._vclock,
+                              args={"tick": self.ticks}):
+            if self.preemptor is not None:
+                self.preemptor.maybe_preempt()
+            stats = pool.step()
+            self._finished.update(
+                pool.table.collect_finished_sessions())
+        report = TickReport(
+            tick=self.ticks,
+            step=pool.decode_steps,
+            admitted=pool.admits - before["admits"],
+            restored=pool.restores - before["restores"],
+            preempted=pool.preemptions - before["preemptions"],
+            finished=len(self._finished) - done_before,
+            emitted=pool.total_emitted - before["total_emitted"],
+            chunk_wall_s=pool.last_chunk_s,
+            wall_s=time.perf_counter() - t0,
+            active=stats["active"],
+            waiting=stats["waiting"],
+            parked=stats["parked"],
+            pages_free=stats["pages_free"],
+            stats=stats,
+        )
         self.ticks += 1
-        return stats
+        return report
 
     def pending(self) -> bool:
         """True while any submitted session still needs ticks."""

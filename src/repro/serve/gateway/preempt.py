@@ -32,6 +32,19 @@ from __future__ import annotations
 import dataclasses
 
 from repro.cpm.pool.sessions import WAITING
+from repro.obs import metrics as obs_metrics
+
+# policy-level accounting, labeled by the pool the policy governs (the
+# mechanism's parks are the pool's own repro_pool_preemptions_total)
+_PREEMPT_FAMILIES = {
+    "preempted": obs_metrics.counter(
+        "repro_preempt_evicted_total",
+        "LRU victims parked by the policy", ("pool",)),
+    "denied": obs_metrics.counter(
+        "repro_preempt_denied_total",
+        "preemption rounds stopped by a protected LRU candidate",
+        ("pool",)),
+}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,11 +55,15 @@ class PreemptConfig:
 
 
 class Preemptor:
+    preempted = obs_metrics.series_property("preempted")
+    denied = obs_metrics.series_property("denied")
+
     def __init__(self, pool, cfg: PreemptConfig | None = None):
         self.pool = pool
         self.cfg = cfg if cfg is not None else PreemptConfig()
-        self.preempted = 0
-        self.denied = 0
+        self._obs_series = {
+            k: fam.labels(pool=pool._pool_label)
+            for k, fam in _PREEMPT_FAMILIES.items()}
 
     def _protected(self, sess) -> bool:
         cfg, pool = self.cfg, self.pool

@@ -71,6 +71,8 @@ cross-engine identity claim — the rng schedule differs.
 from __future__ import annotations
 
 import dataclasses
+import itertools
+import time
 from typing import Any
 
 import jax
@@ -80,7 +82,56 @@ import numpy as np
 from repro.cpm.pool import CPMBank, MultiBankScheduler, SessionTable, SlotAllocator
 from repro.cpm.pool.sessions import ACTIVE, DONE, PARKED
 from repro.models import lm
+from repro.obs import metrics as obs_metrics
+from repro.obs import tracing as obs_tracing
 from . import kv_cache, sampling
+
+# -- registry-backed accounting ---------------------------------------------
+# Each pool instance is one label (pool="<id>") on these shared families;
+# the pool's legacy counter attributes (``pool.prefill_launches`` etc.) are
+# ``series_property`` views over its series, so ``stats()`` and the
+# telemetry exports read the very same cells.  All host arithmetic —
+# nothing here ever touches a device array (the PR-6 trace-safety rule).
+_POOL_IDS = itertools.count()
+
+_POOL_COUNTERS = {
+    "decode_steps": ("repro_pool_decode_steps_total",
+                     "virtual decode-step clock (chunks x chunk size)"),
+    "total_emitted": ("repro_pool_emitted_total",
+                      "tokens emitted (prefill + decode)"),
+    "_decode_emitted": ("repro_pool_decode_emitted_total",
+                        "budgeted decode tokens (excludes prefill)"),
+    "submitted": ("repro_pool_submitted_total", "sessions submitted"),
+    "admits": ("repro_pool_admits_total",
+               "fresh sessions admitted (restores counted separately)"),
+    "prefill_launches": ("repro_pool_prefill_launches_total",
+                         "stacked prefill launches"),
+    "admit_batches": ("repro_pool_admit_batches_total",
+                      "same-length admission buckets executed"),
+    "preemptions": ("repro_pool_preemptions_total", "sessions parked"),
+    "page_stalls": ("repro_pool_page_stalls_total",
+                    "parks forced by page pressure"),
+    "restores": ("repro_pool_restores_total", "parked sessions restored"),
+    "cancels": ("repro_pool_cancels_total", "sessions cancelled"),
+}
+_POOL_GAUGES = {
+    "active": ("repro_pool_active", "sessions decoding this step"),
+    "waiting": ("repro_pool_waiting", "fresh sessions queued"),
+    "parked": ("repro_pool_parked", "preempted sessions queued"),
+    "pages_free": ("repro_pool_pages_free", "free sub-pages, all banks"),
+    "occupancy": ("repro_pool_occupancy",
+                  "budgeted decode tokens per slot-step"),
+}
+_POOL_FAMILIES = (
+    {k: obs_metrics.counter(name, help, ("pool",))
+     for k, (name, help) in _POOL_COUNTERS.items()}
+    | {k: obs_metrics.gauge(name, help, ("pool",))
+       for k, (name, help) in _POOL_GAUGES.items()}
+)
+_CHUNK_SECONDS = obs_metrics.histogram(
+    "repro_pool_chunk_seconds",
+    "wall seconds per compiled decode chunk (dispatch, no forced sync)",
+    ("pool",))
 
 
 @dataclasses.dataclass
@@ -121,6 +172,21 @@ class SessionPool:
     one-at-a-time FIFO (buckets of one) — the baseline policy the
     ``serve_gateway`` benchmark compares against.
     """
+
+    # legacy counter attributes, now thin views over the pool's registry
+    # series (``self._obs_series``) — ``pool.prefill_launches += 1`` keeps
+    # working and the metrics exports see the same numbers
+    decode_steps = obs_metrics.series_property("decode_steps")
+    total_emitted = obs_metrics.series_property("total_emitted")
+    _decode_emitted = obs_metrics.series_property("_decode_emitted")
+    submitted = obs_metrics.series_property("submitted")
+    admits = obs_metrics.series_property("admits")
+    prefill_launches = obs_metrics.series_property("prefill_launches")
+    admit_batches = obs_metrics.series_property("admit_batches")
+    preemptions = obs_metrics.series_property("preemptions")
+    page_stalls = obs_metrics.series_property("page_stalls")
+    restores = obs_metrics.series_property("restores")
+    cancels = obs_metrics.series_property("cancels")
 
     def __init__(self, engine, slots: int = 8, n_banks: int = 1, gen=None,
                  chunk: int = 1, bank_backend: str = "reference",
@@ -187,15 +253,13 @@ class SessionPool:
         self._topk = np.full((slots,), self.gen.top_k, np.int32)
         self._topp = np.full((slots,), self.gen.top_p, np.float32)
 
-        self.decode_steps = 0
-        self.total_emitted = 0
-        self._decode_emitted = 0           # excludes prefill tokens
-        self.prefill_launches = 0
-        self.admit_batches = 0
-        self.preemptions = 0
-        self.page_stalls = 0               # parks forced by page pressure
-        self.restores = 0
-        self.cancels = 0
+        # per-pool telemetry series: the counter attributes declared on the
+        # class read/write these cells (fresh label -> fresh zeroed series)
+        self._pool_label = str(next(_POOL_IDS))
+        self._obs_series = {k: fam.labels(pool=self._pool_label)
+                            for k, fam in _POOL_FAMILIES.items()}
+        self._chunk_hist = _CHUNK_SECONDS.labels(pool=self._pool_label)
+        self.last_chunk_s = 0.0            # wall time of the last chunk
 
     # -- paging arithmetic --------------------------------------------------
     def pages_for(self, tokens: int) -> int:
@@ -256,11 +320,17 @@ class SessionPool:
                 f"never be seated")
         sess = self.table.add(tokens, s, budget)
         sess.gen = g
+        self.submitted += 1
         return sess.sid
+
+    def _vclock(self) -> int:
+        """The pool's virtual clock for spans: decode steps elapsed."""
+        return self.decode_steps
 
     def step(self) -> dict:
         """Admit -> decode ``chunk`` tokens for every live session ->
         retire.  Returns a stats snapshot (see :meth:`stats`)."""
+        self.last_chunk_s = 0.0             # this step's chunk wall time
         self._admit()
         self._retire()                      # budget-1 sessions finish on admit
         if self.table.active_count():
@@ -281,7 +351,7 @@ class SessionPool:
 
     def stats(self) -> dict:
         steps = self.decode_steps
-        return {
+        st = {
             "decode_steps": steps,
             "emitted": self.total_emitted,
             # useful (budgeted) *decode* tokens per slot-step — dead rows,
@@ -304,7 +374,12 @@ class SessionPool:
             "page_stalls": self.page_stalls,
             "restores": self.restores,
             "cancels": self.cancels,
+            "submitted": self.submitted,
+            "admits": self.admits,
         }
+        for key in _POOL_GAUGES:            # publish the derived gauges
+            self._obs_series[key].set(st[key])
+        return st
 
     # -- admission ----------------------------------------------------------
     def _try_seat(self, need: int) -> int | None:
@@ -354,15 +429,24 @@ class SessionPool:
                 continue                    # stays queued, FIFO order kept
             seated[sess.sid] = slot
             self._free_hint -= 1
+            obs_tracing.instant("pool.page_grant", cat="pool",
+                                vstep=self.decode_steps,
+                                args={"slot": slot, "pages": need})
         if not seated:
             return
-        plan = admission.plan(
-            [s for s in self.table.peek_waiting(take) if s.sid in seated],
-            batching=self.admit_batching)
-        for group in plan.restores:
-            self._restore_group(list(group), seated)
-        for bucket in plan.buckets:
-            self._admit_bucket(list(bucket), seated)
+        with obs_tracing.span("pool.admission", cat="pool",
+                              vclock=self._vclock,
+                              args={"seated": len(seated)}) as sp:
+            plan = admission.plan(
+                [s for s in self.table.peek_waiting(take)
+                 if s.sid in seated],
+                batching=self.admit_batching)
+            sp.args["restore_groups"] = len(plan.restores)
+            sp.args["buckets"] = len(plan.buckets)
+            for group in plan.restores:
+                self._restore_group(list(group), seated)
+            for bucket in plan.buckets:
+                self._admit_bucket(list(bucket), seated)
 
     def _note_admit(self, sess, slot: int) -> None:
         """Host mirrors for one freshly seated session."""
@@ -419,10 +503,22 @@ class SessionPool:
         batched prefill and one scatter program."""
         engine = self.engine
         k, s = len(bucket), bucket[0].prompt_len
+        ctx = obs_tracing.span("pool.admit_bucket", cat="pool",
+                               vclock=self._vclock,
+                               args={"sessions": k, "prompt_len": s})
+        with ctx:
+            self._admit_bucket_inner(bucket, seated, k, s)
+
+    def _admit_bucket_inner(self, bucket, seated, k: int, s: int) -> None:
+        engine = self.engine
         slots = [seated[sess.sid] for sess in bucket]
         prompts = jnp.stack([sess.prompt for sess in bucket])
-        logits, caches1 = engine._prefill(
-            engine.params, batch={"tokens": prompts}, max_len=self.max_len)
+        with obs_tracing.span("pool.prefill", cat="pool",
+                              vclock=self._vclock,
+                              args={"sessions": k, "prompt_len": s}):
+            logits, caches1 = engine._prefill(
+                engine.params, batch={"tokens": prompts},
+                max_len=self.max_len)
         caches1 = kv_cache.broadcast_lens(caches1, k)
         admit = engine._program("pool_admit", self.gen, self._build_admit,
                                 s, k, self.slots, self.page_size,
@@ -440,6 +536,7 @@ class SessionPool:
         self.tok_lens = self.tok_lens.at[idx].set(s + 1)
         self.prefill_launches += 1
         self.admit_batches += 1
+        self.admits += k
         for sess, slot in zip(bucket, slots):
             self.table.activate(sess.sid, self._bank_of(slot), slot)
             self._note_admit(sess, slot)
@@ -491,18 +588,21 @@ class SessionPool:
         slot = sess.slot
         row_len = sess.prompt_len + sess.emitted
         n_live = self.pages_for(row_len)
-        row = self._read_row(sess)
-        pt1 = jnp.asarray(
-            self._page_table_rows([slot], n_live)[:, :n_live])
-        image = kv_cache.lift_slot(self.caches, self.engine.cfg, slot, pt1)
-        sess.parked = PageState(
-            caches=jax.device_get(image), pos=int(self.pos[slot]),
-            cur=int(self.cur[slot]), row=np.asarray(row), row_len=row_len,
-            n_pages=n_live)
-        sess.parks += 1
-        self.preemptions += 1
-        self.table.park(sid)
-        self._release(slot)
+        with obs_tracing.span("pool.park", cat="pool", vclock=self._vclock,
+                              args={"sid": sid, "pages": n_live}):
+            row = self._read_row(sess)
+            pt1 = jnp.asarray(
+                self._page_table_rows([slot], n_live)[:, :n_live])
+            image = kv_cache.lift_slot(self.caches, self.engine.cfg, slot,
+                                       pt1)
+            sess.parked = PageState(
+                caches=jax.device_get(image), pos=int(self.pos[slot]),
+                cur=int(self.cur[slot]), row=np.asarray(row),
+                row_len=row_len, n_pages=n_live)
+            sess.parks += 1
+            self.preemptions += 1
+            self.table.park(sid)
+            self._release(slot)
 
     def _release(self, slot: int) -> None:
         """Slot + page list back to the free files, mirrors pinned."""
@@ -520,8 +620,17 @@ class SessionPool:
         saved pages already hold the history), then each token row
         scatters back onto its new page list."""
         k = len(group)
-        slots = [seated[sess.sid] for sess in group]
         states = [sess.parked for sess in group]
+        ctx = obs_tracing.span("pool.restore", cat="pool",
+                               vclock=self._vclock,
+                               args={"sessions": k,
+                                     "pages": states[0].n_pages})
+        with ctx:
+            self._restore_group_inner(group, seated, states)
+
+    def _restore_group_inner(self, group, seated, states) -> None:
+        k = len(group)
+        slots = [seated[sess.sid] for sess in group]
         n_live = states[0].n_pages
         blocks = jax.tree.map(lambda *xs: jnp.stack(xs, axis=1),
                               *[st.caches["blocks"] for st in states])
@@ -647,6 +756,10 @@ class SessionPool:
                                       lo, hi) is None:
                 self.page_stalls += 1
                 self.park(sess.sid)
+            else:
+                obs_tracing.instant(
+                    "pool.page_topup", cat="pool", vstep=self.decode_steps,
+                    args={"slot": sess.slot, "pages": need - have})
 
     def _decode_chunk(self) -> None:
         """One compiled program: gather every session's logical row
@@ -655,39 +768,52 @@ class SessionPool:
         scheduler's packed ``insert -> truncate`` stream — no host
         round-trip inside."""
         engine = self.engine
-        run = engine._program("pool_chunk", self.gen, self._build_chunk,
-                              self.slots, self.chunk, self.n_banks,
-                              self._bank_backend, self._bank_interpret,
-                              self.page_size, self.pages_per_bank)
-        self._rng, sub = jax.random.split(self._rng)
-        budget_left = np.zeros((self.slots,), np.int32)
-        for sess in self.table.active():
-            budget_left[sess.slot] = sess.budget - sess.emitted
-        pt = np.full((self.slots, self.C), self.total_pages, np.int32)
-        for sess in self.table.active():
-            ids = self.alloc.pages(sess.slot)
-            pt[sess.slot, :len(ids)] = ids
-        datas = [b.data for b in self.banks]
-        lenss = [b.lens for b in self.banks]
-        (self.cur, self.caches, self.pos, datas, lenss,
-         self.tok_lens) = run(
-            engine.params, self.cur, self.caches, self.pos,
-            jnp.asarray(self.live), jnp.asarray(budget_left),
-            jnp.asarray(self._temp), jnp.asarray(self._topk),
-            jnp.asarray(self._topp), datas, lenss, jnp.asarray(pt),
-            self.tok_lens, sub)
-        for b, d, ln in zip(self.banks, datas, lenss):
-            b.data, b.lens = d, ln
-
         active = self.table.active()
-        for sess in active:                 # host-mirror accounting only
-            emit = min(self.chunk, sess.budget - sess.emitted)
-            sess.emitted += emit
-            self.total_emitted += emit
-            self._decode_emitted += emit
-        self.decode_steps += self.chunk
-        self.sched.bank_launches += self.n_banks    # packed commit launches
-        self.sched.streams_packed += len(active)
+        with obs_tracing.span("pool.decode_chunk", cat="pool",
+                              vclock=self._vclock,
+                              args={"chunk": self.chunk,
+                                    "active": len(active)}):
+            run = engine._program("pool_chunk", self.gen, self._build_chunk,
+                                  self.slots, self.chunk, self.n_banks,
+                                  self._bank_backend, self._bank_interpret,
+                                  self.page_size, self.pages_per_bank)
+            self._rng, sub = jax.random.split(self._rng)
+            budget_left = np.zeros((self.slots,), np.int32)
+            for sess in active:
+                budget_left[sess.slot] = sess.budget - sess.emitted
+            pt = np.full((self.slots, self.C), self.total_pages, np.int32)
+            for sess in active:
+                ids = self.alloc.pages(sess.slot)
+                pt[sess.slot, :len(ids)] = ids
+            datas = [b.data for b in self.banks]
+            lenss = [b.lens for b in self.banks]
+            t0 = time.perf_counter()
+            (self.cur, self.caches, self.pos, datas, lenss,
+             self.tok_lens) = run(
+                engine.params, self.cur, self.caches, self.pos,
+                jnp.asarray(self.live), jnp.asarray(budget_left),
+                jnp.asarray(self._temp), jnp.asarray(self._topk),
+                jnp.asarray(self._topp), datas, lenss, jnp.asarray(pt),
+                self.tok_lens, sub)
+            # dispatch wall time only — no forced device sync here (the
+            # tracer must never add one; tests/test_obs.py asserts it)
+            self.last_chunk_s = time.perf_counter() - t0
+            self._chunk_hist.observe(self.last_chunk_s)
+            for b, d, ln in zip(self.banks, datas, lenss):
+                b.data, b.lens = d, ln
+
+            for sess in active:             # host-mirror accounting only
+                emit = min(self.chunk, sess.budget - sess.emitted)
+                sess.emitted += emit
+                self.total_emitted += emit
+                self._decode_emitted += emit
+            self.decode_steps += self.chunk
+            self.sched.bank_launches += self.n_banks  # packed commits
+            self.sched.streams_packed += len(active)
+            obs_tracing.instant("pool.commit_packed", cat="pool",
+                                vstep=self.decode_steps,
+                                args={"banks": self.n_banks,
+                                      "streams": len(active)})
 
     def _build_chunk(self, slots: int, chunk: int, n_banks: int,
                      bank_backend: str, bank_interpret, page_size: int,
