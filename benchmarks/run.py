@@ -982,17 +982,19 @@ def _serve_gateway_telemetry(cfg, params):
     from repro.serve import Engine
 
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    art = os.path.join(root, "artifacts")
+    os.makedirs(art, exist_ok=True)
 
     # Chrome/Perfetto trace: one span per serving layer, or the export is
     # lying about coverage
-    trace = obs.write_trace(os.path.join(root, "OBS_trace.json"))
+    trace = obs.write_trace(os.path.join(art, "OBS_trace.json"))
     counts = obs.validate_chrome_trace(trace)
     layers = ("gateway.tick", "pool.admission", "pool.prefill",
               "pool.decode_chunk", "pool.park", "pool.restore")
     for span_name in layers:
         assert counts.get(span_name, 0) >= 1, (
             f"no {span_name} span in exported trace: {sorted(counts)}")
-    obs.write_metrics(os.path.join(root, "OBS_metrics.prom"))
+    obs.write_metrics(os.path.join(art, "OBS_metrics.prom"))
     row("SG_obs_trace", 0.0,
         ";".join(f"{n.rsplit('.', 1)[-1]}={counts[n]}" for n in layers))
 
@@ -1050,6 +1052,196 @@ def _serve_gateway_telemetry(cfg, params):
     row("SG_obs_launch_invariance", 0.0,
         f"pallas_launches_obs_on={n_on};obs_off={n_off};"
         f"expected={3 * pool.n_banks}")
+
+
+def bench_serve_http():
+    """The wire front (PR-10): SSE streaming over ``POST /v1/generate``
+    vs the in-process async face, plus the live-observability gates.
+
+    Asserted in-run:
+
+      * **byte-identity** — for every paired request the SSE stream's
+        concatenated tokens equal the in-process ``Gateway.stream``
+        output as raw bytes (the wire adds framing, never tokens);
+      * **TTFT overhead** — mean wall-clock first-token overhead of the
+        HTTP/SSE path over the in-process path stays under 100 ms on
+        warm paths (generous: CI boxes are noisy; the point is catching
+        an accidental sync/buffering stall, not micro-latency);
+      * **scrape validity** — a live ``GET /metrics`` parses under the
+        strict mini-parser (``repro.obs.promparse``) including histogram
+        consistency and derived summary quantiles;
+      * **streaming trace** — ``GET /debug/trace`` (chunked) re-validates
+        via ``validate_chrome_trace`` with the ring at <= capacity;
+      * **burn-rate alerting** — an injected deadline-miss burst fires
+        the multi-window monitor and the flight-recorder dump
+        round-trips through both validators.
+    """
+    import asyncio
+    import dataclasses
+    import json as _json
+    import os
+
+    from repro import obs
+    from repro.configs import all_configs
+    from repro.models import lm
+    from repro.obs import promparse
+    from repro.obs.slo import BurnWindow, FlightRecorder, SloMonitor
+    from repro.serve import Engine, GenConfig, Gateway, HttpFrontend
+    from repro.serve import http as wire
+
+    cfg = dataclasses.replace(all_configs()["granite-8b"].smoke(),
+                              d_model=128, n_layers=2, d_ff=256)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    engine = Engine(cfg, params, max_len=64)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    art = os.path.join(root, "artifacts")
+    os.makedirs(art, exist_ok=True)
+    n_pairs, budget, plen = 8, 8, 6
+
+    def prompt(i):
+        return jax.random.randint(jax.random.PRNGKey(3000 + i), (plen,), 0,
+                                  cfg.vocab_size)
+
+    async def ttft_wire(fe, p, deadline=None):
+        body = {"prompt": [int(t) for t in np.asarray(p)],
+                "max_new_tokens": budget}
+        if deadline is not None:
+            body["deadline_steps"] = deadline
+        toks, first = [], None
+        t0 = time.perf_counter()
+        async for ev, data in wire.sse_events(fe.host, fe.port,
+                                              "/v1/generate", body):
+            if ev == "tokens":
+                if first is None:
+                    first = time.perf_counter() - t0
+                toks.extend(_json.loads(data)["tokens"])
+        return first, toks
+
+    async def ttft_inproc(gw, p):
+        toks, first = [], None
+        t0 = time.perf_counter()
+        rid = await gw.asubmit(p, budget)
+        async for ch in gw.stream(rid):
+            if first is None:
+                first = time.perf_counter() - t0
+            toks.extend(int(t) for t in ch)
+        return first, toks
+
+    async def main():
+        gw = Gateway(engine, slots=4, n_banks=1, chunk=2,
+                     gen=GenConfig(max_new_tokens=budget))
+        fe = HttpFrontend(gw, port=0, ring_capacity=2048, keepalive_s=2.0)
+        # re-wire the SLO plane with bench-scale windows so the injected
+        # burst below trips deterministically
+        recorder = FlightRecorder(os.path.join(art, "flightrec"),
+                                  ring=fe.ring, pool=gw.pool, last_n=128)
+        monitor = SloMonitor(objective=0.9,
+                             fast=BurnWindow(steps=16, threshold=4.0),
+                             slow=BurnWindow(steps=128, threshold=1.5),
+                             recorder=recorder, min_events=4, name="bench")
+        gw.slo_monitor = fe.slo_monitor = monitor
+        await fe.start()
+        await gw.start()
+        try:
+            # warm every compile path on both faces before timing
+            await ttft_wire(fe, prompt(999))
+            await ttft_inproc(gw, prompt(998))
+
+            wire_ttft, inproc_ttft, identical = [], [], 0
+            for i in range(n_pairs):
+                fw, tw = await ttft_wire(fe, prompt(i), deadline=500)
+                fi, ti = await ttft_inproc(gw, prompt(i))
+                wire_ttft.append(fw)
+                inproc_ttft.append(fi)
+                identical += (np.asarray(tw, np.int32).tobytes()
+                              == np.asarray(ti, np.int32).tobytes())
+            assert identical == n_pairs, (
+                f"only {identical}/{n_pairs} wire streams byte-identical")
+            w_us = np.mean(wire_ttft) * 1e6
+            i_us = np.mean(inproc_ttft) * 1e6
+            overhead_us = w_us - i_us
+            assert overhead_us < 100_000, (
+                f"SSE TTFT overhead {overhead_us / 1e3:.1f}ms over "
+                f"in-process — the wire front is stalling the stream")
+            row(f"HTTP_sse_ttft_n{n_pairs}", w_us,
+                f"inproc_us={i_us:.0f};overhead_us={overhead_us:.0f};"
+                f"p99_wire_us={np.percentile(wire_ttft, 99) * 1e6:.0f};"
+                f"tokens_identical={identical}/{n_pairs};gate=100ms")
+
+            # disconnect-cancel over the wire: the slot must come back
+            reader, writer = await asyncio.open_connection(fe.host, fe.port)
+            writer.write(wire._request_bytes(
+                "POST", "/v1/generate", fe.host,
+                _json.dumps({"prompt": [int(t) for t in np.asarray(
+                    prompt(997))], "max_new_tokens": 48}).encode()))
+            await writer.drain()
+            await reader.readuntil(b"start")
+            writer.close()
+            await writer.wait_closed()
+            for _ in range(500):
+                if gw.request(gw._next_rid - 1).done:
+                    break
+                await asyncio.sleep(0.02)
+            req = gw.request(gw._next_rid - 1)
+            assert req.cancelled, "disconnect did not cancel the request"
+            row("HTTP_disconnect_cancel", 0.0,
+                f"cancelled=1;tokens_before_cancel="
+                f"{len(req.tokens) - plen};free_slots="
+                f"{gw.pool.alloc.free_count()}")
+
+            # live /metrics scrape through the strict parser
+            st, _, raw = await wire.request(fe.host, fe.port, "GET",
+                                            "/metrics")
+            assert st == 200
+            fams = promparse.parse(raw.decode())
+            for fam in ("repro_gateway_requests_total",
+                        "repro_http_requests_total",
+                        "repro_http_sse_events_total"):
+                assert fam in fams, f"scrape missing {fam}"
+            n_samples = sum(len(f.samples) for f in fams.values())
+            row("HTTP_metrics_scrape", 0.0,
+                f"families={len(fams)};samples={n_samples};"
+                f"parser=promparse.strict")
+
+            # chunked streaming trace export off the bounded ring
+            st, hdrs, raw = await wire.request(fe.host, fe.port, "GET",
+                                               "/debug/trace")
+            assert st == 200 and hdrs.get("transfer-encoding") == "chunked"
+            counts = obs.validate_chrome_trace(_json.loads(raw.decode()))
+            rstats = fe.ring.stats()
+            assert rstats["len"] <= rstats["capacity"]
+            row("HTTP_debug_trace", 0.0,
+                f"events={sum(counts.values())};ring_len={rstats['len']};"
+                f"ring_capacity={rstats['capacity']};"
+                f"ring_dropped={rstats['dropped']};transfer=chunked")
+
+            # injected deadline-miss burst -> burn alert -> flight dump
+            for i in range(12):
+                st, _, raw = await wire.request(
+                    fe.host, fe.port, "POST", "/v1/generate",
+                    {"prompt": [int(t) for t in np.asarray(prompt(900 + i))],
+                     "max_new_tokens": 4, "deadline_steps": 0,
+                     "stream": False})
+                assert st == 200
+            assert monitor.alerts, "miss burst did not trip the monitor"
+            alert = monitor.alerts[0]
+            dump_path = alert["dump"]
+            assert dump_path and os.path.exists(dump_path)
+            dump = _json.load(open(dump_path))
+            obs.validate_chrome_trace(dump["trace"])
+            promparse.parse(dump["metrics_prom"])
+            assert dump["allocator"]["n_slots"] == gw.pool.slots
+            row("HTTP_slo_burn_alert", 0.0,
+                f"alerts={len(monitor.alerts)};"
+                f"fast_burn={alert['fast']['burn']:.1f}x;"
+                f"slow_burn={alert['slow']['burn']:.1f}x;"
+                f"dump={os.path.basename(dump_path)};"
+                f"dump_validators=chrome_trace+promparse")
+        finally:
+            await gw.stop()
+            await fe.stop()
+
+    asyncio.run(main())
 
 
 def bench_engine_decode():
@@ -1111,6 +1303,7 @@ SCENARIOS = {
     "engine_decode": bench_engine_decode,
     "serve_pool": bench_serve_pool,
     "serve_gateway": bench_serve_gateway,
+    "serve_http": bench_serve_http,
 }
 
 

@@ -1,0 +1,129 @@
+"""Serving over HTTP: the SSE wire front on a live gateway.
+
+Boots the PR-7 gateway with the PR-10 :class:`~repro.serve.http.
+HttpFrontend` mounted (``gw.start(http_port=0)``) and walks the wire
+surface with the module's own scripted client:
+
+  * ``POST /v1/generate`` with ``"stream": true`` — tokens arrive as
+    Server-Sent Events while the model decodes; the stream is
+    byte-identical to the in-process ``Gateway.stream`` face (the wire
+    adds framing, never tokens), which this script asserts;
+  * a mid-stream **disconnect** — closing the socket cancels the request
+    through ``Gateway.acancel`` and the slot returns to the pool;
+  * ``GET /metrics`` — the process registry in Prometheus text
+    exposition, validated here by the in-repo strict parser
+    (``repro.obs.promparse``), point a real Prometheus at it unchanged;
+  * ``GET /debug/trace`` — the bounded live ring streamed as chunked
+    Chrome/Perfetto JSON; the download lands in ``artifacts/`` and opens
+    at https://ui.perfetto.dev.
+
+Everything is stdlib asyncio — no server or client dependencies.
+
+    PYTHONPATH=src python examples/serve_http.py
+"""
+
+import asyncio
+import json
+import os
+
+import jax
+import numpy as np
+
+from repro import obs
+from repro.configs import all_configs
+from repro.models import lm
+from repro.obs import promparse
+from repro.serve import Engine, Gateway, GenConfig
+from repro.serve import http as wire
+
+
+async def main():
+    cfg = all_configs()["granite-8b"].smoke()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    engine = Engine(cfg, params, max_len=64)
+    gw = Gateway(engine, slots=4, n_banks=2, chunk=2,
+                 gen=GenConfig(max_new_tokens=12))
+
+    await gw.start(http_port=0)         # port 0 = pick a free one
+    while gw.http is None or not gw.http.port:
+        await asyncio.sleep(0.01)
+    host, port = gw.http.host, gw.http.port
+    print(f"gateway serving on http://{host}:{port}  "
+          f"(POST /v1/generate, GET /metrics, GET /debug/trace)\n")
+    try:
+        # -- 1. stream a generation over SSE --------------------------------
+        prompt = [int(t) for t in jax.random.randint(
+            jax.random.PRNGKey(7), (6,), 0, cfg.vocab_size)]
+        body = {"prompt": prompt, "max_new_tokens": 12,
+                "deadline_steps": 400}
+        tokens, done = [], None
+        async for event, data in wire.sse_events(host, port,
+                                                 "/v1/generate", body):
+            payload = json.loads(data)
+            if event == "tokens":
+                tokens.extend(payload["tokens"])
+                print(f"  sse tokens event: {payload['tokens']}")
+            elif event == "done":
+                done = payload
+        print(f"  done: {done['n_tokens']} tokens, "
+              f"ttft={done['ttft_steps']} steps, "
+              f"latency={done['latency_steps']} steps, "
+              f"slo_met={done['slo_met']}\n")
+
+        # -- 2. the wire never invents tokens: replay in-process ------------
+        rid = await gw.asubmit(np.asarray(prompt, np.int32), 12)
+        inproc = []
+        async for chunk in gw.stream(rid):
+            inproc.extend(int(t) for t in chunk)
+        assert (np.asarray(tokens, np.int32).tobytes()
+                == np.asarray(inproc, np.int32).tobytes())
+        print(f"wire stream byte-identical to in-process: "
+              f"{len(tokens)} tokens match\n")
+
+        # -- 3. disconnect mid-stream => cancel + slot comes back -----------
+        reader, writer = await asyncio.open_connection(host, port)
+        writer.write(wire._request_bytes(
+            "POST", "/v1/generate", host,
+            json.dumps({"prompt": prompt, "max_new_tokens": 48}).encode()))
+        await writer.drain()
+        await reader.readuntil(b"start")    # stream is live; hang up
+        writer.close()
+        await writer.wait_closed()
+        rid = gw._next_rid - 1
+        while not gw.request(rid).done:
+            await asyncio.sleep(0.02)
+        req = gw.request(rid)
+        print(f"disconnect cancelled rid={rid} after "
+              f"{len(req.tokens) - len(prompt)} tokens; "
+              f"free slots: {gw.pool.alloc.free_count()}/{gw.pool.slots}\n")
+
+        # -- 4. scrape /metrics and parse it strictly -----------------------
+        status, _, raw = await wire.request(host, port, "GET", "/metrics")
+        fams = promparse.parse(raw.decode())
+        print(f"GET /metrics -> {status}, {len(fams)} families; highlights:")
+        for name in ("repro_http_requests_total",
+                     "repro_http_sse_events_total",
+                     "repro_gateway_requests_total"):
+            for labels, value in fams[name].series().items():
+                print(f"  {name}{dict(labels)} = {value:g}")
+
+        # -- 5. download the live trace (chunked) ---------------------------
+        status, headers, raw = await wire.request(host, port, "GET",
+                                                  "/debug/trace")
+        art = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "artifacts")
+        os.makedirs(art, exist_ok=True)
+        trace_path = os.path.join(art, "http_trace.json")
+        with open(trace_path, "w") as fh:
+            fh.write(raw.decode())
+        counts = obs.validate_chrome_trace(json.loads(raw.decode()))
+        print(f"\nGET /debug/trace -> {status} "
+              f"(transfer-encoding: {headers.get('transfer-encoding')}), "
+              f"{sum(counts.values())} events -> {trace_path}")
+        print("open it at https://ui.perfetto.dev")
+    finally:
+        await gw.stop()
+
+
+if __name__ == "__main__":
+    asyncio.run(main())

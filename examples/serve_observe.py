@@ -2,7 +2,7 @@
 
 Replays the bursty trace from ``examples/serve_gateway.py`` with the
 ``repro.obs`` telemetry on (the default) and walks the three exports the
-PR-9 subsystem adds:
+PR-9 subsystem adds (files land under the gitignored ``artifacts/``):
 
   * ``trace.json`` — Chrome/Perfetto ``trace_event`` spans for every
     serving layer (gateway tick, admission, prefill, decode chunk,
@@ -72,7 +72,9 @@ def main():
                   f"chunk={rep.chunk_wall_s * 1e3:.1f}ms")
 
     # -- export 1: the Chrome/Perfetto trace --------------------------------
-    here = os.path.dirname(os.path.abspath(__file__))
+    here = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "artifacts")
+    os.makedirs(here, exist_ok=True)
     trace_path = os.path.join(here, "trace.json")
     counts = obs.validate_chrome_trace(obs.write_trace(trace_path))
     print(f"\nwrote {trace_path} — open at https://ui.perfetto.dev")

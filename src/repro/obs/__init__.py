@@ -20,18 +20,23 @@ record to one env lookup while the metric instruments keep functioning
 (the serving layers' ``stats()`` dicts are thin views over them).
 """
 
-from . import cycles, export, metrics, tracing
+from . import cycles, export, live, metrics, promparse, slo, tracing
 from .cycles import LEDGER, audit, drift_table
-from .export import (chrome_trace, validate_chrome_trace, write_metrics,
-                     write_trace)
+from .export import (chrome_trace, iter_trace_chunks, validate_chrome_trace,
+                     write_metrics, write_trace, write_trace_stream)
+from .live import TraceRing
 from .metrics import (REGISTRY, counter, enabled, gauge, histogram,
                       prometheus_text, snapshot)
+from .slo import BurnWindow, FlightRecorder, SloMonitor, allocator_state
 from .tracing import TRACER, instant, span
 
 __all__ = [
-    "cycles", "export", "metrics", "tracing",
+    "cycles", "export", "live", "metrics", "promparse", "slo", "tracing",
     "LEDGER", "audit", "drift_table",
-    "chrome_trace", "validate_chrome_trace", "write_metrics", "write_trace",
+    "chrome_trace", "iter_trace_chunks", "validate_chrome_trace",
+    "write_metrics", "write_trace", "write_trace_stream",
+    "TraceRing", "BurnWindow", "FlightRecorder", "SloMonitor",
+    "allocator_state",
     "REGISTRY", "counter", "enabled", "gauge", "histogram",
     "prometheus_text", "snapshot",
     "TRACER", "instant", "span",

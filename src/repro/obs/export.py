@@ -19,20 +19,30 @@ the ``obs-smoke`` CI job and the benchmark all run over an exported file
 from __future__ import annotations
 
 import json
-from typing import Any
+from typing import Any, Iterable, Iterator
 
 from .metrics import REGISTRY
-from .tracing import TRACER, Tracer
+from .tracing import TRACER, SpanEvent, Tracer
 
 _PID = 1
 
 
-def chrome_trace(tracer: Tracer | None = None,
-                 process_name: str = "repro.serve") -> dict:
-    """The tracer buffer as a ``{"traceEvents": [...]}`` JSON object."""
-    tracer = tracer if tracer is not None else TRACER
-    events = tracer.spans()
-    t0 = min((e.ts for e in events), default=0.0)
+def _resolve_events(source) -> list[SpanEvent]:
+    """Accept a Tracer, anything with ``.events()`` (a ``live.TraceRing``),
+    an iterable of SpanEvents, or None (the global tracer) — always
+    returning one stable snapshot list."""
+    if source is None:
+        source = TRACER
+    if isinstance(source, Tracer):
+        return source.spans()
+    events = getattr(source, "events", None)
+    if callable(events):
+        return list(events())
+    return list(source)
+
+
+def _meta_events(events: list[SpanEvent], process_name: str):
+    """Metadata records + the tid remap shared by both renderers."""
     out: list[dict[str, Any]] = [{
         "ph": "M", "pid": _PID, "tid": 0, "name": "process_name",
         "args": {"name": process_name},
@@ -43,26 +53,88 @@ def chrome_trace(tracer: Tracer | None = None,
         out.append({"ph": "M", "pid": _PID, "tid": i,
                     "name": "thread_name",
                     "args": {"name": f"serve-thread-{i}"}})
-    for e in events:
-        ts_us = (e.ts - t0) * 1e6
-        args = dict(e.args or {})
-        if e.vstep is not None:
-            args["vstep"] = e.vstep
-        if e.vdur is not None:
-            args["vdur"] = e.vdur
-        if e.cat.startswith("__counter__."):
-            out.append({"ph": "C", "pid": _PID, "tid": tid_map[e.tid],
-                        "name": e.name, "cat": e.cat.split(".", 1)[1],
-                        "ts": ts_us, "args": args})
-        elif e.dur is None:
-            out.append({"ph": "i", "s": "t", "pid": _PID,
-                        "tid": tid_map[e.tid], "name": e.name,
-                        "cat": e.cat, "ts": ts_us, "args": args})
-        else:
-            out.append({"ph": "X", "pid": _PID, "tid": tid_map[e.tid],
-                        "name": e.name, "cat": e.cat, "ts": ts_us,
-                        "dur": e.dur * 1e6, "args": args})
+    return out, tid_map
+
+
+def _event_dict(e: SpanEvent, t0: float, tid_map: dict) -> dict:
+    ts_us = (e.ts - t0) * 1e6
+    args = dict(e.args or {})
+    if e.vstep is not None:
+        args["vstep"] = e.vstep
+    if e.vdur is not None:
+        args["vdur"] = e.vdur
+    if e.cat.startswith("__counter__."):
+        return {"ph": "C", "pid": _PID, "tid": tid_map[e.tid],
+                "name": e.name, "cat": e.cat.split(".", 1)[1],
+                "ts": ts_us, "args": args}
+    if e.dur is None:
+        return {"ph": "i", "s": "t", "pid": _PID,
+                "tid": tid_map[e.tid], "name": e.name,
+                "cat": e.cat, "ts": ts_us, "args": args}
+    return {"ph": "X", "pid": _PID, "tid": tid_map[e.tid],
+            "name": e.name, "cat": e.cat, "ts": ts_us,
+            "dur": e.dur * 1e6, "args": args}
+
+
+def _indent2(rendered: str) -> str:
+    """Re-nest a depth-0 ``indent=1`` rendering to array-item depth, so
+    streamed chunks concatenate byte-identically to the one-shot
+    ``json.dumps(chrome_trace(...), indent=1)``."""
+    return "\n".join("  " + ln for ln in rendered.splitlines())
+
+
+def chrome_trace(tracer: Tracer | None = None,
+                 process_name: str = "repro.serve") -> dict:
+    """The tracer buffer as a ``{"traceEvents": [...]}`` JSON object."""
+    events = _resolve_events(tracer)
+    t0 = min((e.ts for e in events), default=0.0)
+    out, tid_map = _meta_events(events, process_name)
+    out.extend(_event_dict(e, t0, tid_map) for e in events)
     return {"traceEvents": out, "displayTimeUnit": "ms"}
+
+
+def iter_trace_chunks(source=None, process_name: str = "repro.serve",
+                      events_per_chunk: int = 256) -> Iterator[str]:
+    """Stream a trace as text chunks that CONCATENATE to the exact JSON
+    ``chrome_trace`` would produce — the live exporter behind
+    ``GET /debug/trace`` and :func:`write_trace_stream`.
+
+    ``source`` is a Tracer, a ``live.TraceRing``, an event iterable or
+    None (the global tracer); the events are snapshotted once, then
+    serialized ``events_per_chunk`` at a time, so peak memory is one
+    chunk's text plus the (bounded, when ringed) snapshot — never the
+    whole rendered JSON body of a week-long run."""
+    events = _resolve_events(source)
+    t0 = min((e.ts for e in events), default=0.0)
+    meta, tid_map = _meta_events(events, process_name)
+    head = json.dumps({"traceEvents": meta, "displayTimeUnit": "ms"},
+                      indent=1)
+    cut = head.rindex("]")                  # re-open the events array,
+    while cut > 0 and head[cut - 1] in " \n":
+        cut -= 1                            # splitting right after the
+    head, tail = head[:cut], head[cut:]     # last metadata record
+    yield head
+    for i in range(0, len(events), events_per_chunk):
+        batch = events[i:i + events_per_chunk]
+        body = ",\n".join(_indent2(json.dumps(_event_dict(e, t0, tid_map),
+                                              indent=1))
+                          for e in batch)
+        yield ",\n" + body
+    yield tail
+
+
+def write_trace_stream(path: str, source=None,
+                       process_name: str = "repro.serve",
+                       events_per_chunk: int = 256) -> int:
+    """Chunked counterpart of :func:`write_trace` for live use: writes
+    the stream chunk-by-chunk and returns the event count — the whole
+    JSON text never exists in memory at once."""
+    events = _resolve_events(source)
+    with open(path, "w") as f:
+        for chunk in iter_trace_chunks(events, process_name,
+                                       events_per_chunk):
+            f.write(chunk)
+    return len(events)
 
 
 def write_trace(path: str, tracer: Tracer | None = None) -> dict:

@@ -37,6 +37,11 @@ from typing import Any, Iterable
 
 _HIST_DEFAULT_BUCKETS = (0.001, 0.005, 0.01, 0.05, 0.1, 0.5, 1.0, 5.0)
 
+#: the quantiles every histogram family also exposes as an estimated
+#: Prometheus *summary* (``<name>_summary{quantile="..."}``) and in the
+#: JSON snapshot (``p50``/``p90``/``p99``)
+SUMMARY_QUANTILES = (0.5, 0.9, 0.99)
+
 
 def enabled() -> bool:
     """Telemetry master switch (``REPRO_OBS=0`` disables).  Read per call
@@ -48,10 +53,24 @@ def _label_key(labels: dict[str, str]) -> tuple[tuple[str, str], ...]:
     return tuple(sorted(labels.items()))
 
 
+def escape_label_value(value: str) -> str:
+    """Prometheus exposition escaping for label VALUES: backslash, double
+    quote and newline must be escaped or the scrape line is ambiguous."""
+    return (value.replace("\\", r"\\").replace('"', r"\"")
+            .replace("\n", r"\n"))
+
+
+def escape_help(text: str) -> str:
+    """``# HELP`` text escaping: backslash and newline only (quotes are
+    legal in help text)."""
+    return text.replace("\\", r"\\").replace("\n", r"\n")
+
+
 def _fmt_labels(key: tuple[tuple[str, str], ...]) -> str:
     if not key:
         return ""
-    return "{" + ",".join(f'{k}="{v}"' for k, v in key) + "}"
+    return "{" + ",".join(f'{k}="{escape_label_value(v)}"'
+                          for k, v in key) + "}"
 
 
 class _Series:
@@ -69,6 +88,9 @@ class _Series:
 
     def set(self, value):
         self.value = value
+
+    def reset(self):
+        self.value = 0
 
 
 class _HistSeries:
@@ -90,6 +112,34 @@ class _HistSeries:
                 self.counts[i] += 1
                 return
         self.counts[-1] += 1
+
+    def reset(self):
+        self.counts = [0] * (len(self.buckets) + 1)
+        self.sum = 0.0
+        self.count = 0
+
+    def quantile(self, q: float) -> float | None:
+        """Estimate the q-quantile from the bucket layout, Prometheus
+        ``histogram_quantile`` style: find the bucket the rank falls in
+        and interpolate linearly inside it (uniform-within-bucket
+        assumption).  Ranks landing in the ``+Inf`` tail clamp to the
+        highest finite edge; an empty series returns ``None``."""
+        if not 0.0 <= q <= 1.0:
+            raise ValueError(f"quantile {q} outside [0, 1]")
+        if self.count == 0:
+            return None
+        rank = q * self.count
+        acc = 0
+        for i, edge in enumerate(self.buckets):
+            prev_acc = acc
+            acc += self.counts[i]
+            if acc >= rank and self.counts[i] > 0:
+                lo = self.buckets[i - 1] if i > 0 else min(0.0, edge)
+                frac = (rank - prev_acc) / self.counts[i]
+                return lo + (edge - lo) * max(0.0, min(1.0, frac))
+        # rank is in the +Inf bucket: the honest answer is "at least the
+        # top edge" — report the top edge rather than inventing a value
+        return self.buckets[-1] if self.buckets else None
 
 
 class Metric:
@@ -166,7 +216,10 @@ class Histogram(Metric):
         return {_fmt_labels(k): {"sum": s.sum, "count": s.count,
                                  "buckets": dict(zip(
                                      [str(b) for b in s.buckets] + ["+Inf"],
-                                     list(itertools.accumulate(s.counts))))}
+                                     list(itertools.accumulate(s.counts)))),
+                                 "quantiles": {
+                                     f"p{int(q * 100)}": s.quantile(q)
+                                     for q in SUMMARY_QUANTILES}}
                 for k, s in sorted(self._series.items())}
 
 
@@ -205,10 +258,14 @@ class Registry:
                                 key=lambda m: m.name)}
 
     def prometheus_text(self) -> str:
-        """Standard Prometheus text exposition of every series."""
+        """Standard Prometheus text exposition of every series.  Each
+        histogram family is followed by a derived ``<name>_summary``
+        family of TYPE ``summary`` carrying the bucket-estimated
+        quantiles (:data:`SUMMARY_QUANTILES`) — scrapers that can't run
+        ``histogram_quantile`` get p50/p90/p99 for free."""
         lines: list[str] = []
         for m in sorted(self._metrics.values(), key=lambda m: m.name):
-            lines.append(f"# HELP {m.name} {m.help}")
+            lines.append(f"# HELP {m.name} {escape_help(m.help)}")
             lines.append(f"# TYPE {m.name} {m.kind}")
             if isinstance(m, Histogram):
                 for key, s in sorted(m._series.items()):
@@ -221,6 +278,20 @@ class Registry:
                     lines.append(f"{m.name}_sum{_fmt_labels(key)} {s.sum}")
                     lines.append(f"{m.name}_count{_fmt_labels(key)} "
                                  f"{s.count}")
+                sname = f"{m.name}_summary"
+                lines.append(f"# HELP {sname} bucket-estimated quantiles "
+                             f"of {m.name}")
+                lines.append(f"# TYPE {sname} summary")
+                for key, s in sorted(m._series.items()):
+                    for q in SUMMARY_QUANTILES:
+                        v = s.quantile(q)
+                        if v is None:
+                            continue
+                        lk = _label_key(dict(key) | {"quantile": str(q)})
+                        lines.append(f"{sname}{_fmt_labels(lk)} {v}")
+                    lines.append(f"{sname}_sum{_fmt_labels(key)} {s.sum}")
+                    lines.append(f"{sname}_count{_fmt_labels(key)} "
+                                 f"{s.count}")
             else:
                 for key, s in sorted(m._series.items()):
                     lines.append(f"{m.name}{_fmt_labels(key)} {s.value}")
@@ -230,6 +301,23 @@ class Registry:
         """Drop every family (tests)."""
         with self._lock:
             self._metrics.clear()
+
+    def reset(self) -> None:
+        """Zero every series IN PLACE, keeping registrations and live
+        series references valid.
+
+        This is the test-isolation primitive: the registry is process
+        global, so counters a suite bumps would otherwise satisfy (or
+        pollute) another suite's assertions.  ``clear()`` is wrong for
+        that job — the serving layers hold direct references to their
+        series (``series_property`` views), and dropping the families
+        would orphan them.  ``reset()`` zeroes the cells the views read
+        through, so every layer keeps functioning from zero."""
+        with self._lock:
+            for m in self._metrics.values():
+                with m._lock:
+                    for s in m._series.values():
+                        s.reset()
 
 
 #: the process-global registry every serving layer records through

@@ -28,6 +28,7 @@ the buffer as Chrome/Perfetto ``trace_event`` JSON.
 
 from __future__ import annotations
 
+import collections
 import contextlib
 import dataclasses
 import threading
@@ -64,15 +65,56 @@ _NULL_HANDLE = _SpanHandle({})
 
 
 class Tracer:
-    """The event buffer + per-thread span stacks."""
+    """The event buffer + per-thread span stacks.
 
-    def __init__(self):
-        self.events: list[SpanEvent] = []
+    The buffer is a deque: unbounded by default (post-hoc ``write_trace``
+    wants everything), boundable via :meth:`set_limit` for live serving —
+    a week-long run then holds at most ``max_events`` completed spans and
+    the streaming exporter (:mod:`repro.obs.live`) renders from its own
+    bounded ring.  **Sinks** are the live-plane hook: every completed
+    event is also pushed to each registered callback (host-side, after
+    the span closed — never inside it)."""
+
+    def __init__(self, max_events: int | None = None):
+        self.events: collections.deque[SpanEvent] = \
+            collections.deque(maxlen=max_events)
+        self._sinks: list[Callable[[SpanEvent], None]] = []
         self._local = threading.local()
         self._lock = threading.Lock()
 
     def _depth(self) -> int:
         return getattr(self._local, "depth", 0)
+
+    @property
+    def max_events(self) -> int | None:
+        return self.events.maxlen
+
+    def set_limit(self, max_events: int | None) -> None:
+        """Bound (or unbound) the buffer in place, keeping the newest
+        events.  The live HTTP plane calls this so the process-global
+        tracer cannot grow without bound under continuous traffic."""
+        with self._lock:
+            self.events = collections.deque(self.events, maxlen=max_events)
+
+    def add_sink(self, sink: Callable[[SpanEvent], None]) -> None:
+        """Register a per-event callback (e.g. a ``live.TraceRing``).
+        Sinks run on the recording thread between compiled calls — keep
+        them O(1) host work."""
+        with self._lock:
+            if sink not in self._sinks:
+                self._sinks.append(sink)
+
+    def remove_sink(self, sink: Callable[[SpanEvent], None]) -> None:
+        with self._lock:
+            if sink in self._sinks:
+                self._sinks.remove(sink)
+
+    def _emit(self, ev: SpanEvent) -> None:
+        with self._lock:
+            self.events.append(ev)
+            sinks = list(self._sinks)
+        for sink in sinks:
+            sink(ev)
 
     @contextlib.contextmanager
     def span(self, name: str, cat: str = "serve",
@@ -100,8 +142,7 @@ class Tracer:
                            vstep=v0,
                            vdur=(v1 - v0) if v0 is not None else None,
                            args=handle.args or None)
-            with self._lock:
-                self.events.append(ev)
+            self._emit(ev)
 
     def instant(self, name: str, cat: str = "serve",
                 vstep: int | None = None,
@@ -114,8 +155,7 @@ class Tracer:
                        depth=self._depth(),
                        vstep=int(vstep) if vstep is not None else None,
                        args=dict(args) if args else None)
-        with self._lock:
-            self.events.append(ev)
+        self._emit(ev)
 
     def counter(self, name: str, value, cat: str = "serve") -> None:
         """Record a Chrome counter-track sample (rendered as ``ph: "C"``)."""
@@ -125,8 +165,7 @@ class Tracer:
                        ts=time.perf_counter(), dur=None,
                        tid=threading.get_ident(), depth=0,
                        args={"value": value})
-        with self._lock:
-            self.events.append(ev)
+        self._emit(ev)
 
     def spans(self, name: str | None = None) -> list[SpanEvent]:
         """Snapshot of recorded events, optionally filtered by exact name."""

@@ -1,10 +1,12 @@
-from . import (engine, gateway, kv_cache, program_paths, reference,
+from . import (engine, gateway, http, kv_cache, program_paths, reference,
                sampling, session_pool)
 from .engine import Engine, GenConfig
 from .gateway import Gateway
+from .http import HttpFrontend, SSEDecoder
 from .reference import ReferenceEngine
 from .session_pool import SessionPool
 
-__all__ = ["engine", "gateway", "kv_cache", "program_paths", "reference",
-           "sampling", "session_pool", "Engine", "GenConfig", "Gateway",
-           "ReferenceEngine", "SessionPool"]
+__all__ = ["engine", "gateway", "http", "kv_cache", "program_paths",
+           "reference", "sampling", "session_pool", "Engine", "GenConfig",
+           "Gateway", "HttpFrontend", "SSEDecoder", "ReferenceEngine",
+           "SessionPool"]

@@ -109,7 +109,8 @@ class Gateway:
                  bank_backend: str = "reference",
                  bank_interpret: bool | None = None, rng=None,
                  page_size: int | None = None,
-                 pages_per_bank: int | None = None):
+                 pages_per_bank: int | None = None,
+                 slo_monitor=None):
         self.gen = gen if gen is not None else GenConfig()
         self.pool = engine.session_pool(
             slots=slots, n_banks=n_banks, gen=self.gen, chunk=chunk,
@@ -129,8 +130,15 @@ class Gateway:
         label = str(next(_GW_IDS))
         self._obs_series = {k: fam.labels(gw=label)
                             for k, fam in _GW_FAMILIES.items()}
+        # optional obs.slo.SloMonitor: every deadline grade feeds its
+        # burn-rate windows (host-side deque append, per the trace-safety
+        # rule); on a multi-window burn it fires its flight recorder
+        self.slo_monitor = slo_monitor
+        self.last_report: TickReport | None = None
+        self.http = None               # HttpFrontend while serve(http_port=)
         self._wake: asyncio.Event | None = None
         self._task: asyncio.Task | None = None
+        self._tick_lock = asyncio.Lock()   # serve()'s single-writer gate
         self._stopping = False
 
     @property
@@ -170,6 +178,7 @@ class Gateway:
         pool snapshot; dict-style access falls through to the snapshot
         for legacy keys)."""
         report = self.loop.tick()
+        self.last_report = report
         self._publish()
         return report
 
@@ -226,6 +235,8 @@ class Gateway:
             self.slo_met_count += 1
         elif req.slo_met is False:
             self.slo_missed_count += 1
+        if self.slo_monitor is not None and req.slo_met is not None:
+            self.slo_monitor.record(req.slo_met, self.now)
         if req._done_ev is not None:
             req._done_ev.set()
         self._push_stream(req, final=True)
@@ -279,6 +290,16 @@ class Gateway:
         await req._done_ev.wait()
         return req.tokens
 
+    async def acancel(self, rid: int) -> np.ndarray:
+        """Cancel from the event loop while ``serve()`` is running.  The
+        pool is single-writer: a bare ``cancel`` racing the tick thread
+        could free a slot the in-flight ``pool.step`` then writes back as
+        live.  This face takes the serve loop's tick lock, so the cancel
+        lands strictly between heartbeats (the HTTP frontend uses it for
+        client disconnects)."""
+        async with self._tick_lock:
+            return self.cancel(rid)
+
     async def stream(self, rid: int) -> AsyncIterator[np.ndarray]:
         """Async iterator of ``rid``'s NEW tokens (beyond the prompt) as
         the banks commit them; ends at finish or cancel."""
@@ -296,9 +317,19 @@ class Gateway:
                 return
             yield chunk
 
-    async def serve(self, idle_wait: float = 0.05) -> None:
+    async def serve(self, idle_wait: float = 0.05,
+                    http_port: int | None = None,
+                    http_host: str = "127.0.0.1", **http_kw) -> None:
         """The continuous loop: tick while work is pending, park on the
         wake event (set by asubmit) when idle.
+
+        ``http_port`` mounts the wire front for the duration of the
+        loop: an :class:`~repro.serve.http.HttpFrontend` (SSE token
+        streaming over ``POST /v1/generate``, ``GET /metrics`` scrapes,
+        live stats, streaming trace export) bound to
+        ``http_host:http_port`` (port 0 picks a free port — read it back
+        from ``gateway.http.port``).  Extra keyword args pass through to
+        the frontend (ring capacity, keep-alive period, detokenizer).
 
         The heartbeat's compute half (``EngineLoop.tick`` — preempt,
         step, collect; synchronous jax) runs in a worker thread so the
@@ -310,21 +341,36 @@ class Gateway:
         exists at a time, and ``submit`` only appends to the host-side
         FIFO table, which the tick reads at well-defined points."""
         wake = self._ensure_wake()
-        while not self._stopping:
-            if self.loop.pending():
-                await asyncio.to_thread(self.loop.tick)
-                self._publish()
-            else:
-                wake.clear()
-                try:
-                    await asyncio.wait_for(wake.wait(), timeout=idle_wait)
-                except asyncio.TimeoutError:
-                    pass
+        self.http = None
+        if http_port is not None:
+            from ..http import HttpFrontend
+            self.http = HttpFrontend(self, host=http_host, port=http_port,
+                                     **http_kw)
+            await self.http.start()
+        try:
+            while not self._stopping:
+                if self.loop.pending():
+                    async with self._tick_lock:
+                        self.last_report = await asyncio.to_thread(
+                            self.loop.tick)
+                        self._publish()
+                else:
+                    wake.clear()
+                    try:
+                        await asyncio.wait_for(wake.wait(),
+                                               timeout=idle_wait)
+                    except asyncio.TimeoutError:
+                        pass
+        finally:
+            if self.http is not None:
+                await self.http.stop()
 
-    async def start(self) -> None:
+    async def start(self, **serve_kw) -> None:
+        """Run :meth:`serve` as a background task; kwargs pass through
+        (``start(http_port=0)`` mounts the wire front)."""
         if self._task is None:
             self._stopping = False
-            self._task = asyncio.ensure_future(self.serve())
+            self._task = asyncio.ensure_future(self.serve(**serve_kw))
 
     async def stop(self) -> None:
         self._stopping = True

@@ -103,3 +103,29 @@ except ImportError:
     _h.strategies = _st
     sys.modules["hypothesis"] = _h
     sys.modules["hypothesis.strategies"] = _st
+
+
+# ---------------------------------------------------------------------------
+# telemetry isolation between test modules
+# ---------------------------------------------------------------------------
+#
+# The obs registry and tracer are process-global by design (a serving
+# process has exactly one /metrics endpoint).  Under pytest that design
+# leaks state across test modules: a counter bumped by test_gateway.py
+# would still be non-zero when test_obs.py snapshots the registry.  This
+# autouse fixture resets both at every module boundary.  It deliberately
+# uses Registry.reset() (zero values in place) rather than clear():
+# serving objects hold live series references via series_property, and
+# clearing would orphan them.  Pinned by
+# tests/test_obs_live.py::TestRegistryReset.
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _obs_module_isolation():
+    from repro.obs import metrics as _m
+    from repro.obs import tracing as _t
+    _m.REGISTRY.reset()
+    _t.TRACER.clear()
+    yield

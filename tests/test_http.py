@@ -1,0 +1,456 @@
+"""`repro.serve.http` — the wire front: SSE framing, byte-identity,
+overhead invariants with the HTTP plane attached.
+
+The wire contracts:
+
+  * **byte-identity** — the SSE token stream carries exactly the chunks
+    the in-process ``Gateway.stream`` yields: same values, same chunking,
+    equal as raw bytes after concatenation;
+  * **SSE framing** — the incremental decoder is correct under arbitrary
+    transport splits, including mid-frame and mid-UTF-8-sequence; the
+    server emits keep-alive comments during silence; a client disconnect
+    mid-stream cancels the request through the gateway (pages reclaimed);
+  * **invariants survive the frontend** — attaching the HTTP plane (ring
+    sink, SLO monitor, flight recorder) changes NOTHING about what
+    compiles: same pallas launch count per chunk, same program cache
+    keys, zero device syncs from serving a request over the wire.
+"""
+
+import asyncio
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import all_configs
+from repro.models import lm
+from repro.obs import metrics, promparse, tracing, validate_chrome_trace
+from repro.serve import Engine, GenConfig, Gateway, HttpFrontend
+from repro.serve import http as wire
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = all_configs()["granite-8b"].smoke()
+
+
+@pytest.fixture(scope="module")
+def granite():
+    params = lm.init_params(CFG, jax.random.PRNGKey(0))
+    return Engine(CFG, params, max_len=64)
+
+
+def _prompt(seed, s):
+    return np.asarray(jax.random.randint(jax.random.PRNGKey(seed), (s,), 0,
+                                         CFG.vocab_size), np.int32)
+
+
+def _detok(toks):
+    # CJK page: every char is 3 UTF-8 bytes, so any byte-split test that
+    # slices the wire mid-character exercises incremental decoding
+    return "".join(chr(0x4E00 + t % 64) for t in toks)
+
+
+async def _boot(granite, *, slots=4, chunk=2, budget=8, **fe_kw):
+    gw = Gateway(granite, slots=slots, n_banks=1, chunk=chunk,
+                 gen=GenConfig(max_new_tokens=budget))
+    fe = HttpFrontend(gw, port=0, **fe_kw)
+    await fe.start()
+    await gw.start()
+    return gw, fe
+
+
+async def _shutdown(gw, fe):
+    await gw.stop()
+    await fe.stop()
+
+
+# ---------------------------------------------------------------------------
+# SSE framing: the decoder under hostile splits
+# ---------------------------------------------------------------------------
+
+class TestSSEDecoder:
+    def test_multibyte_utf8_split_across_chunks(self):
+        """Feeding one byte at a time can never mis-decode: frames are
+        buffered as bytes and decoded whole."""
+        text = "你好，世界 — done ✓"
+        frame = wire.sse_event("tokens", {"text": text, "tokens": [1, 2]})
+        dec = wire.SSEDecoder()
+        frames = []
+        for i in range(len(frame)):              # worst case: 1-byte chunks
+            frames.extend(dec.feed(frame[i:i + 1]))
+        assert len(frames) == 1
+        ev, data = frames[0]
+        assert ev == "tokens"
+        assert json.loads(data)["text"] == text
+
+    def test_split_mid_frame_and_coalesced_frames(self):
+        a = wire.sse_event("tokens", {"tokens": [1]})
+        b = wire.sse_event("done", {"rid": 0})
+        blob = a + b
+        cut = len(a) // 2
+        dec = wire.SSEDecoder()
+        frames = dec.feed(blob[:cut])
+        frames += dec.feed(blob[cut:])
+        assert [e for e, _ in frames] == ["tokens", "done"]
+
+    def test_comments_and_crlf_tolerated(self):
+        dec = wire.SSEDecoder()
+        frames = dec.feed(b": keep-alive\n\n")
+        assert frames == [] and dec.comments == ["keep-alive"]
+        frames = dec.feed(b"event: done\r\ndata: {}\r\n\r\n")
+        assert frames == [("done", "{}")]
+
+
+# ---------------------------------------------------------------------------
+# wire identity: HTTP stream == in-process stream
+# ---------------------------------------------------------------------------
+
+class TestWireIdentity:
+    def test_sse_stream_byte_identical_to_inprocess(self, granite):
+        async def scenario():
+            gw, fe = await _boot(granite, detokenize=_detok)
+            try:
+                prompt = _prompt(10, 6)
+                body = {"prompt": [int(t) for t in prompt],
+                        "max_new_tokens": 8, "deadline_steps": 200}
+                http_chunks, texts, done = [], [], None
+                async for ev, data in wire.sse_events(
+                        fe.host, fe.port, "/v1/generate", body):
+                    d = json.loads(data)
+                    if ev == "tokens":
+                        http_chunks.append(d["tokens"])
+                        texts.append(d["text"])
+                    elif ev == "done":
+                        done = d
+                rid = await gw.asubmit(prompt, 8)
+                local_chunks = []
+                async for ch in gw.stream(rid):
+                    local_chunks.append([int(t) for t in ch])
+                # identical values AND identical chunking, as raw bytes
+                assert np.asarray(sum(http_chunks, []), np.int32).tobytes() \
+                    == np.asarray(sum(local_chunks, []), np.int32).tobytes()
+                assert http_chunks == local_chunks
+                assert "".join(texts) == _detok(sum(http_chunks, []))
+                assert done["n_tokens"] == len(prompt) + 8
+                assert done["slo_met"] is True and not done["cancelled"]
+            finally:
+                await _shutdown(gw, fe)
+        asyncio.run(scenario())
+
+    def test_nonstream_matches_stream(self, granite):
+        async def scenario():
+            gw, fe = await _boot(granite)
+            try:
+                prompt = _prompt(11, 5)
+                body = {"prompt": [int(t) for t in prompt],
+                        "max_new_tokens": 6, "stream": False}
+                status, _, raw = await wire.request(
+                    fe.host, fe.port, "POST", "/v1/generate", body)
+                assert status == 200
+                d = json.loads(raw)
+                rid = await gw.asubmit(prompt, 6)
+                expect = await gw.aresult(rid)
+                # non-stream responses carry prompt + generated (the
+                # sync-face contract); the stream face omits the prompt
+                assert d["tokens"][-6:] == [int(t) for t in expect[-6:]]
+                assert d["n_tokens"] == len(expect)
+            finally:
+                await _shutdown(gw, fe)
+        asyncio.run(scenario())
+
+    def test_per_request_gen_override_applies(self, granite):
+        async def scenario():
+            gw, fe = await _boot(granite)
+            try:
+                prompt = _prompt(12, 5)
+                body = {"prompt": [int(t) for t in prompt],
+                        "max_new_tokens": 4,
+                        "gen": {"temperature": 0.0}, "stream": False}
+                status, _, raw = await wire.request(
+                    fe.host, fe.port, "POST", "/v1/generate", body)
+                assert status == 200
+                greedy = json.loads(raw)["tokens"][-4:]
+                sid_toks = gw.result(gw.submit(
+                    prompt, 4, gen=GenConfig(max_new_tokens=4,
+                                             temperature=0.0)))
+                assert greedy == [int(t) for t in sid_toks[-4:]]
+            finally:
+                await _shutdown(gw, fe)
+        asyncio.run(scenario())
+
+
+# ---------------------------------------------------------------------------
+# server-side SSE behavior: keep-alives, disconnect-cancel
+# ---------------------------------------------------------------------------
+
+class TestSSEServer:
+    def test_keepalive_comments_during_silence(self, granite):
+        """While no tokens arrive (tick loop not yet running — the wire
+        analogue of a long prefill) the stream must carry keep-alive
+        comments so intermediaries don't drop the connection."""
+        async def scenario():
+            gw = Gateway(granite, slots=2, n_banks=1, chunk=2,
+                         gen=GenConfig(max_new_tokens=4))
+            fe = await HttpFrontend(gw, port=0, keepalive_s=0.05).start()
+            try:
+                async def late_start():
+                    await asyncio.sleep(0.4)
+                    await gw.start()
+                starter = asyncio.ensure_future(late_start())
+                dec = wire.SSEDecoder()
+                events = []
+                async for ev, _ in wire.sse_events(
+                        fe.host, fe.port, "/v1/generate",
+                        {"prompt": [int(t) for t in _prompt(13, 4)],
+                         "max_new_tokens": 4}, decoder=dec):
+                    events.append(ev)
+                await starter
+                assert events[0] == "start" and events[-1] == "done"
+                assert len(dec.comments) >= 3       # ~0.4s of 0.05s beats
+                assert all(c == "keep-alive" for c in dec.comments)
+            finally:
+                await _shutdown(gw, fe)
+        asyncio.run(scenario())
+
+    def test_client_disconnect_cancels_request(self, granite):
+        """Closing the socket mid-stream must cancel the request through
+        the gateway: the slot frees, the request grades as cancelled."""
+        async def scenario():
+            gw, fe = await _boot(granite, chunk=1, budget=48)
+            try:
+                before = metrics.snapshot().get(
+                    "repro_http_disconnects_total",
+                    {"series": {}})["series"].get("", 0)
+                reader, writer = await asyncio.open_connection(
+                    fe.host, fe.port)
+                body = json.dumps({
+                    "prompt": [int(t) for t in _prompt(14, 4)],
+                    "max_new_tokens": 48}).encode()
+                writer.write(wire._request_bytes(
+                    "POST", "/v1/generate", fe.host, body))
+                await writer.drain()
+                await reader.readuntil(b"start")    # stream is live
+                writer.close()                      # client walks away
+                await writer.wait_closed()
+                req = gw.request(gw._next_rid - 1)
+                # generous poll: the first tick may hold the tick lock
+                # through a cold compile before the cancel can land
+                for _ in range(1500):
+                    if req.done:
+                        break
+                    await asyncio.sleep(0.02)
+                assert req.done and req.cancelled
+                assert len(req.tokens) < len(req.prompt) + 48
+                for _ in range(500):    # slot frees once the tick settles
+                    if gw.pool.alloc.free_count() == gw.pool.slots:
+                        break
+                    await asyncio.sleep(0.02)
+                assert gw.pool.alloc.free_count() == gw.pool.slots
+                after = metrics.snapshot()[
+                    "repro_http_disconnects_total"]["series"][""]
+                assert after == before + 1
+            finally:
+                await _shutdown(gw, fe)
+        asyncio.run(scenario())
+
+
+# ---------------------------------------------------------------------------
+# plain routes + error statuses
+# ---------------------------------------------------------------------------
+
+class TestRoutes:
+    def test_healthz_stats_metrics_trace(self, granite):
+        async def scenario():
+            gw, fe = await _boot(granite)
+            try:
+                rid = await gw.asubmit(_prompt(15, 5), 4)
+                await gw.aresult(rid)
+                st, _, raw = await wire.request(fe.host, fe.port, "GET",
+                                                "/healthz")
+                assert st == 200 and json.loads(raw)["ok"] is True
+                st, _, raw = await wire.request(fe.host, fe.port, "GET",
+                                                "/v1/stats")
+                d = json.loads(raw)
+                assert st == 200
+                assert d["tick"]["stats"]["prefill_launches"] >= 1
+                assert d["stats"]["requests"] >= 1 and d["stats"]["completed"] >= 1
+                assert d["ring"]["capacity"] == fe.ring.capacity
+                assert d["slo"]["objective"] == fe.slo_monitor.objective
+                st, _, raw = await wire.request(fe.host, fe.port, "GET",
+                                                "/metrics")
+                fams = promparse.parse(raw.decode())
+                assert "repro_gateway_requests_total" in fams
+                assert "repro_http_requests_total" in fams
+                st, hdrs, raw = await wire.request(fe.host, fe.port, "GET",
+                                                   "/debug/trace")
+                assert st == 200
+                assert hdrs.get("transfer-encoding") == "chunked"
+                trace = json.loads(raw.decode())
+                validate_chrome_trace(trace)
+                assert trace["traceEvents"]
+            finally:
+                await _shutdown(gw, fe)
+        asyncio.run(scenario())
+
+    def test_error_statuses(self, granite):
+        async def scenario():
+            gw, fe = await _boot(granite)
+            try:
+                cases = [
+                    ("GET", "/no/such/route", None, 404),
+                    ("POST", "/metrics", None, 405),
+                    ("GET", "/v1/generate", None, 405),
+                    ("POST", "/v1/generate", b"not json", 400),
+                    ("POST", "/v1/generate", {"prompt": "strings"}, 400),
+                    ("POST", "/v1/generate",
+                     {"prompt": [1, 2], "gen": {"bogus": 1}}, 400),
+                    ("POST", "/v1/generate", {"prompt": []}, 400),
+                ]
+                for method, path, body, expect in cases:
+                    st, _, raw = await wire.request(fe.host, fe.port,
+                                                    method, path, body)
+                    assert st == expect, (path, raw)
+                    assert "error" in json.loads(raw)
+            finally:
+                await _shutdown(gw, fe)
+        asyncio.run(scenario())
+
+
+# ---------------------------------------------------------------------------
+# overhead invariants with the HTTP plane attached
+# ---------------------------------------------------------------------------
+
+def _chunk_launches(pool):
+    from repro.cpm.program import count_pallas_calls
+    import jax.numpy as jnp
+    run = pool._build_chunk(pool.slots, pool.chunk, pool.n_banks,
+                            "pallas", True, pool.page_size,
+                            pool.pages_per_bank)
+    pt = np.full((pool.slots, pool.C), pool.total_pages, np.int32)
+    return count_pallas_calls(
+        run, pool.engine.params, pool.cur, pool.caches, pool.pos,
+        jnp.asarray(pool.live), jnp.zeros((pool.slots,), jnp.int32),
+        jnp.asarray(pool._temp), jnp.asarray(pool._topk),
+        jnp.asarray(pool._topp), [b.data for b in pool.banks],
+        [b.lens for b in pool.banks], jnp.asarray(pt), pool.tok_lens,
+        jax.random.PRNGKey(7))
+
+
+class TestInvariantsWithHttp:
+    def test_launch_count_unchanged_with_frontend_attached(self, granite):
+        """Mounting the wire front (ring sink + SLO monitor + recorder)
+        must not change what compiles: still 3 pallas launches per bank
+        per decode chunk, jaxpr-walked with the frontend live."""
+        async def scenario():
+            gw = Gateway(granite, slots=2, n_banks=1, chunk=2,
+                         page_size=8, pages_per_bank=8,
+                         bank_backend="pallas", bank_interpret=True,
+                         gen=GenConfig(max_new_tokens=4))
+            fe = await HttpFrontend(gw, port=0).start()
+            await gw.start()
+            try:
+                st, _, _ = await wire.request(
+                    fe.host, fe.port, "POST", "/v1/generate",
+                    {"prompt": [int(t) for t in _prompt(16, 5)],
+                     "max_new_tokens": 4, "stream": False})
+                assert st == 200
+                n = await asyncio.to_thread(_chunk_launches, gw.pool)
+                assert n == 3 * gw.pool.n_banks
+            finally:
+                await _shutdown(gw, fe)
+        asyncio.run(scenario())
+
+    def test_program_cache_keys_identical_with_and_without_http(
+            self, granite):
+        """The compiled-program cache must key identically whether the
+        workload arrives over the wire or in-process."""
+        def clear():
+            for k in list(granite._programs):
+                if k[0].startswith("pool"):
+                    del granite._programs[k]
+
+        def keys():
+            return {k for k in granite._programs if k[0].startswith("pool")}
+
+        prompt = _prompt(17, 6)
+        clear()
+        gw = Gateway(granite, slots=2, n_banks=1, chunk=2,
+                     gen=GenConfig(max_new_tokens=4))
+        gw.result(gw.submit(prompt, 4))
+        keys_plain = keys()
+
+        async def over_http():
+            gw2, fe = await _boot(granite, slots=2, chunk=2, budget=4)
+            try:
+                st, _, _ = await wire.request(
+                    fe.host, fe.port, "POST", "/v1/generate",
+                    {"prompt": [int(t) for t in prompt],
+                     "max_new_tokens": 4, "stream": False})
+                assert st == 200
+            finally:
+                await _shutdown(gw2, fe)
+
+        clear()
+        asyncio.run(over_http())
+        assert keys() == keys_plain and keys_plain
+
+    def test_no_device_sync_serving_over_http(self, granite, monkeypatch):
+        """Serving a request over the wire adds zero block_until_ready
+        calls: every handler reads host mirrors only."""
+        async def scenario():
+            gw, fe = await _boot(granite, slots=2, budget=4)
+            try:
+                # warm all compiles first so the counted run is steady-state
+                st, _, _ = await wire.request(
+                    fe.host, fe.port, "POST", "/v1/generate",
+                    {"prompt": [int(t) for t in _prompt(18, 5)],
+                     "max_new_tokens": 4, "stream": False})
+                assert st == 200
+                syncs = {"n": 0}
+                real = jax.block_until_ready
+
+                def counting(x):
+                    syncs["n"] += 1
+                    return real(x)
+
+                monkeypatch.setattr(jax, "block_until_ready", counting)
+                st, _, _ = await wire.request(
+                    fe.host, fe.port, "POST", "/v1/generate",
+                    {"prompt": [int(t) for t in _prompt(18, 5)],
+                     "max_new_tokens": 4, "stream": False})
+                monkeypatch.undo()
+                assert st == 200 and syncs["n"] == 0
+            finally:
+                await _shutdown(gw, fe)
+        asyncio.run(scenario())
+
+
+# ---------------------------------------------------------------------------
+# serve(http_port=) lifecycle
+# ---------------------------------------------------------------------------
+
+class TestServeMount:
+    def test_serve_mounts_and_unmounts_frontend(self, granite):
+        async def scenario():
+            gw = Gateway(granite, slots=2, n_banks=1, chunk=2,
+                         gen=GenConfig(max_new_tokens=4))
+            task = asyncio.ensure_future(gw.serve(http_port=0))
+            for _ in range(100):
+                if gw.http is not None and gw.http.port:
+                    break
+                await asyncio.sleep(0.01)
+            assert gw.http is not None
+            port = gw.http.port
+            st, _, raw = await wire.request("127.0.0.1", port, "GET",
+                                            "/healthz")
+            assert st == 200 and json.loads(raw)["ok"]
+            assert gw.slo_monitor is gw.http.slo_monitor  # auto-wired
+            gw._stopping = True
+            gw._ensure_wake().set()
+            await task
+            with pytest.raises(OSError):
+                await wire.request("127.0.0.1", port, "GET", "/healthz")
+            # ring detached: the global tracer has no lingering sink
+            assert gw.http.ring not in tracing.TRACER._sinks
+        asyncio.run(scenario())

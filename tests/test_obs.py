@@ -106,6 +106,36 @@ class TestMetrics:
         assert 't_lat_bucket{le="+Inf"} 1' in text
         assert "t_lat_count 1" in text
 
+    def test_prometheus_escaping_roundtrips_parser(self):
+        """Label values with backslashes, quotes and newlines must
+        survive exposition — validated by parsing the rendered text back
+        with the strict mini-parser, not by substring grep."""
+        from repro.obs import promparse
+        reg = metrics.Registry()
+        c = reg.register(metrics.Counter("t_esc", 'help with "quotes"\n',
+                                         ("path",)))
+        hostile = 'a\\b"c\nd'
+        c.inc(3, path=hostile)
+        text = reg.prometheus_text()
+        fams = promparse.parse(text)
+        assert fams["t_esc"].series() == {(("path", hostile),): 3.0}
+        assert fams["t_esc"].help.startswith("help with")
+
+    def test_prometheus_exposition_passes_strict_parser(self, granite):
+        """The whole live registry — after real serving traffic, with
+        histograms and derived summary families — must satisfy the
+        mini-parser's HELP/TYPE-ordering and histogram-consistency
+        checks (the same gate CI runs on a /metrics scrape)."""
+        from repro.obs import promparse
+        gw = Gateway(granite, slots=2, chunk=2)
+        gw.result(gw.submit(_prompt(60, 8), 4, deadline_steps=100))
+        fams = promparse.parse(metrics.REGISTRY.prometheus_text())
+        assert "repro_gateway_requests_total" in fams
+        hists = [f for f in fams.values() if f.type == "histogram"]
+        assert hists                         # consistency checks all ran
+        for f in hists:
+            assert f.series("_count")        # _sum/_count present
+
     def test_series_property_shim(self):
         fam = metrics.Counter("t_shim", "", ("pool",))
 

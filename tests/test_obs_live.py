@@ -1,0 +1,360 @@
+"""`repro.obs.live` / `slo` / `promparse` — the live observability plane.
+
+Contracts:
+
+  * **bounded ring** — over a 10k-span run the ring never exceeds its
+    capacity, counts every drop, and its chunked streaming export
+    concatenates to exactly the one-shot ``chrome_trace`` JSON (and
+    passes ``validate_chrome_trace``) — O(capacity) memory for a server
+    that stays up indefinitely;
+  * **quantiles** — histogram p50/p90/p99 interpolate within buckets,
+    clamp at the top finite edge, and surface as a Prometheus ``summary``
+    family the strict mini-parser accepts;
+  * **burn-rate alerting** — the multi-window rule fires on an injected
+    deadline-miss burst (fast AND slow both over threshold), honors
+    cooldown and min-events, and the flight-recorder dump it triggers
+    round-trips through the repo's own validators;
+  * **registry hygiene** — ``Registry.reset()`` zeroes values while
+    keeping live series references valid, and the autouse conftest
+    fixture pins cross-module isolation.
+"""
+
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import all_configs
+from repro.models import lm
+from repro.obs import export, live, metrics, promparse, slo, tracing
+from repro.serve import Engine, Gateway, GenConfig
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = all_configs()["granite-8b"].smoke()
+
+
+@pytest.fixture(scope="module")
+def granite():
+    params = lm.init_params(CFG, jax.random.PRNGKey(0))
+    return Engine(CFG, params, max_len=64)
+
+
+def _prompt(seed, s):
+    return np.asarray(jax.random.randint(jax.random.PRNGKey(seed), (s,), 0,
+                                         CFG.vocab_size), np.int32)
+
+
+# ---------------------------------------------------------------------------
+# the bounded ring + streaming export
+# ---------------------------------------------------------------------------
+
+class TestTraceRing:
+    def test_bounded_over_10k_spans_and_chunked_export_identity(self):
+        """The acceptance run: >=10k spans through a small ring — memory
+        stays at capacity, drops are counted, and the chunked export is
+        byte-identical to the one-shot render and still validates."""
+        t = tracing.Tracer()
+        ring = live.TraceRing(capacity=512).attach(t)
+        n = 10_000
+        for i in range(n):
+            with t.span("work", args={"i": i}):
+                pass
+            if i % 100 == 0:
+                t.instant("mark", vstep=i)
+        stats = ring.stats()
+        assert len(ring) == 512 and stats["len"] == 512
+        assert stats["total"] == n + n // 100
+        assert stats["dropped"] == stats["total"] - 512
+        streamed = "".join(export.iter_trace_chunks(ring))
+        assert streamed == json.dumps(
+            export.chrome_trace(ring), indent=1)
+        trace = json.loads(streamed)
+        export.validate_chrome_trace(trace)
+        # 512 data events + metadata records
+        data = [e for e in trace["traceEvents"] if e["ph"] in "XiC"]
+        assert len(data) == 512
+        ring.detach()
+        with t.span("after-detach"):
+            pass
+        assert ring.stats()["total"] == stats["total"]  # sink removed
+
+    def test_write_trace_stream_file(self, tmp_path):
+        t = tracing.Tracer()
+        ring = live.TraceRing(capacity=64).attach(t)
+        for i in range(100):
+            with t.span("s", args={"i": i}):
+                pass
+        path = tmp_path / "stream.json"
+        n = export.write_trace_stream(path, ring)
+        assert n == 64
+        export.validate_chrome_trace(json.loads(path.read_text()))
+
+    def test_attach_twice_raises_and_capacity_validates(self):
+        t = tracing.Tracer()
+        ring = live.TraceRing(capacity=4).attach(t)
+        with pytest.raises(RuntimeError, match="attached"):
+            ring.attach(t)
+        ring.detach()
+        ring.attach(t)                      # re-attach after detach is fine
+        ring.detach()
+        with pytest.raises(ValueError, match="capacity"):
+            live.TraceRing(capacity=0)
+
+    def test_last_n_returns_newest(self):
+        t = tracing.Tracer()
+        ring = live.TraceRing(capacity=8).attach(t)
+        for i in range(20):
+            t.instant("e", args={"i": i})
+        assert [e.args["i"] for e in ring.last(3)] == [17, 18, 19]
+        assert len(ring.last(100)) == 8
+        ring.detach()
+
+    def test_tracer_set_limit_bounds_global_buffer(self):
+        t = tracing.Tracer()
+        for i in range(100):
+            t.instant("e", args={"i": i})
+        t.set_limit(10)
+        assert len(t.spans()) == 10
+        assert t.spans()[-1].args["i"] == 99        # newest kept
+        t.set_limit(None)
+        for i in range(20):
+            t.instant("e2")
+        assert len(t.spans()) == 30                 # unbounded again
+
+
+# ---------------------------------------------------------------------------
+# histogram quantiles
+# ---------------------------------------------------------------------------
+
+class TestQuantiles:
+    def test_interpolation_and_top_edge_clamp(self):
+        h = metrics.Histogram("t_q_lat", "", (),
+                              buckets=(1.0, 2.0, 4.0, 8.0))
+        s = h.default
+        for v in [0.5] * 50 + [3.0] * 40 + [100.0] * 10:
+            s.observe(v)
+        # p50 inside (0,1]: rank 50 of 50 in-bucket observations
+        assert s.quantile(0.5) == pytest.approx(1.0)
+        # p90: rank 90 lands exactly at the (2,4] bucket's top
+        assert s.quantile(0.9) == pytest.approx(4.0)
+        # p99 is in the +Inf bucket: clamps to the top finite edge
+        assert s.quantile(0.99) == pytest.approx(8.0)
+        assert s.quantile(0.0) == pytest.approx(0.0)
+        with pytest.raises(ValueError):
+            s.quantile(1.5)
+
+    def test_empty_series_has_no_quantiles(self):
+        h = metrics.Histogram("t_q_empty", "", ())
+        assert h.default.quantile(0.5) is None
+        assert h.series()[""]["quantiles"] == {"p50": None, "p90": None,
+                                               "p99": None}
+
+    def test_summary_family_in_exposition_parses(self):
+        reg = metrics.Registry()
+        h = reg.register(metrics.Histogram("t_q_sum", "latency", ("k",),
+                                           buckets=(1.0, 10.0)))
+        for v in (0.5, 2.0, 20.0):
+            h.labels(k="a").observe(v)
+        fams = promparse.parse(reg.prometheus_text())
+        assert fams["t_q_sum"].type == "histogram"
+        summ = fams["t_q_sum_summary"]
+        assert summ.type == "summary"
+        qs = {lbl: val for lbl, val in summ.series().items()}
+        assert len(qs) == 3                  # p50/p90/p99 for k="a"
+        assert summ.series("_count")[(("k", "a"),)] == 3
+
+
+# ---------------------------------------------------------------------------
+# strict exposition parsing (the CI gate's validator)
+# ---------------------------------------------------------------------------
+
+class TestPromParse:
+    def test_rejects_type_before_help(self):
+        with pytest.raises(ValueError, match="without preceding HELP"):
+            promparse.parse("# TYPE x counter\nx 1\n")
+
+    def test_rejects_interleaved_families(self):
+        text = ("# HELP a a\n# TYPE a counter\na 1\n"
+                "# HELP b b\n# TYPE b counter\nb 1\na 2\n")
+        with pytest.raises(ValueError, match="block ended"):
+            promparse.parse(text)
+
+    def test_rejects_undeclared_sample(self):
+        with pytest.raises(ValueError, match="preceding"):
+            promparse.parse("orphan 1\n")
+
+    def test_rejects_noncumulative_histogram(self):
+        text = ("# HELP h h\n# TYPE h histogram\n"
+                'h_bucket{le="1"} 5\nh_bucket{le="+Inf"} 3\n'
+                "h_sum 1\nh_count 3\n")
+        with pytest.raises(ValueError, match="cumulative"):
+            promparse.parse(text)
+
+    def test_rejects_inf_bucket_count_mismatch(self):
+        text = ("# HELP h h\n# TYPE h histogram\n"
+                'h_bucket{le="1"} 1\nh_bucket{le="+Inf"} 3\n'
+                "h_sum 1\nh_count 4\n")
+        with pytest.raises(ValueError, match="_count"):
+            promparse.parse(text)
+
+    def test_unescapes_label_values(self):
+        text = ('# HELP c c\n# TYPE c counter\n'
+                'c{p="a\\\\b\\"q\\nr"} 1\n')
+        fam = promparse.parse(text)["c"]
+        assert fam.series() == {(("p", 'a\\b"q\nr'),): 1.0}
+
+
+# ---------------------------------------------------------------------------
+# burn-rate monitor + flight recorder
+# ---------------------------------------------------------------------------
+
+class TestSloMonitor:
+    def _monitor(self, **kw):
+        kw.setdefault("objective", 0.9)
+        kw.setdefault("fast", slo.BurnWindow(steps=16, threshold=5.0))
+        kw.setdefault("slow", slo.BurnWindow(steps=64, threshold=2.0))
+        kw.setdefault("name", f"t{len(metrics.snapshot())}")
+        return slo.SloMonitor(**kw)
+
+    def test_all_met_never_alerts(self):
+        m = self._monitor()
+        for step in range(0, 200, 2):
+            assert m.record(True, step) is None
+        assert m.alerts == [] and m.attainment() == 1.0
+
+    def test_miss_burst_fires_multi_window_alert(self):
+        """The acceptance scenario: healthy traffic, then an injected
+        deadline-miss burst — the fast window catches it, the slow
+        window confirms it, one alert fires."""
+        m = self._monitor()
+        step = 0
+        for _ in range(40):                  # healthy history
+            m.record(True, step)
+            step += 1
+        alerts = []
+        for _ in range(12):                  # the burst: all misses
+            a = m.record(False, step)
+            if a:
+                alerts.append(a)
+            step += 1
+        assert len(alerts) == 1              # cooldown holds it to one
+        a = alerts[0]
+        assert a["fast"]["burn"] > 5.0 and a["slow"]["burn"] > 2.0
+        assert m.state()["alerts"] == 1
+        assert m.state()["attainment_slow"] < 1.0
+
+    def test_min_events_guard(self):
+        m = self._monitor(min_events=8)
+        for i in range(4):                   # 4 misses < min_events
+            assert m.record(False, i) is None
+        assert m.alerts == []
+
+    def test_burn_rate_math(self):
+        m = self._monitor()                  # budget = 0.1
+        for i in range(8):
+            m.record(i % 2 == 0, i)         # 50% miss rate
+        assert m.burn_rate(7, m.fast) == pytest.approx(5.0)
+
+    def test_cooldown_then_refire(self):
+        m = self._monitor(cooldown_steps=10)
+        step = 0
+        fired = 0
+        for _ in range(40):
+            if m.record(False, step):
+                fired += 1
+            step += 1
+        # refires once per cooldown window while the burn persists
+        assert fired >= 2
+        gap = m.alerts[1]["step"] - m.alerts[0]["step"]
+        assert gap >= 10
+
+    def test_gateway_feeds_monitor(self, granite):
+        m = self._monitor(fast=slo.BurnWindow(steps=8, threshold=1.0),
+                          slow=slo.BurnWindow(steps=32, threshold=0.5),
+                          min_events=1)
+        gw = Gateway(granite, slots=2, chunk=2,
+                     gen=GenConfig(max_new_tokens=4), slo_monitor=m)
+        gw.result(gw.submit(_prompt(30, 6), 4, deadline_steps=100))  # met
+        gw.result(gw.submit(_prompt(31, 6), 4, deadline_steps=0))    # miss
+        assert m.recorded == 2
+        assert m.alerts                      # the miss trips the tiny bars
+
+
+class TestFlightRecorder:
+    def test_dump_roundtrips_validators(self, granite, tmp_path):
+        """A dump must be post-mortem-grade: its trace passes
+        validate_chrome_trace, its exposition passes promparse, and its
+        allocator state is consistent with the pool."""
+        t = tracing.Tracer()
+        ring = live.TraceRing(capacity=32).attach(t)
+        for i in range(50):
+            with t.span("tick", args={"i": i}):
+                pass
+        gw = Gateway(granite, slots=2, chunk=2,
+                     gen=GenConfig(max_new_tokens=4))
+        gw.submit(_prompt(40, 6), 4)
+        gw.tick()                            # leaves a live session
+        rec = slo.FlightRecorder(str(tmp_path), ring=ring, pool=gw.pool,
+                                 last_n=16)
+        path = rec.dump("test burst", extra={"k": 1})
+        assert path and os.path.exists(path)
+        assert not [f for f in os.listdir(tmp_path) if f.endswith(".tmp")]
+        d = json.loads(open(path).read())
+        assert d["reason"] == "test burst" and d["extra"] == {"k": 1}
+        export.validate_chrome_trace(d["trace"])
+        assert len([e for e in d["trace"]["traceEvents"]
+                    if e["ph"] in "XiC"]) == 16
+        promparse.parse(d["metrics_prom"])
+        alloc = d["allocator"]
+        assert alloc["n_slots"] == 2
+        assert alloc["free_slots"] == alloc["slot_state"].count(0)
+        assert alloc["free_pages"] == alloc["page_state"].count(0)
+        used_pages = sum(len(v) for v in alloc["page_lists"].values())
+        assert used_pages == alloc["n_pages"] - alloc["free_pages"]
+        ring.detach()
+
+    def test_max_dumps_cap(self, tmp_path):
+        rec = slo.FlightRecorder(str(tmp_path), max_dumps=2)
+        assert rec.dump("a") and rec.dump("b")
+        assert rec.dump("c") is None
+        assert len(os.listdir(tmp_path)) == 2
+
+
+# ---------------------------------------------------------------------------
+# registry hygiene
+# ---------------------------------------------------------------------------
+
+class TestRegistryReset:
+    def test_reset_zeroes_but_keeps_series_references(self):
+        """The regression the conftest fixture depends on: reset() must
+        zero values in place — live series handles held by serving
+        objects keep working, no stale-object orphaning."""
+        reg = metrics.Registry()
+        c = reg.register(metrics.Counter("t_r_c", "", ("k",)))
+        h = reg.register(metrics.Histogram("t_r_h", "", ()))
+        series = c.labels(k="x")
+        series.inc(5)
+        h.default.observe(3.0)
+        reg.reset()
+        assert series.value == 0
+        assert h.default.count == 0 and h.default.sum == 0.0
+        series.inc()                         # the SAME handle still counts
+        assert reg.snapshot()["t_r_c"]["series"] == {'{k="x"}': 1}
+
+    def test_global_reset_keeps_gateway_series_valid(self, granite):
+        gw = Gateway(granite, slots=2, chunk=2,
+                     gen=GenConfig(max_new_tokens=4))
+        gw.result(gw.submit(_prompt(50, 6), 4, deadline_steps=100))
+        assert gw.slo_met_count == 1
+        metrics.REGISTRY.reset()
+        assert gw.slo_met_count == 0
+        gw.result(gw.submit(_prompt(51, 6), 4, deadline_steps=100))
+        assert gw.slo_met_count == 1         # series_property still wired
+
+    def test_module_isolation_fixture_is_active(self, request):
+        """Pin the conftest autouse fixture that prevents cross-module
+        registry/tracer leakage — removing it breaks this test."""
+        assert "_obs_module_isolation" in request.fixturenames
